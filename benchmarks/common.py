@@ -1,0 +1,35 @@
+"""Shared benchmark utilities."""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import jax
+
+ARTIFACTS = Path("artifacts/bench")
+
+
+def timed(fn, *args, warmup: int = 1, iters: int = 3) -> tuple[float, object]:
+    """(seconds per call, last result) with block_until_ready."""
+    out = None
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters, out
+
+
+def emit(name: str, us_per_call: float | None, derived: str) -> None:
+    us = f"{us_per_call:.1f}" if us_per_call is not None else "-"
+    print(f"{name},{us},{derived}", flush=True)
+
+
+def save_json(name: str, payload: dict) -> Path:
+    ARTIFACTS.mkdir(parents=True, exist_ok=True)
+    p = ARTIFACTS / f"{name}.json"
+    p.write_text(json.dumps(payload, indent=2, default=float))
+    return p

@@ -1,0 +1,36 @@
+"""Paper Fig 2: normalized bandwidth (left) and backend energy improvement
+(right) vs T_INTG for both datasets. Uses the same sweep machinery as
+Table 1 but reports the bandwidth/energy columns (they come from the same
+records; a separate artifact keeps one benchmark per paper figure)."""
+from __future__ import annotations
+
+from benchmarks.common import emit, save_json
+from benchmarks.table1_acc_traintime import GRID, _data, _model
+
+from repro.core import codesign
+from repro.core.codesign import SweepConfig
+
+
+def run(fast: bool = False) -> dict:
+    sweep = SweepConfig(
+        t_intg_grid_ms=GRID if not fast else (10.0, 1000.0),
+        batch_size=4, pretrain_steps=12 if not fast else 3,
+        finetune_steps=4 if not fast else 2,
+        eval_batches=8 if not fast else 2, lr=2e-3, seed=1)
+    out = {}
+    for kind in ("gesture", "nmnist"):
+        hw = 24 if kind == "gesture" else 20
+        recs = codesign.run_sweep(_data(kind, hw), _model(
+            hw, 11 if kind == "gesture" else 10), sweep,
+            log=lambda *_: None)
+        out[kind] = recs
+        for r in recs:
+            emit(f"fig2/{kind}/t{int(r['t_intg_ms'])}ms", None,
+                 f"bw_norm={r['bandwidth_norm']:.3f};"
+                 f"energy_impr={r['energy_improvement']:.2f}x")
+    save_json("fig2", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,118 @@
+"""Fill EXPERIMENTS.md's <!-- DRYRUN_TABLE --> and <!-- ROOFLINE_TABLE -->
+markers from artifacts/dryrun/*.json.
+
+    PYTHONPATH=src python -m benchmarks.fill_experiments
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+DRYRUN = Path("artifacts/dryrun")
+EXP = Path("EXPERIMENTS.md")
+
+_LEVER = {
+    "compute": "more per-chip work (larger microbatch) / fuse small ops",
+    "memory": "fuse chains (TPU backend), bf16 activations, Pallas kernels",
+    "collective": "increase DP fraction, overlap, compress cross-pod legs",
+}
+
+
+def recs():
+    out = []
+    for p in sorted(DRYRUN.glob("*.json")):
+        r = json.loads(p.read_text())
+        if "shape" not in r:
+            continue   # non-standard modes (e.g. the PP dry-run record)
+        out.append(r)
+    return out
+
+
+def dryrun_table(rows):
+    lines = ["| arch | shape | mesh | status | compile_s | per-dev args (GiB) | coll kinds |",
+             "|---|---|---|---|---|---|---|"]
+    for r in rows:
+        mesh = f"{r.get('pods', '?')}pod"
+        if r["status"] != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | {mesh} | "
+                         f"{r['status']}{'' if r['status'] != 'skipped' else ' (per spec)'} | - | - | - |")
+            continue
+        mem = r["memory"].get(
+            "per_device_args_bytes",
+            r["memory"].get("per_device_total", 0)) / 2**30
+        kinds = ",".join(f"{k}:{int(v)}" for k, v in sorted(
+            r["collectives"]["count_by_kind"].items()))
+        lines.append(f"| {r['arch']} | {r['shape']} | {mesh} | ok | "
+                     f"{r['compile_s']} | {mem:.2f} | {kinds} |")
+    return "\n".join(lines)
+
+
+def roofline_table(rows):
+    lines = ["| arch | shape | mesh | compute_s | memory_s | coll_s | dominant "
+             "| bound_s | model/HLO FLOPs | lever |",
+             "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["status"] != "ok":
+            continue
+        t = r["roofline"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r.get('pods','?')}pod "
+            f"| {t['compute_s']:.4g} | {t['memory_s']:.4g} "
+            f"| {t['collective_s']:.4g} | **{t['dominant']}** "
+            f"| {t['roofline_bound_s']:.4g} "
+            f"| {r.get('useful_flops_ratio', 0.0):.3f} "
+            f"| {_LEVER[t['dominant']]} |")
+    return "\n".join(lines)
+
+
+def fleet_table():
+    base_dir = Path("artifacts/dryrun_baseline_v0")
+    if not base_dir.exists():
+        return "(baseline artifacts not present)"
+    base = {p.stem: json.loads(p.read_text())
+            for p in base_dir.glob("*__1pod.json")}
+    cur = {p.stem: json.loads(p.read_text())
+           for p in DRYRUN.glob("*__1pod.json")}
+    lines = ["| cell | baseline bound_s | final bound_s | speedup |",
+             "|---|---|---|---|"]
+    t0 = t1 = 0.0
+    for k in sorted(cur):
+        a, b = base.get(k), cur[k]
+        if not a or a["status"] != "ok" or b["status"] != "ok":
+            continue
+        b0 = a["roofline"]["roofline_bound_s"]
+        b1 = b["roofline"]["roofline_bound_s"]
+        t0 += b0
+        t1 += b1
+        lines.append(f"| {k.replace('__1pod','').replace('__',' × ')} "
+                     f"| {b0:.3f} | {b1:.3f} | {b0 / max(b1, 1e-12):.1f}× |")
+    lines.append(f"| **TOTAL** | **{t0:.1f}** | **{t1:.1f}** "
+                 f"| **{t0 / max(t1, 1e-12):.1f}×** |")
+    return "\n".join(lines)
+
+
+def main():
+    rows = recs()
+    ok = [r for r in rows if r["status"] == "ok"]
+    skipped = [r for r in rows if r["status"] == "skipped"]
+    err = [r for r in rows if r["status"] == "error"]
+    print(f"{len(ok)} ok / {len(skipped)} skipped / {len(err)} error")
+
+    text = EXP.read_text()
+    dr = (f"Summary: **{len(ok)} ok, {len(skipped)} skipped (per spec), "
+          f"{len(err)} errors.**\n\n" + dryrun_table(rows))
+    rf = roofline_table([r for r in rows if r.get("pods") == 1])
+    text = text.replace("<!-- DRYRUN_TABLE -->",
+                        "<!-- DRYRUN_TABLE -->\n\n" + dr, 1)
+    text = text.replace("<!-- ROOFLINE_TABLE -->",
+                        "<!-- ROOFLINE_TABLE -->\n\n" + rf +
+                        "\n\n(1-pod mesh per spec; 2-pod records in "
+                        "artifacts/dryrun/*2pod.json.)", 1)
+    text = text.replace("<!-- FLEET_TABLE -->",
+                        "<!-- FLEET_TABLE -->\n\n" + fleet_table(), 1)
+    EXP.write_text(text)
+    print("EXPERIMENTS.md updated")
+
+
+if __name__ == "__main__":
+    main()

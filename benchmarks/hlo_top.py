@@ -1,0 +1,117 @@
+"""Rank HLO computations/instructions by roofline contribution — the
+'profiler' of the dry-run world (§Perf: the profile is lowered.as_text()).
+
+    PYTHONPATH=src python -m benchmarks.hlo_top artifacts/dryrun/X.hlo [N]
+
+Uses the same loop-aware cost model as the roofline report: per-computation
+direct bytes/flops × the product of enclosing while trip counts.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from collections import defaultdict
+
+from repro.roofline.hlo import (_CALLS_RE, _COLLECTIVE_KINDS, _TO_APPLY_RE,
+                                _TRIP_RE, _WHILE_RE, HloCostModel, _bytes_of)
+
+
+class Profiler(HloCostModel):
+    def scales(self) -> dict[str, float]:
+        """computation → how many times it executes per step."""
+        entry = None
+        for name in self.comps:
+            if entry is None:
+                entry = name
+        # find real ENTRY: the one nobody calls
+        called = set()
+        for comp, instrs in self.comps.items():
+            for ins in instrs:
+                for m in re.finditer(r"(?:calls|to_apply|condition|body)="
+                                     r"%?([\w\.\-]+)", ins.rest + ins.line):
+                    called.add(m.group(1))
+        roots = [c for c in self.comps if c not in called]
+        scale: dict[str, float] = defaultdict(float)
+        for r in roots:
+            scale[r] = 1.0
+
+        # propagate in call order (iterate to fixpoint; DAG so bounded)
+        for _ in range(60):
+            changed = False
+            for comp, instrs in self.comps.items():
+                s = scale.get(comp, 0.0)
+                if s == 0.0:
+                    continue
+                for ins in instrs:
+                    mult = s
+                    if ins.opcode == "while":
+                        tm = _TRIP_RE.search(ins.line)
+                        trips = int(tm.group(1)) if tm else 1
+                        wm = _WHILE_RE.search(ins.rest)
+                        if wm:
+                            for target in wm.groups():
+                                if scale.get(target, 0.0) < mult * trips:
+                                    scale[target] = mult * trips
+                                    changed = True
+                    else:
+                        for m in re.finditer(r"(?:calls|to_apply)="
+                                             r"%?([\w\.\-]+)", ins.rest):
+                            if scale.get(m.group(1), 0.0) < mult:
+                                scale[m.group(1)] = mult
+                                changed = True
+            if not changed:
+                break
+        return dict(scale)
+
+    def direct_rows(self):
+        """(bytes, flops, comp, instr-label) for non-fused boundary instrs."""
+        scale = self.scales()
+        rows = []
+        colls = []
+        for comp, instrs in self.comps.items():
+            s = scale.get(comp, 0.0)
+            if s == 0.0 or comp in self._fused:
+                continue
+            table = self._table_for(comp)
+            for ins in instrs:
+                if ins.opcode in ("while", "parameter", "constant",
+                                  "get-tuple-element", "tuple", "bitcast"):
+                    continue
+                b = (_bytes_of(ins.type_str) +
+                     self._operand_bytes(ins, table)) * s
+                if b > 0:
+                    rows.append((b, comp, s,
+                                 f"{ins.opcode:16} {ins.type_str[:58]}"))
+                if any(ins.opcode.startswith(k) for k in _COLLECTIVE_KINDS) \
+                        and not ins.opcode.endswith("-done"):
+                    nb = self._operand_bytes(ins, table) or _bytes_of(
+                        ins.type_str)
+                    colls.append((nb * s, comp, s,
+                                  f"{ins.opcode:18} {ins.type_str[:52]}"))
+        return rows, colls
+
+
+def main() -> int:
+    path = sys.argv[1]
+    topn = int(sys.argv[2]) if len(sys.argv) > 2 else 25
+    prof = Profiler(open(path).read())
+    rows, colls = prof.direct_rows()
+    rows.sort(key=lambda r: -r[0])
+    total = sum(r[0] for r in rows)
+    print(f"== {path} ==")
+    print(f"total boundary bytes (x trips): {total:.3e}")
+    for b, comp, s, label in rows[:topn]:
+        print(f"  {b:11.3e} ({100 * b / total:5.1f}%) x{s:<7.0f} {label}  "
+              f"[{comp[:30]}]")
+    if colls:
+        colls.sort(key=lambda r: -r[0])
+        ctot = sum(r[0] for r in colls)
+        print(f"\n== collectives: {ctot:.3e} B ==")
+        for b, comp, s, label in colls[:15]:
+            print(f"  {b:11.3e} ({100 * b / ctot:5.1f}%) x{s:<7.0f} {label}  "
+                  f"[{comp[:30]}]")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

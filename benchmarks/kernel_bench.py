@@ -1,0 +1,113 @@
+"""Kernel µbenchmarks: Pallas (interpret) vs the pure-XLA paths.
+
+On this CPU container interpret-mode timings measure Python emulation, NOT
+TPU performance — the meaningful outputs are (i) allclose vs oracle at
+benchmark scale and (ii) the XLA-path timing (the production fallback).
+TPU performance claims live in EXPERIMENTS.md §Roofline from the compiled
+dry-run instead.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, save_json, timed
+
+
+def bench_p2m(fast: bool = False) -> dict:
+    from repro.core.p2m_layer import P2MConfig, p2m_forward_scan, p2m_init
+    from repro.kernels.p2m_conv import ops
+
+    hw = 24 if fast else 32
+    cfg = P2MConfig(out_channels=8, n_sub=4)
+    params = p2m_init(jax.random.PRNGKey(0), cfg)
+    ev = jax.random.poisson(jax.random.PRNGKey(1), 0.3,
+                            (2, 4, 4, hw, hw, 2)).astype(jnp.float32)
+    t_xla, (s_ref, v_ref) = timed(
+        jax.jit(lambda p, e: p2m_forward_scan(p, e, cfg)), params, ev)
+    t_pal, (s_k, v_k) = timed(
+        lambda p, e: ops.p2m_conv(p, e, cfg), params, ev)
+    err = float(jnp.max(jnp.abs(v_k - v_ref)))
+    emit("kernel/p2m_conv/xla_scan", t_xla * 1e6, f"hw={hw}")
+    emit("kernel/p2m_conv/pallas_interpret", t_pal * 1e6,
+         f"max_err_vs_oracle={err:.2e}")
+    assert err < 1e-4
+    return {"xla_s": t_xla, "pallas_interpret_s": t_pal, "max_err": err}
+
+
+def bench_lif(fast: bool = False) -> dict:
+    from repro.kernels.lif.lif import lif_pallas
+    from repro.kernels.lif.ref import lif_ref
+
+    T, N = (32, 4096) if fast else (64, 16384)
+    x = jax.random.normal(jax.random.PRNGKey(0), (T, N))
+    t_xla, ref = timed(jax.jit(lif_ref), x)
+    t_pal, out = timed(lambda x: lif_pallas(x), x)
+    err = float(jnp.max(jnp.abs(out - ref)))
+    emit("kernel/lif/xla_scan", t_xla * 1e6, f"T={T},N={N}")
+    emit("kernel/lif/pallas_interpret", t_pal * 1e6,
+         f"max_err_vs_oracle={err:.2e}")
+    assert err == 0.0
+    return {"xla_s": t_xla, "pallas_interpret_s": t_pal, "max_err": err}
+
+
+def bench_ssd(fast: bool = False) -> dict:
+    from repro.kernels.ssd.ref import ssd_ref
+    from repro.kernels.ssd.ssd import ssd_pallas
+    from repro.nn.ssm import ssd_chunked
+
+    b, s, h, p, g, n = (1, 256, 4, 32, 1, 16) if fast else (2, 512, 8, 64, 1, 32)
+    k = jax.random.PRNGKey(0)
+    ks = jax.random.split(k, 5)
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    B = jax.random.normal(ks[3], (b, s, g, n))
+    C = jax.random.normal(ks[4], (b, s, g, n))
+
+    t_chunk, (y_c, _) = timed(
+        jax.jit(lambda *a: ssd_chunked(*a, chunk=128)), x, dt, A, B, C)
+    t_pal, (y_k, _) = timed(
+        lambda *a: ssd_pallas(*a, chunk=128), x, dt, A, B, C)
+    y_r, _ = ssd_ref(x, dt, A, B, C)
+    err = float(jnp.max(jnp.abs(y_k - y_r)))
+    rel = err / float(jnp.max(jnp.abs(y_r)))
+    emit("kernel/ssd/xla_chunked", t_chunk * 1e6, f"s={s},h={h},p={p}")
+    emit("kernel/ssd/pallas_interpret", t_pal * 1e6,
+         f"rel_err_vs_oracle={rel:.2e}")
+    assert rel < 1e-3
+    return {"xla_s": t_chunk, "pallas_interpret_s": t_pal, "rel_err": rel}
+
+
+def bench_flash(fast: bool = False) -> dict:
+    from repro.kernels.flash_attention.flash_attention import (
+        flash_attention_pallas)
+    from repro.kernels.flash_attention.ref import attention_ref
+
+    BH, S, d = (4, 256, 64) if fast else (8, 512, 64)
+    k = jax.random.PRNGKey(0)
+    q = jax.random.normal(k, (BH, S, d))
+    kk = jax.random.normal(jax.random.fold_in(k, 1), (BH, S, d))
+    v = jax.random.normal(jax.random.fold_in(k, 2), (BH, S, d))
+    t_xla, ref = timed(jax.jit(lambda *a: attention_ref(*a, causal=True)),
+                       q, kk, v)
+    t_pal, out = timed(
+        lambda *a: flash_attention_pallas(*a, causal=True), q, kk, v)
+    err = float(jnp.max(jnp.abs(out - ref)))
+    emit("kernel/flash/xla_full", t_xla * 1e6, f"S={S},d={d}")
+    emit("kernel/flash/pallas_interpret", t_pal * 1e6,
+         f"max_err_vs_oracle={err:.2e}")
+    assert err < 5e-3
+    return {"xla_s": t_xla, "pallas_interpret_s": t_pal, "max_err": err}
+
+
+def run(fast: bool = False) -> dict:
+    out = {"p2m": bench_p2m(fast), "lif": bench_lif(fast),
+           "ssd": bench_ssd(fast), "flash": bench_flash(fast)}
+    save_json("kernels", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

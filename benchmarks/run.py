@@ -1,0 +1,55 @@
+"""Benchmark orchestrator — one benchmark per paper table/figure + kernel
+µbenches + the roofline report.
+
+    PYTHONPATH=src python -m benchmarks.run          # full
+    PYTHONPATH=src python -m benchmarks.run --fast   # CI-scale
+
+Emits ``name,us_per_call,derived`` CSV lines; JSON artifacts land in
+artifacts/bench/.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="reduced grids/steps (CI)")
+    ap.add_argument("--only", type=str, default=None,
+                    help="run a single bench: table1|fig2|fig4|kernels|roofline")
+    args = ap.parse_args()
+
+    from benchmarks import (fig2_bandwidth_energy, fig4_leakage, kernel_bench,
+                            roofline_report, table1_acc_traintime)
+
+    benches = {
+        "table1": table1_acc_traintime.run,
+        "fig2": fig2_bandwidth_energy.run,
+        "fig4": fig4_leakage.run,
+        "kernels": kernel_bench.run,
+        "roofline": roofline_report.run,
+    }
+    if args.only:
+        benches = {args.only: benches[args.only]}
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in benches.items():
+        t0 = time.perf_counter()
+        try:
+            fn(fast=args.fast)
+            print(f"bench/{name},{(time.perf_counter() - t0) * 1e6:.0f},ok",
+                  flush=True)
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            traceback.print_exc()
+            print(f"bench/{name},-,FAILED:{type(e).__name__}", flush=True)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

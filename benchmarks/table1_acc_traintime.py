@@ -1,0 +1,64 @@
+"""Paper Table 1: accuracy + normalized training time vs T_INTG, for the
+DVS128-Gesture-like and NMNIST-like synthetic streams.
+
+Reduced scale (CPU, synthetic data): the deliverable is the TREND —
+accuracy non-decreasing and training time per step decreasing as T_INTG
+grows — not the paper's absolute percentages (DESIGN.md §1).
+"""
+from __future__ import annotations
+
+from dataclasses import replace
+
+from repro.core import codesign
+from repro.core.codesign import P2MModelConfig, SweepConfig
+from repro.core.leakage import CircuitConfig, LeakageConfig
+from repro.core.p2m_layer import P2MConfig
+from repro.core.snn import SpikingCNNConfig
+from repro.data import events as ev_mod
+
+from benchmarks.common import emit, save_json
+
+GRID = (1.0, 10.0, 100.0, 1000.0)     # the paper's exact grid
+
+
+def _model(hw: int, n_classes: int) -> P2MModelConfig:
+    return P2MModelConfig(
+        p2m=P2MConfig(out_channels=8, n_sub=2, t_intg_ms=10.0,
+                      leak=LeakageConfig(circuit=CircuitConfig.NULLIFIED)),
+        backbone=SpikingCNNConfig(channels=(8, 16, 16, 16), input_hw=(hw, hw),
+                                  fc_hidden=64, n_classes=n_classes,
+                                  first_layer_external=True),
+        coarse_window_ms=1000.0)
+
+
+def _data(kind: str, hw: int):
+    if kind == "gesture":
+        return replace(ev_mod.dvs_gesture_like(hw), duration_ms=2000.0)
+    return replace(ev_mod.nmnist_like(hw), duration_ms=2000.0)
+
+
+def run(fast: bool = False) -> dict:
+    sweep = SweepConfig(
+        t_intg_grid_ms=GRID if not fast else (10.0, 1000.0),
+        batch_size=4,
+        pretrain_steps=30 if not fast else 4,
+        finetune_steps=8 if not fast else 2,
+        eval_batches=6 if not fast else 2,
+        lr=2e-3)
+    out = {}
+    for kind in ("gesture", "nmnist"):
+        hw = 24 if kind == "gesture" else 20
+        recs = codesign.run_sweep(_data(kind, hw), _model(
+            hw, 11 if kind == "gesture" else 10), sweep,
+            log=lambda *_: None)
+        out[kind] = recs
+        for r in recs:
+            emit(f"table1/{kind}/t{int(r['t_intg_ms'])}ms",
+                 r["train_time_per_step_s"] * 1e6,
+                 f"acc={r['accuracy']:.3f};train_norm={r['train_time_norm']:.2f}")
+    save_json("table1", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,22 @@
+"""Serve a small LM with batched requests through the slot server
+(continuous batching): admits requests, prefills into free KV slots,
+decodes the whole batch per step.
+
+    PYTHONPATH=src python examples/serve_lm_requests.py --requests 8
+"""
+import subprocess
+import sys
+
+
+def main():
+    # launch/serve.py is the real driver; this example pins a reproducible
+    # smoke configuration of it.
+    args = [sys.executable, "-m", "repro.launch.serve",
+            "--arch", "internlm2-1.8b", "--smoke",
+            "--requests", "8", "--batch", "4",
+            "--prompt-len", "32", "--gen", "16"] + sys.argv[1:]
+    raise SystemExit(subprocess.call(args))
+
+
+if __name__ == "__main__":
+    main()

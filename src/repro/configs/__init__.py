@@ -1,0 +1,33 @@
+"""Architecture registry: ``get_config("<arch-id>")`` → LMConfig.
+
+Arch ids use the assignment's dashes; module files use underscores.
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import (  # noqa: F401
+    SHAPES, LMConfig, ShapeConfig, shape_applicable, smoke_variant,
+)
+
+ARCHS: dict[str, str] = {
+    "phi4-mini-3.8b": "phi4_mini_3_8b",
+    "gemma-7b": "gemma_7b",
+    "qwen3-32b": "qwen3_32b",
+    "internlm2-1.8b": "internlm2_1_8b",
+    "mamba2-780m": "mamba2_780m",
+    "zamba2-7b": "zamba2_7b",
+    "granite-moe-1b-a400m": "granite_moe_1b_a400m",
+    "grok-1-314b": "grok_1_314b",
+    "llama-3.2-vision-90b": "llama_3_2_vision_90b",
+    "seamless-m4t-large-v2": "seamless_m4t_large_v2",
+}
+
+
+def get_config(arch: str) -> LMConfig:
+    mod = importlib.import_module(f"repro.configs.{ARCHS[arch]}")
+    return mod.CONFIG
+
+
+def list_archs() -> list[str]:
+    return list(ARCHS)

@@ -1,0 +1,7 @@
+"""The paper's contribution: P²M in-pixel analog first layer for neuromorphic
+vision sensors, its circuit-level leakage models, and the hardware-algorithm
+co-design sweep."""
+from repro.core.analog import AnalogConfig  # noqa: F401
+from repro.core.leakage import CircuitConfig, LeakageConfig  # noqa: F401
+from repro.core.p2m_layer import P2MConfig, p2m_apply, p2m_init  # noqa: F401
+from repro.core.snn import LIFConfig, SpikingCNNConfig  # noqa: F401

@@ -1,0 +1,106 @@
+"""Behavioral model of the in-pixel analog MAC unit (paper §2, Fig 1).
+
+The paper models its first conv layer with "a curve-fitting function that
+accounts for non-linearity, non-ideality, and process variations based on the
+spice simulation results" (GF22FDX). We reproduce that modeling strategy with a
+behavioral stand-in, since no PDK is available offline:
+
+  * weights map to transistor geometries with finite granularity → signed
+    uniform quantization to ``weight_levels`` levels (W/L can only be drawn at
+    discrete sizes);
+  * the charge delivered per input event is a *non-linear* function of the
+    present capacitor voltage (transistor drain current depends on V_DS): as
+    V_C approaches the rail the step compresses.  We use the paper's own
+    device-free abstraction — a cubic curve fit ``f(x) = c1*x + c3*x**3``
+    applied to the ideal weighted sum, plus a rail clamp;
+  * process variation perturbs the fitted coefficients per compute unit
+    (per output filter): multiplicative gain sigma on c1 and additive offset.
+
+Everything is differentiable so the network can be trained *through* the
+hardware model, exactly as the P²M-constrained algorithmic framework does.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AnalogConfig:
+    """Behavioral parameters of the analog MAC compute unit."""
+    vdd: float = 0.8                 # rail voltage (V), 22FDX-ish
+    v_precharge: float = 0.4         # capacitor precharge = VDD/2 (mid-rail)
+    dv_unit: float = 0.010           # ideal voltage step for |w| = 1 and 1 event (V)
+    weight_levels: int = 16          # 4-bit transistor geometry granularity
+    w_clip: float = 1.0              # weights clipped to [-w_clip, w_clip]
+    # cubic curve-fit coefficients (paper fits these to SPICE; we fix
+    # plausible values that compress by ~8% at full swing)
+    c1: float = 0.96
+    c3: float = -0.35
+    # process variation (sigma of per-filter perturbations)
+    pv_gain_sigma: float = 0.02
+    pv_offset_sigma_mv: float = 1.5
+    enable_nonlinearity: bool = True
+    enable_process_variation: bool = True
+
+
+def quantize_weights(w: jax.Array, cfg: AnalogConfig) -> jax.Array:
+    """Signed uniform quantization to transistor geometry levels.
+
+    Straight-through estimator: gradients flow as identity so the model
+    trains through the quantizer.
+    """
+    w = jnp.clip(w, -cfg.w_clip, cfg.w_clip)
+    scale = cfg.w_clip / (cfg.weight_levels // 2)
+    q = jnp.round(w / scale) * scale
+    # straight-through: forward quantized, backward identity
+    return w + jax.lax.stop_gradient(q - w)
+
+
+def sample_process_variation(key: jax.Array, n_filters: int,
+                             cfg: AnalogConfig) -> dict[str, jax.Array]:
+    """Per-filter (per compute unit) transfer-curve perturbations."""
+    kg, ko = jax.random.split(key)
+    gain = 1.0 + cfg.pv_gain_sigma * jax.random.normal(kg, (n_filters,))
+    offset = (cfg.pv_offset_sigma_mv * 1e-3) * jax.random.normal(ko, (n_filters,))
+    if not cfg.enable_process_variation:
+        gain = jnp.ones((n_filters,))
+        offset = jnp.zeros((n_filters,))
+    return {"gain": gain, "offset": offset}
+
+
+def identity_process_variation(n_filters: int) -> dict[str, jax.Array]:
+    return {"gain": jnp.ones((n_filters,)), "offset": jnp.zeros((n_filters,))}
+
+
+def transfer_curve(x: jax.Array, cfg: AnalogConfig,
+                   pv: dict[str, jax.Array] | None = None) -> jax.Array:
+    """Curve-fit from ideal weighted sum (in volts of swing) to realized swing.
+
+    ``x`` is the ideal accumulated voltage swing (signed, volts). The last
+    axis of ``x`` is the filter axis when ``pv`` is given.
+    """
+    if cfg.enable_nonlinearity:
+        half_swing = cfg.vdd / 2.0
+        xn = x / half_swing
+        y = (cfg.c1 * xn + cfg.c3 * xn**3) * half_swing
+    else:
+        y = x
+    if pv is not None:
+        y = y * pv["gain"] + pv["offset"]
+    # rail clamp: capacitor voltage cannot leave [0, VDD]
+    return jnp.clip(y, -cfg.v_precharge, cfg.vdd - cfg.v_precharge)
+
+
+def step_nonlinearity(v: jax.Array, cfg: AnalogConfig) -> jax.Array:
+    """Per-event charge-step compression factor g(V) ∈ (0, 1].
+
+    Models the drain-current dependence on V_DS: steps shrink as the
+    capacitor approaches either rail. v is the *swing* (v=0 at precharge).
+    """
+    if not cfg.enable_nonlinearity:
+        return jnp.ones_like(v)
+    half_swing = cfg.vdd / 2.0
+    return jnp.clip(1.0 - (v / half_swing) ** 2, 0.05, 1.0)

@@ -1,0 +1,4 @@
+from repro.distributed.compression import (  # noqa: F401
+    CompressionState, compress_int8, decompress_int8, compressed_allreduce,
+    init_error_feedback,
+)

@@ -1,0 +1,109 @@
+"""Gradient compression for cross-pod all-reduce: int8 block quantization
+with error feedback (1-bit-Adam / PowerSGD-family trick, int8 variant).
+
+Why: the multi-pod mesh reduces gradients over the "pod" axis across the
+data-center network (much thinner than intra-pod ICI). Quantizing the
+cross-pod leg to int8 cuts that traffic 4× (fp32) / 2× (bf16); the residual
+(quantization error) is added back into the *next* step's gradient — error
+feedback — which keeps SGD convergence unaffected to first order
+(Karimireddy et al., 2019).
+
+Scheme per leaf:
+  * split the flattened gradient into blocks of ``block`` elements,
+  * per-block scale = max|g| / 127 (symmetric int8),
+  * q = round(g / scale) ∈ [-127, 127]  (int8),
+  * residual = g - q·scale  (carried in the error-feedback state, fp32).
+
+Used inside shard_map for the pod-axis reduce (the "model"/"data" legs stay
+full precision over ICI). Pure functions; the pjit train step threads
+``CompressionState`` alongside the optimizer state.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class CompressionState(NamedTuple):
+    """Error-feedback residual per gradient leaf (same tree as grads)."""
+    residual: PyTree
+
+
+def init_error_feedback(grads_like: PyTree) -> CompressionState:
+    return CompressionState(residual=jax.tree.map(
+        lambda g: jnp.zeros(g.shape, jnp.float32), grads_like))
+
+
+def _pad_to(x: jax.Array, multiple: int) -> tuple[jax.Array, int]:
+    n = x.size
+    pad = (-n) % multiple
+    if pad:
+        x = jnp.concatenate([x.reshape(-1), jnp.zeros((pad,), x.dtype)])
+    return x.reshape(-1), pad
+
+
+def compress_int8(g: jax.Array, block: int = 256
+                  ) -> tuple[jax.Array, jax.Array, int]:
+    """g (any shape) → (q int8 [nblocks, block], scale f32 [nblocks], pad)."""
+    flat, pad = _pad_to(g.astype(jnp.float32), block)
+    blocks = flat.reshape(-1, block)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale[:, 0], pad
+
+
+def decompress_int8(q: jax.Array, scale: jax.Array, pad: int,
+                    shape: tuple[int, ...]) -> jax.Array:
+    flat = (q.astype(jnp.float32) * scale[:, None]).reshape(-1)
+    if pad:
+        flat = flat[:-pad]
+    return flat.reshape(shape)
+
+
+def compressed_allreduce(g: jax.Array, ef: jax.Array, axis_name: str,
+                         block: int = 256) -> tuple[jax.Array, jax.Array]:
+    """Error-feedback int8 all-reduce of one leaf over ``axis_name``.
+
+    Must run inside shard_map with ``axis_name`` bound. Returns
+    (mean-reduced gradient, new error-feedback residual).
+
+    The compressed payload (int8 q + one f32 scale per block) is what
+    crosses the network: 1 + 4/block bytes/elem vs 4 — a ~3.8× cut at
+    block=256.
+    """
+    gf = g.astype(jnp.float32) + ef
+    q, scale, pad = compress_int8(gf, block)
+    # what this shard actually contributes after quantization:
+    contributed = decompress_int8(q, scale, pad, g.shape)
+    new_ef = gf - contributed
+    # the WIRE payload is the compressed form: all-gather int8 q + f32
+    # per-block scales (1 + 4/block bytes/elem vs 4), then dequantize and
+    # mean locally — int8 summation would overflow, and gather+local-reduce
+    # is the standard scheme for quantized cross-pod legs.
+    q_all = jax.lax.all_gather(q, axis_name)          # [N, blocks, block] i8
+    s_all = jax.lax.all_gather(scale, axis_name)      # [N, blocks] f32
+    flat = (q_all.astype(jnp.float32) *
+            s_all[..., None]).sum(axis=0).reshape(-1)
+    if pad:
+        flat = flat[:-pad]
+    n = q_all.shape[0]
+    reduced = (flat / n).reshape(g.shape)
+    return reduced.astype(g.dtype), new_ef
+
+
+def tree_compressed_allreduce(grads: PyTree, state: CompressionState,
+                              axis_name: str, block: int = 256
+                              ) -> tuple[PyTree, CompressionState]:
+    out = jax.tree.map(
+        lambda g, e: compressed_allreduce(g, e, axis_name, block),
+        grads, state.residual)
+    reduced = jax.tree.map(lambda t: t[0], out,
+                           is_leaf=lambda x: isinstance(x, tuple))
+    new_res = jax.tree.map(lambda t: t[1], out,
+                           is_leaf=lambda x: isinstance(x, tuple))
+    return reduced, CompressionState(residual=new_res)

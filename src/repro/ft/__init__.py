@@ -1,0 +1,4 @@
+from repro.ft.monitor import (  # noqa: F401
+    HeartbeatTracker, PreemptionGuard, StragglerMonitor,
+)
+from repro.ft.elastic import ElasticPlan, plan_remesh  # noqa: F401

@@ -1,0 +1,29 @@
+"""Jit'd wrapper matching nn.layers.attention_core's GQA signature."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_pallas
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+@partial(jax.jit, static_argnames=("causal", "use_ref", "kv_len"))
+def gqa_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, kv_len: int | None = None,
+                  use_ref: bool = False) -> jax.Array:
+    """q [B, Sq, H, hd]; k/v [B, Skv, KV, hd], H % KV == 0 → [B, Sq, H, hd]."""
+    B, Sq, H, hd = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    # repeat kv across the group dim and flatten (B, H)
+    k = jnp.repeat(k, G, axis=2)
+    v = jnp.repeat(v, G, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * H, Skv, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * H, Skv, hd)
+    fn = attention_ref if use_ref else flash_attention_pallas
+    o = fn(qf, kf, vf, causal=causal, kv_len=kv_len)
+    return o.reshape(B, H, Sq, hd).transpose(0, 2, 1, 3)

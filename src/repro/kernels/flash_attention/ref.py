@@ -1,0 +1,25 @@
+"""Pure-jnp oracle: naive full-materialization attention."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, kv_len: int | None = None) -> jax.Array:
+    """q [BH, Sq, d], k/v [BH, Skv, d] → o [BH, Sq, d]. fp32 softmax."""
+    BH, Sq, d = q.shape
+    Skv = k.shape[1]
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(d)
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask = jnp.tril(mask)
+    if kv_len is not None:
+        mask = mask & (jnp.arange(Skv)[None, :] < kv_len)
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(mask, p, 0.0)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,23 @@
+"""Jit'd wrapper for the fused LIF kernel, shaped like snn.lif_over_time."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.snn import LIFConfig
+from repro.kernels.lif.lif import lif_pallas
+from repro.kernels.lif.ref import lif_ref
+
+
+@partial(jax.jit, static_argnames=("cfg", "use_ref"))
+def lif_over_time(x: jax.Array, cfg: LIFConfig = LIFConfig(),
+                  use_ref: bool = False) -> jax.Array:
+    """x: [T, B, ...] → spikes [T, B, ...] (inference path, no surrogate)."""
+    T = x.shape[0]
+    flat = x.reshape(T, -1)
+    fn = lif_ref if use_ref else lif_pallas
+    out = fn(flat, tau=cfg.tau, v_th=cfg.v_threshold,
+             soft_reset=cfg.soft_reset)
+    return out.reshape(x.shape)

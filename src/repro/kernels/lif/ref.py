@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the LIF kernel — identical math via lax.scan."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def lif_ref(x: jax.Array, *, tau: float = 2.0, v_th: float = 1.0,
+            soft_reset: bool = True) -> jax.Array:
+    """x: [T, N] → spikes [T, N]."""
+    def step(v, x_t):
+        v = v + (x_t - v) / tau
+        s = (v > v_th).astype(x.dtype)
+        v = v - s * v_th if soft_reset else v * (1.0 - s)
+        return v, s
+
+    _, s = lax.scan(step, jnp.zeros_like(x[0]), x)
+    return s

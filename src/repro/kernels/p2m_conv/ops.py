@@ -1,0 +1,71 @@
+"""Jit'd wrapper: events → im2col patches → P²M Pallas kernel → spike maps.
+
+``p2m_conv(params, events, cfg)`` is a drop-in for
+``repro.core.p2m_layer.p2m_forward_scan`` (mode="kernel").
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import analog, leakage
+from repro.kernels.p2m_conv.p2m_conv import p2m_conv_pallas
+from repro.kernels.p2m_conv.ref import p2m_conv_ref
+
+
+def _extract_patches(frames: jax.Array, k: int, stride: int) -> jax.Array:
+    """frames [N, H, W, C] → patches [N, H'out·W'out, k·k·C] (SAME padding)."""
+    N, H, W, C = frames.shape
+    patches = lax.conv_general_dilated_patches(
+        frames, (k, k), (stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    # output feature dim is C*k*k ordered (C, kh, kw) per lax docs; weights
+    # are (kh, kw, C, F) — we reorder the patch dim to (kh, kw, C).
+    Ho, Wo = patches.shape[1], patches.shape[2]
+    patches = patches.reshape(N, Ho * Wo, C, k, k)
+    patches = jnp.moveaxis(patches, 2, -1)          # [N, P, kh, kw, C]
+    return patches.reshape(N, Ho * Wo, k * k * C), (Ho, Wo)
+
+
+def _prepare(params, events, cfg):
+    B, T, n_sub, H, W, Cin = events.shape
+    k = cfg.kernel_size
+    w_q = analog.quantize_weights(params["w"], cfg.analog)   # [k,k,Cin,F]
+    lk = leakage.kernel_leak_params(w_q, cfg.leak)
+    decay = leakage.decay_factor(lk.tau_ms, cfg.dt_ms)
+    frames = events.reshape(B * T * n_sub, H, W, Cin)
+    patches, (Ho, Wo) = _extract_patches(frames, k, cfg.stride)
+    P = B * Ho * Wo
+    # [B,T,n_sub,HoWo,K] → [T, n_sub, B·HoWo, K]
+    patches = patches.reshape(B, T, n_sub, Ho * Wo, k * k * Cin)
+    patches = jnp.moveaxis(patches, 0, 2).reshape(T, n_sub, P, k * k * Cin)
+    w2 = w_q.reshape(k * k * Cin, cfg.out_channels)
+    consts = dict(dv_unit=cfg.analog.dv_unit,
+                  half_swing=cfg.analog.vdd / 2.0,
+                  v_lo=-cfg.analog.v_precharge,
+                  v_hi=cfg.analog.vdd - cfg.analog.v_precharge,
+                  theta=cfg.v_threshold,
+                  nonlinear=cfg.analog.enable_nonlinearity)
+    return patches, w2, lk.v_inf, decay, params, consts, (B, T, Ho, Wo)
+
+
+@partial(jax.jit, static_argnames=("cfg", "use_ref"))
+def p2m_conv(params: dict, events: jax.Array, cfg, use_ref: bool = False
+             ) -> tuple[jax.Array, jax.Array]:
+    """events [B, T, n_sub, H, W, Cin] → (spikes, v_pre) [B, T, H', W', F]."""
+    patches, w2, v_inf, decay, params, consts, dims = _prepare(
+        params, events, cfg)
+    B, T, Ho, Wo = dims
+    fn = p2m_conv_ref if use_ref else p2m_conv_pallas
+    spikes, vpre = fn(patches, w2, v_inf, decay, params["pv_gain"],
+                      params["pv_offset"], **consts)
+    spikes = spikes[:, :B * Ho * Wo]   # crop tile padding
+    vpre = vpre[:, :B * Ho * Wo]
+
+    def back(x):
+        x = x.reshape(T, B, Ho, Wo, cfg.out_channels)
+        return jnp.moveaxis(x, 0, 1)
+    return back(spikes), back(vpre)

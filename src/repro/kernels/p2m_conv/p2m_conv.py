@@ -1,0 +1,104 @@
+"""Pallas TPU kernel for the P²M in-pixel analog convolution (paper §2/§4).
+
+TPU-native mapping of the in-pixel dataflow (DESIGN.md §2): the per-filter
+capacitor state lives in **VMEM** for the whole integration window — exactly
+like charge stays on C_K in the pixel — while event patches stream
+HBM→VMEM one sub-slot at a time. One fused pass computes
+
+    conv step (MXU)  →  leak decay  →  step non-linearity  →  rail clamp
+
+per sub-slot, then the threshold comparator; only binary spikes leave the
+"array". Avoids materializing per-sub-slot conv outputs in HBM
+([T·n_sub, P, F] tensors), which is what the pure-XLA path does.
+
+Layout: im2col patches [T_out, n_sub, P, K] (P = B·H'·W' sites, K = receptive
+field), weights [K, F]. Grid = (T_out, P tiles); the n_sub loop runs inside
+the kernel with the voltage tile resident.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+
+def _p2m_kernel(patches_ref, w_ref, vinf_ref, decay_ref, pvg_ref, pvo_ref,
+                spikes_ref, vpre_ref, *,
+                dv_unit: float, half_swing: float, v_lo: float, v_hi: float,
+                theta: float, nonlinear: bool):
+    n_sub = patches_ref.shape[1]
+    bp = patches_ref.shape[2]
+    F = w_ref.shape[1]
+    vinf = vinf_ref[0, :]                      # [F]
+    decay = decay_ref[0, :]
+    pvg = pvg_ref[0, :]
+    pvo = pvo_ref[0, :]
+
+    def sub_step(i, v):
+        # leak between events: V ← V_inf + (V - V_inf)·e^{-dt/τ}
+        v = vinf + (v - vinf) * decay
+        patch = patches_ref[0, i, :, :]        # [bp, K]
+        ideal = jnp.dot(patch, w_ref[...],
+                        preferred_element_type=jnp.float32) * dv_unit
+        if nonlinear:
+            g = jnp.clip(1.0 - (v / half_swing) ** 2, 0.05, 1.0)
+        else:
+            g = 1.0
+        v = jnp.clip(v + ideal * g * pvg, v_lo, v_hi)
+        return v
+
+    v0 = jnp.zeros((bp, F), jnp.float32)
+    v = lax.fori_loop(0, n_sub, sub_step, v0)
+    v = v + pvo
+    vpre_ref[0, :, :] = v
+    spikes_ref[0, :, :] = (v > theta).astype(spikes_ref.dtype)
+
+
+def p2m_conv_pallas(patches: jax.Array, w: jax.Array, v_inf: jax.Array,
+                    decay: jax.Array, pv_gain: jax.Array, pv_offset: jax.Array,
+                    *, dv_unit: float, half_swing: float, v_lo: float,
+                    v_hi: float, theta: float, nonlinear: bool = True,
+                    block_p: int = 256, interpret: bool = True
+                    ) -> tuple[jax.Array, jax.Array]:
+    """patches: [T_out, n_sub, P, K] f32; w: [K, F]. Returns (spikes, v_pre)
+    both [T_out, P, F] f32."""
+    T, n_sub, P, K = patches.shape
+    F = w.shape[1]
+    block_p = min(block_p, P)
+    if P % block_p != 0:
+        pad = block_p - P % block_p
+        patches = jnp.pad(patches, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        P = patches.shape[2]
+    grid = (T, P // block_p)
+
+    kernel = functools.partial(
+        _p2m_kernel, dv_unit=dv_unit, half_swing=half_swing, v_lo=v_lo,
+        v_hi=v_hi, theta=theta, nonlinear=nonlinear)
+
+    spikes, vpre = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, n_sub, block_p, K), lambda t, p: (t, 0, p, 0)),
+            pl.BlockSpec((K, F), lambda t, p: (0, 0)),
+            pl.BlockSpec((1, F), lambda t, p: (0, 0)),
+            pl.BlockSpec((1, F), lambda t, p: (0, 0)),
+            pl.BlockSpec((1, F), lambda t, p: (0, 0)),
+            pl.BlockSpec((1, F), lambda t, p: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_p, F), lambda t, p: (t, p, 0)),
+            pl.BlockSpec((1, block_p, F), lambda t, p: (t, p, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((T, P, F), jnp.float32),
+            jax.ShapeDtypeStruct((T, P, F), jnp.float32),
+        ],
+        interpret=interpret,
+    )(patches, w, v_inf[None, :], decay[None, :], pv_gain[None, :],
+      pv_offset[None, :])
+    return spikes, vpre

@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the P²M conv kernel (same patch-space math)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def p2m_conv_ref(patches: jax.Array, w: jax.Array, v_inf: jax.Array,
+                 decay: jax.Array, pv_gain: jax.Array, pv_offset: jax.Array,
+                 *, dv_unit: float, half_swing: float, v_lo: float,
+                 v_hi: float, theta: float, nonlinear: bool = True
+                 ) -> tuple[jax.Array, jax.Array]:
+    """patches [T, n_sub, P, K], w [K, F] → (spikes, v_pre) [T, P, F]."""
+    T, n_sub, P, K = patches.shape
+    F = w.shape[1]
+
+    def window(ev_win):                         # [n_sub, P, K]
+        def sub_step(v, patch):
+            v = v_inf + (v - v_inf) * decay
+            ideal = (patch.astype(jnp.float32) @ w.astype(jnp.float32)) * dv_unit
+            g = jnp.clip(1.0 - (v / half_swing) ** 2, 0.05, 1.0) if nonlinear \
+                else 1.0
+            v = jnp.clip(v + ideal * g * pv_gain, v_lo, v_hi)
+            return v, None
+
+        v0 = jnp.zeros((P, F), jnp.float32)
+        v, _ = lax.scan(sub_step, v0, ev_win)
+        return v + pv_offset
+
+    v_pre = jax.vmap(window)(patches)
+    spikes = (v_pre > theta).astype(jnp.float32)
+    return spikes, v_pre

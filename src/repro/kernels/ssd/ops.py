@@ -1,0 +1,47 @@
+"""Jit'd wrapper for the SSD Pallas kernel — drop-in for nn/ssm.ssd_chunked
+on the forward path (custom_vjp falls back to the chunked-jnp backward)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd.ref import ssd_ref
+from repro.kernels.ssd.ssd import ssd_pallas
+from repro.nn.ssm import ssd_chunked
+
+
+@partial(jax.jit, static_argnames=("chunk", "use_ref"))
+def ssd(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+        C: jax.Array, chunk: int = 128, use_ref: bool = False
+        ) -> tuple[jax.Array, jax.Array]:
+    """SSD scan: x [b,s,h,p], dt [b,s,h], A [h], B/C [b,s,g,n] →
+    (y [b,s,h,p], state [b,h,p,n])."""
+    fn = ssd_ref if use_ref else partial(ssd_pallas, chunk=chunk)
+    return fn(x, dt, A, B, C)
+
+
+@jax.custom_vjp
+def ssd_trainable(x, dt, A, B, C):
+    """Forward via the Pallas kernel, backward via the differentiable
+    chunked-jnp path (standard interpret-mode pairing; a fused bwd kernel is
+    listed as future work in DESIGN.md)."""
+    y, _ = ssd_pallas(x, dt, A, B, C)
+    return y
+
+
+def _fwd(x, dt, A, B, C):
+    return ssd_trainable(x, dt, A, B, C), (x, dt, A, B, C)
+
+
+def _bwd(res, gy):
+    x, dt, A, B, C = res
+    def f(x, dt, A, B, C):
+        y, _ = ssd_chunked(x, dt, A, B, C, chunk=128)
+        return y
+    _, vjp = jax.vjp(f, x, dt, A, B, C)
+    return vjp(gy)
+
+
+ssd_trainable.defvjp(_fwd, _bwd)

@@ -1,0 +1,45 @@
+"""Pure-jnp oracle for the SSD kernel: the sequential (non-chunked) scan.
+
+Independent of both the Pallas kernel AND nn/ssm.ssd_chunked (which is
+itself chunked); this is the O(s·n·p) literal recurrence
+
+    state_t = exp(dt_t · A) · state_{t-1} + dt_t · B_t xᵀ_t
+    y_t     = C_t · state_t
+
+so it cross-checks both implementations.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def ssd_ref(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+            C: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """x [b,s,h,p]; dt [b,s,h]; A [h]; B,C [b,s,g,n]. Returns
+    (y [b,s,h,p], state [b,h,p,n]). fp32 math."""
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    hr = h // g
+    f32 = jnp.float32
+    xf = x.astype(f32)
+    dtf = dt.astype(f32)
+    Bf = jnp.repeat(B.astype(f32), hr, axis=2)          # [b,s,h,n]
+    Cf = jnp.repeat(C.astype(f32), hr, axis=2)
+
+    def step(state, inp):
+        x_t, dt_t, B_t, C_t = inp                       # [b,h,p],[b,h],[b,h,n]
+        decay = jnp.exp(dt_t * A)                       # [b,h]
+        upd = jnp.einsum("bhn,bh,bhp->bhpn", B_t, dt_t, x_t)
+        state = state * decay[..., None, None] + upd
+        y_t = jnp.einsum("bhn,bhpn->bhp", C_t, state)
+        return state, y_t
+
+    s0 = jnp.zeros((b, h, p, n), f32)
+    final, ys = lax.scan(
+        step, s0,
+        (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(dtf, 1, 0),
+         jnp.moveaxis(Bf, 1, 0), jnp.moveaxis(Cf, 1, 0)))
+    y = jnp.moveaxis(ys, 0, 1).astype(x.dtype)          # [b,s,h,p]
+    return y, final

@@ -1,0 +1,140 @@
+"""Pallas TPU kernel for the Mamba-2 SSD scan (arXiv:2405.21060).
+
+TPU mapping (DESIGN.md §2): the running SSM state [p, n] per (batch, head)
+stays **resident in VMEM scratch** across the whole sequence, exactly like
+the recurrent state never leaves the register file in the CUDA version —
+only inputs stream in per chunk and only y leaves. The chunk axis is the
+innermost (sequential) grid dimension, so the state scratch carries across
+chunk steps; each chunk does three MXU matmuls:
+
+    G = C · Bᵀ           [L, L]   (intra-chunk attention-like scores)
+    y = (G ∘ decay ∘ dt) · x  +  exp(a⁺) ∘ (C · stateᵀ)
+    state ← exp(a_L) · state + xᵀ · (B ∘ dt ∘ decay_end)
+
+All statistics in fp32. L (chunk) defaults to 128 — MXU-aligned and the
+[L, L] decay tile stays tiny in VMEM.
+
+Grid = (B·H, S/L); per-(b,h) parameters index via closure-computed maps so
+grouped B/C (g < h) are never materialized per-head in HBM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_ref,
+                state_scr, *, n_chunks: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    x = x_ref[0].astype(jnp.float32)          # [L, p]
+    dt = dt_ref[0].astype(jnp.float32)        # [L, 1]... stored [1, L]
+    dt = dt.reshape(-1)                       # [L]
+    A = a_ref[0, 0]                           # scalar (negative)
+    Bm = b_ref[0].astype(jnp.float32)         # [L, n]
+    Cm = c_ref[0].astype(jnp.float32)         # [L, n]
+    L = x.shape[0]
+
+    a = dt * A                                # [L], ≤ 0
+    a_cs = jnp.cumsum(a)                      # [L]
+
+    # ---- inter-chunk: contribution of the carried state ----------------
+    state = state_scr[...]                    # [p, n]
+    y_inter = jax.lax.dot_general(
+        Cm, state, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)   # [L, p]
+    y_inter = y_inter * jnp.exp(a_cs)[:, None]
+
+    # ---- intra-chunk (quadratic in L) -----------------------------------
+    G = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # [L, L]
+    seg = a_cs[:, None] - a_cs[None, :]
+    ii = lax.broadcasted_iota(jnp.int32, (L, L), 0)
+    jj = lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    decay = jnp.where(ii >= jj, jnp.exp(seg), 0.0)
+    W = G * decay * dt[None, :]
+    y_intra = jax.lax.dot_general(W, x, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+
+    y_ref[0] = (y_intra + y_inter).astype(y_ref.dtype)
+
+    # ---- state update ----------------------------------------------------
+    decay_end = jnp.exp(a_cs[-1] - a_cs)      # [L]
+    Bw = Bm * (dt * decay_end)[:, None]       # [L, n]
+    upd = jax.lax.dot_general(x, Bw, (((0,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)  # [p, n]
+    state = state * jnp.exp(a_cs[-1]) + upd
+    state_scr[...] = state
+
+    @pl.when(ci == n_chunks - 1)
+    def _emit_state():
+        state_ref[0] = state_scr[...]
+
+
+def ssd_pallas(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+               C: jax.Array, *, chunk: int = 128, interpret: bool = True
+               ) -> tuple[jax.Array, jax.Array]:
+    """SSD scan, Pallas grid over (batch·heads, seq chunks).
+
+    x [b,s,h,p]; dt [b,s,h] post-softplus; A [h] negative; B, C [b,s,g,n]
+    with h % g == 0. Returns (y [b,s,h,p], final state [b,h,p,n]).
+    """
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    hr = h // g
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        # pad dt with zeros → a=0, decay=1, no state contribution
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    sp = x.shape[1]
+    nc = sp // chunk
+
+    # layouts: head-major rows so per-(b,h) rows are contiguous
+    x2 = jnp.moveaxis(x, 2, 1).reshape(b * h, sp, p)
+    dt2 = jnp.moveaxis(dt, 2, 1).reshape(b * h, sp, 1)
+    a2 = jnp.broadcast_to(A[None, :], (b, h)).reshape(b * h, 1)
+    B2 = jnp.moveaxis(B, 2, 1).reshape(b * g, sp, n)
+    C2 = jnp.moveaxis(C, 2, 1).reshape(b * g, sp, n)
+
+    def bc_map(bh, c):
+        return (bh // h) * g + (bh % h) // hr, c, 0
+
+    kernel = functools.partial(_ssd_kernel, n_chunks=nc)
+    y2, state2 = pl.pallas_call(
+        kernel,
+        grid=(b * h, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, p), lambda bh, c: (bh, c, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda bh, c: (bh, c, 0)),
+            pl.BlockSpec((1, 1), lambda bh, c: (bh, 0)),
+            pl.BlockSpec((1, chunk, n), bc_map),
+            pl.BlockSpec((1, chunk, n), bc_map),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, p), lambda bh, c: (bh, c, 0)),
+            pl.BlockSpec((1, p, n), lambda bh, c: (bh, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b * h, sp, p), x.dtype),
+            jax.ShapeDtypeStruct((b * h, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(x2, dt2, a2, B2, C2)
+
+    y = jnp.moveaxis(y2.reshape(b, h, sp, p), 1, 2)[:, :s]
+    state = state2.reshape(b, h, p, n)
+    return y, state

@@ -1,0 +1,203 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("REPRO_XLA_EXTRA", "") +
+                           " --xla_force_host_platform_device_count=" +
+                           os.environ.get("REPRO_DRYRUN_DEVICES", "512")).strip()
+
+"""Multi-pod dry-run: lower + compile every (arch × shape) on the production
+mesh, record memory/cost analysis + collective schedule (roofline §).
+
+MUST be executed as a module entry (``python -m repro.launch.dryrun``) or
+subprocess — the XLA_FLAGS line above runs before any jax import, and device
+count is locked at first jax init. Never import this module from tests.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-32b --shape train_4k --pods 1
+  python -m repro.launch.dryrun --all --pods 1 2   # every applicable cell
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.configs import SHAPES, get_config, list_archs, shape_applicable
+from repro.launch.mesh import make_production_mesh
+from repro.roofline.hlo import analyze_hlo
+from repro.roofline.model import HW_V5E, model_flops, roofline_terms
+
+ARTIFACT_DIR = Path(os.environ.get("REPRO_ARTIFACTS", "artifacts/dryrun"))
+
+
+def input_specs(arch: str, shape_name: str, mesh) -> tuple:
+    """ShapeDtypeStruct stand-ins for every input of the lowered step —
+    weak-type-correct, shardable, no device allocation."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        from repro.train.steps import build_train_step
+        step, (p, o, b), _ = build_train_step(cfg, shape, mesh)
+        return step, {"params": p, "opt_state": o, "batch": b}
+    if shape.kind == "prefill":
+        from repro.serve.steps import build_prefill_step
+        step, args, _ = build_prefill_step(cfg, shape, mesh)
+        return step, {"args": args}
+    if shape.kind == "decode":
+        from repro.serve.steps import build_serve_step
+        step, (p, tok, pos, cache), _ = build_serve_step(cfg, shape, mesh)
+        return step, {"args": (p, tok, pos, cache)}
+    raise ValueError(shape.kind)
+
+
+def run_cell(arch: str, shape_name: str, pods: int, save_hlo: bool = False) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, reason = shape_applicable(cfg, shape_name)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "pods": pods,
+                "status": "skipped", "reason": reason}
+
+    mesh = make_production_mesh(multi_pod=(pods == 2))
+    chips = mesh.devices.size
+    t0 = time.perf_counter()
+    rec = {"arch": arch, "shape": shape_name, "pods": pods, "chips": chips,
+           "mesh": dict(zip(mesh.axis_names,
+                            [int(x) for x in mesh.devices.shape]))}
+    try:
+        with mesh:
+            step, tree = input_specs(arch, shape_name, mesh)
+            if "params" in tree:
+                lowered = step.lower(tree["params"], tree["opt_state"],
+                                     tree["batch"])
+            else:
+                lowered = step.lower(*tree["args"])
+            t_lower = time.perf_counter() - t0
+            compiled = lowered.compile()
+            t_compile = time.perf_counter() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis() or {}
+
+        # per-device argument bytes, analytic: CPU-backend memory_analysis
+        # reports GLOBAL logical buffers for entry args; divide each leaf by
+        # its shard count from the attached sharding.
+        import numpy as np
+
+        def leaf_bytes_per_device(sds):
+            itemsize = np.dtype(sds.dtype).itemsize
+            sh = getattr(sds, "sharding", None)
+            if sh is not None:
+                try:
+                    shard_shape = sh.shard_shape(sds.shape)
+                    return int(np.prod(shard_shape)) * itemsize
+                except Exception:  # noqa: BLE001
+                    pass
+            return int(np.prod(sds.shape)) * itemsize if sds.shape else itemsize
+
+        arg_leaves = [x for x in jax.tree.leaves(tree)
+                      if isinstance(x, jax.ShapeDtypeStruct)]
+        per_dev_args = sum(leaf_bytes_per_device(x) for x in arg_leaves)
+        hlo = compiled.as_text()
+        # loop-aware HLO cost walk — compiled.cost_analysis() counts while
+        # bodies once, which undercounts scanned-layer programs by ~n_layers.
+        # The SPMD module is the PER-DEVICE program; scale to global by chips.
+        parsed = analyze_hlo(hlo, pod_stride=256)
+
+        flops = float(parsed.flops) * chips
+        bytes_acc = float(parsed.bytes) * chips
+        coll_global = float(parsed.collective_bytes) * chips
+        terms = roofline_terms(flops, bytes_acc, coll_global, chips)
+        n_tokens = shape.global_batch * (shape.seq_len if shape.kind == "train"
+                                         else (shape.seq_len if shape.kind ==
+                                               "prefill" else 1))
+        n_params = (cfg.active_param_count_est() if cfg.n_experts
+                    else cfg.param_count_est())
+        mflops = model_flops(n_params, n_tokens,
+                             "train" if shape.kind == "train" else "infer")
+        rec.update({
+            "status": "ok",
+            "lower_s": round(t_lower, 2),
+            "compile_s": round(t_compile, 2),
+            "memory": {
+                "args_bytes": mem.argument_size_in_bytes,
+                "output_bytes": mem.output_size_in_bytes,
+                "temp_bytes": mem.temp_size_in_bytes,
+                "alias_bytes": mem.alias_size_in_bytes,
+                # CPU memory_analysis counts entry args at GLOBAL logical
+                # size; the analytic per-device figure below divides each
+                # arg by its shard count (the fits-in-HBM criterion).
+                "per_device_args_bytes": int(per_dev_args),
+                "xla_global_total": (mem.argument_size_in_bytes +
+                                     mem.temp_size_in_bytes),
+            },
+            "cost": {"flops": flops, "bytes_accessed": bytes_acc,
+                     "per_device_flops": float(parsed.flops),
+                     "per_device_bytes": float(parsed.bytes),
+                     "xla_flops_unscaled": float(cost.get("flops", 0.0)),
+                     "xla_bytes_unscaled": float(cost.get("bytes accessed", 0.0))},
+            "collectives": parsed.as_dict(),
+            "roofline": terms,
+            "model_flops": mflops,
+            "useful_flops_ratio": (mflops / flops) if flops else 0.0,
+        })
+        if save_hlo:
+            hlo_path = ARTIFACT_DIR / f"{arch}__{shape_name}__{pods}pod.hlo"
+            hlo_path.parent.mkdir(parents=True, exist_ok=True)
+            hlo_path.write_text(hlo)
+        # free compiled artifacts before the next cell
+        del compiled, lowered, hlo
+    except Exception as e:  # noqa: BLE001 — record and continue
+        rec.update({"status": "error", "error": f"{type(e).__name__}: {e}",
+                    "traceback": traceback.format_exc()[-2000:]})
+    rec["wall_s"] = round(time.perf_counter() - t0, 2)
+    return rec
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default=None)
+    ap.add_argument("--shape", type=str, default=None)
+    ap.add_argument("--pods", type=int, nargs="+", default=[1])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--out", type=str, default=str(ARTIFACT_DIR))
+    args = ap.parse_args()
+
+    out_dir = Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    cells: list[tuple[str, str, int]] = []
+    archs = list_archs() if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
+    for a in archs:
+        for s in shapes:
+            for p in args.pods:
+                cells.append((a, s, p))
+
+    n_fail = 0
+    for arch, shape_name, pods in cells:
+        rec = run_cell(arch, shape_name, pods, save_hlo=args.save_hlo)
+        path = out_dir / f"{arch}__{shape_name}__{pods}pod.json"
+        path.write_text(json.dumps(rec, indent=2))
+        status = rec["status"]
+        if status == "error":
+            n_fail += 1
+            print(f"[dryrun] {arch} × {shape_name} × {pods}pod  ERROR "
+                  f"{rec['error'][:160]}", flush=True)
+        elif status == "skipped":
+            print(f"[dryrun] {arch} × {shape_name} × {pods}pod  SKIP "
+                  f"({rec['reason'][:60]})", flush=True)
+        else:
+            r = rec["roofline"]
+            print(f"[dryrun] {arch} × {shape_name} × {pods}pod  ok "
+                  f"compile={rec['compile_s']}s flops={rec['cost']['flops']:.3g} "
+                  f"coll={rec['collectives']['total_bytes']:.3g}B "
+                  f"dominant={r['dominant']} bound={r['roofline_bound_s']:.4f}s",
+                  flush=True)
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,82 @@
+"""Dry-run sweep driver: one subprocess per (arch × shape × pods) cell so XLA
+state never accumulates across the 60+ compiles. Resumable: cells with an
+existing 'ok'/'skipped' JSON are not re-run unless --force.
+
+  PYTHONPATH=src python -m repro.launch.sweep --pods 1 2
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pods", type=int, nargs="+", default=[1, 2])
+    ap.add_argument("--archs", type=str, nargs="+", default=None)
+    ap.add_argument("--shapes", type=str, nargs="+", default=None)
+    ap.add_argument("--out", type=str, default="artifacts/dryrun")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--timeout", type=int, default=2400)
+    args = ap.parse_args()
+
+    sys.path.insert(0, "src")
+    from repro.configs import SHAPES, list_archs
+
+    out = Path(args.out)
+    out.mkdir(parents=True, exist_ok=True)
+    archs = args.archs or list_archs()
+    shapes = args.shapes or list(SHAPES)
+
+    cells = [(a, s, p) for a in archs for s in shapes for p in args.pods]
+    t0 = time.time()
+    n_err = 0
+    for i, (arch, shape, pods) in enumerate(cells):
+        path = out / f"{arch}__{shape}__{pods}pod.json"
+        if path.exists() and not args.force:
+            try:
+                rec = json.loads(path.read_text())
+                if rec.get("status") in ("ok", "skipped"):
+                    print(f"[{i+1}/{len(cells)}] {arch}×{shape}×{pods}pod cached "
+                          f"({rec['status']})", flush=True)
+                    continue
+            except json.JSONDecodeError:
+                pass
+        env = dict(os.environ,
+                   PYTHONPATH="src",
+                   REPRO_ARTIFACTS=str(out))
+        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+               "--arch", arch, "--shape", shape, "--pods", str(pods),
+               "--out", str(out)]
+        t1 = time.time()
+        try:
+            proc = subprocess.run(cmd, env=env, timeout=args.timeout,
+                                  capture_output=True, text=True)
+            rc = proc.returncode
+        except subprocess.TimeoutExpired:
+            rc = -9
+            path.write_text(json.dumps({
+                "arch": arch, "shape": shape, "pods": pods,
+                "status": "error", "error": f"timeout {args.timeout}s"}))
+        status = "?"
+        if path.exists():
+            try:
+                status = json.loads(path.read_text()).get("status", "?")
+            except json.JSONDecodeError:
+                status = "corrupt"
+        if status == "error" or rc != 0:
+            n_err += 1
+        print(f"[{i+1}/{len(cells)}] {arch}×{shape}×{pods}pod {status} "
+              f"rc={rc} {time.time()-t1:.0f}s (total {time.time()-t0:.0f}s)",
+              flush=True)
+    print(f"sweep done: {n_err} errors, {time.time()-t0:.0f}s", flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

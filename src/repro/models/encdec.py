@@ -1,0 +1,176 @@
+"""Encoder-decoder transformer (seamless-m4t-large-v2 backbone).
+
+The audio/text modality frontend is a STUB per spec: the encoder consumes
+precomputed frame embeddings [B, S_enc, d_model]. Encoder = bidirectional
+self-attention blocks; decoder blocks = causal self-attn + cross-attn to the
+encoder output + GLU MLP. All stacks scanned.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import LMConfig
+from repro.nn import layers as L
+from repro.sharding.rules import shard_batch
+from repro.models.lm import (_dense_block_init, _cross_block_init, _maybe_remat,
+                             _stack_init)
+
+Params = dict
+
+
+def _dec_block_init(key, cfg: LMConfig) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln1": L.rmsnorm_init(cfg.d_model, L.pdt(cfg)),
+        "attn": L.attn_init(k1, cfg),
+        "lnx": L.rmsnorm_init(cfg.d_model, L.pdt(cfg)),
+        "xattn": L.attn_init(k2, cfg, cross=True),
+        "ln2": L.rmsnorm_init(cfg.d_model, L.pdt(cfg)),
+        "mlp": L.mlp_init(k3, cfg),
+    }
+
+
+def init_params(key: jax.Array, cfg: LMConfig) -> Params:
+    ke, kb, kd = jax.random.split(key, 3)
+    return {
+        "embed": L.embed_init(ke, cfg),
+        "enc_blocks": _stack_init(_dense_block_init, kb, cfg.encoder_layers, cfg),
+        "enc_norm": L.rmsnorm_init(cfg.d_model, L.pdt(cfg)),
+        "dec_blocks": _stack_init(_dec_block_init, kd, cfg.n_layers, cfg),
+        "final_norm": L.rmsnorm_init(cfg.d_model, L.pdt(cfg)),
+    }
+
+
+def encode(params: Params, frames: jax.Array, cfg: LMConfig) -> jax.Array:
+    """frames: [B, S_enc, D] (stub frontend embeddings) → encoder states."""
+    h = frames.astype(L.cdt(cfg))
+    positions = jnp.arange(h.shape[1])[None, :]
+
+    def body(h, bp):
+        a = L.self_attention(bp["attn"], L.rmsnorm(h, bp["ln1"], cfg.norm_eps),
+                             cfg, causal=False, positions=positions)
+        h = h + a
+        y = L.mlp_apply(bp["mlp"], L.rmsnorm(h, bp["ln2"], cfg.norm_eps), cfg)
+        return shard_batch(h + y), None
+
+    h, _ = lax.scan(_maybe_remat(body, cfg), shard_batch(h), params["enc_blocks"])
+    return L.rmsnorm(h, params["enc_norm"], cfg.norm_eps)
+
+
+def _dec_block_fwd(h, bp, memory, cfg, positions):
+    a = L.self_attention(bp["attn"], L.rmsnorm(h, bp["ln1"], cfg.norm_eps),
+                         cfg, causal=True, positions=positions)
+    h = h + a
+    x = L.cross_attention(bp["xattn"], L.rmsnorm(h, bp["lnx"], cfg.norm_eps),
+                          memory, cfg)
+    h = h + x
+    y = L.mlp_apply(bp["mlp"], L.rmsnorm(h, bp["ln2"], cfg.norm_eps), cfg)
+    return h + y
+
+
+def forward(params: Params, frames: jax.Array, tokens: jax.Array,
+            cfg: LMConfig) -> jax.Array:
+    """(frames [B,S_enc,D], tokens [B,S_dec]) → logits [B, S_dec, Vp]."""
+    memory = encode(params, frames, cfg)
+    h = L.embed_apply(params["embed"], tokens, cfg)
+    positions = jnp.arange(tokens.shape[1])[None, :]
+
+    def body(h, bp):
+        return shard_batch(_dec_block_fwd(h, bp, memory, cfg, positions)), None
+
+    h, _ = lax.scan(_maybe_remat(body, cfg), shard_batch(h), params["dec_blocks"])
+    h = L.rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    return L.unembed_apply(params["embed"], h, cfg)
+
+
+def loss_fn(params: Params, batch: dict, cfg: LMConfig) -> tuple[jax.Array, dict]:
+    memory = encode(params, batch["frames"], cfg)
+    h = L.embed_apply(params["embed"], batch["tokens"], cfg)
+    positions = jnp.arange(batch["tokens"].shape[1])[None, :]
+
+    def body(h, bp):
+        return shard_batch(_dec_block_fwd(h, bp, memory, cfg, positions)), None
+
+    h, _ = lax.scan(_maybe_remat(body, cfg), shard_batch(h), params["dec_blocks"])
+    h = L.rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    ce = L.chunked_cross_entropy(params["embed"], h, batch["labels"], cfg)
+    return ce, {"ce": ce}
+
+
+# ---------------------------------------------------------------------------
+# serving: cross-kv cached at prefill; decoder self-cache grows
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: LMConfig, batch: int, max_len: int, enc_len: int,
+               dtype=None) -> dict:
+    dtype = dtype or L.cdt(cfg)
+    KV, hd = cfg.phys_kv_heads, cfg.head_dim
+    Ld = cfg.n_layers
+    return {
+        "self": {"k": jnp.zeros((Ld, batch, max_len, KV, hd), dtype),
+                 "v": jnp.zeros((Ld, batch, max_len, KV, hd), dtype)},
+        "cross": {"k": jnp.zeros((Ld, batch, enc_len, KV, hd), dtype),
+                  "v": jnp.zeros((Ld, batch, enc_len, KV, hd), dtype)},
+    }
+
+
+def prefill(params: Params, frames: jax.Array, tokens: jax.Array,
+            cfg: LMConfig, max_len: int | None = None) -> tuple[jax.Array, dict]:
+    """Encode + run decoder prompt, building both caches."""
+    memory = encode(params, frames, cfg)
+    B, S = tokens.shape
+    max_len = max_len or S
+    h = L.embed_apply(params["embed"], tokens, cfg)
+    positions = jnp.arange(S)[None, :]
+
+    def pad_kv(k):
+        if max_len == S:
+            return k
+        return jnp.pad(k, ((0, 0), (0, max_len - S), (0, 0), (0, 0)))
+
+    def body(h, bp):
+        xn = L.rmsnorm(h, bp["ln1"], cfg.norm_eps)
+        q, k, v = L.project_qkv(bp["attn"], xn, xn, cfg, positions, positions)
+        o = L.attention_core(q, k, v, causal=True, chunk=cfg.attn_chunk)
+        h = h + L.attn_out(bp["attn"], o, cfg)
+        xn = L.rmsnorm(h, bp["lnx"], cfg.norm_eps)
+        qx, kx, vx = L.project_qkv(bp["xattn"], xn, memory, cfg, None, None,
+                                   use_rope=False)
+        o = L.attention_core(qx, kx, vx, causal=False, chunk=cfg.attn_chunk)
+        h = h + L.attn_out(bp["xattn"], o, cfg)
+        y = L.mlp_apply(bp["mlp"], L.rmsnorm(h, bp["ln2"], cfg.norm_eps), cfg)
+        return shard_batch(h + y), (pad_kv(k), pad_kv(v), kx, vx)
+
+    h, (ks, vs, kxs, vxs) = lax.scan(_maybe_remat(body, cfg), shard_batch(h),
+                                     params["dec_blocks"])
+    cache = {"self": {"k": ks, "v": vs}, "cross": {"k": kxs, "v": vxs}}
+    h = L.rmsnorm(h[:, -1:, :], params["final_norm"], cfg.norm_eps)
+    return L.unembed_apply(params["embed"], h, cfg)[:, 0], cache
+
+
+def decode_step(params: Params, token: jax.Array, pos: jax.Array, cache: dict,
+                cfg: LMConfig) -> tuple[jax.Array, dict]:
+    h = L.embed_apply(params["embed"], token, cfg)
+
+    def body(h, inp):
+        bp, ck, cv, xck, xcv = inp
+        a, ck, cv = L.decode_attention(
+            bp["attn"], L.rmsnorm(h, bp["ln1"], cfg.norm_eps), ck, cv, pos, cfg)
+        h = h + a
+        xn = L.rmsnorm(h, bp["lnx"], cfg.norm_eps)
+        q, _, _ = L.project_qkv(bp["xattn"], xn, xn, cfg, None, None,
+                                use_rope=False)
+        o = L.attention_core(q, xck.astype(q.dtype), xcv.astype(q.dtype),
+                             causal=False, chunk=cfg.attn_chunk)
+        h = h + L.attn_out(bp["xattn"], o, cfg)
+        y = L.mlp_apply(bp["mlp"], L.rmsnorm(h, bp["ln2"], cfg.norm_eps), cfg)
+        return h + y, (ck, cv)
+
+    h, (nk, nv) = lax.scan(body, h, (params["dec_blocks"],
+                                     cache["self"]["k"], cache["self"]["v"],
+                                     cache["cross"]["k"], cache["cross"]["v"]))
+    new_cache = {"self": {"k": nk, "v": nv}, "cross": cache["cross"]}
+    h = L.rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    return L.unembed_apply(params["embed"], h, cfg), new_cache

@@ -1,0 +1,457 @@
+"""Decoder-LM family covering all assigned architectures:
+
+  dense  — phi4-mini / gemma-7b / qwen3-32b / internlm2
+  moe    — granite-moe / grok-1
+  ssm    — mamba2 (attention-free)
+  hybrid — zamba2 (Mamba-2 stack + one *shared* attention block every k)
+  vlm    — llama-3.2-vision (cross-attention to image tokens every k layers)
+
+Layers are **scanned** with stacked params (HLO size independent of depth —
+required for 100-layer archs × 512-way SPMD on a 1-core compile host).
+Heterogeneous stacks (hybrid/vlm) scan over *groups* with homogeneous
+sub-structure. Encoder-decoder (seamless) lives in models/encdec.py and
+reuses these blocks.
+
+API:
+  init_params(key, cfg)                      → params pytree
+  forward(params, tokens, cfg, ...)          → logits  (train path)
+  loss_fn(params, batch, cfg)                → scalar loss, metrics
+  prefill(params, tokens, cfg)               → (last_logits, cache)
+  init_cache(cfg, batch, max_len)            → cache pytree
+  decode_step(params, token, pos, cache, cfg)→ (logits, new cache)
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import LMConfig
+from repro.nn import layers as L
+from repro.nn import moe as moe_mod
+from repro.nn import ssm as ssm_mod
+from repro.sharding.rules import shard_batch
+
+Params = dict
+
+
+# ---------------------------------------------------------------------------
+# remat policy
+# ---------------------------------------------------------------------------
+
+def _maybe_remat(fn, cfg: LMConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)
+
+
+# ---------------------------------------------------------------------------
+# block initializers (single layer; stacked with vmap)
+# ---------------------------------------------------------------------------
+
+def _dense_block_init(key, cfg: LMConfig) -> Params:
+    k1, k2 = jax.random.split(key)
+    p = {
+        "ln1": L.rmsnorm_init(cfg.d_model, L.pdt(cfg)),
+        "attn": L.attn_init(k1, cfg),
+        "ln2": L.rmsnorm_init(cfg.d_model, L.pdt(cfg)),
+    }
+    if cfg.n_experts:
+        p["moe"] = moe_mod.moe_init(k2, cfg)
+    else:
+        p["mlp"] = L.mlp_init(k2, cfg)
+    return p
+
+
+def _ssm_block_init(key, cfg: LMConfig) -> Params:
+    return {
+        "ln": L.rmsnorm_init(cfg.d_model, L.pdt(cfg)),
+        "ssm": ssm_mod.ssm_init(key, cfg),
+    }
+
+
+def _cross_block_init(key, cfg: LMConfig) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": L.rmsnorm_init(cfg.d_model, L.pdt(cfg)),
+        "xattn": L.attn_init(k1, cfg, cross=True),
+        "ln2": L.rmsnorm_init(cfg.d_model, L.pdt(cfg)),
+        "mlp": L.mlp_init(k2, cfg),
+    }
+
+
+def _stack_init(init_one, key, n: int, cfg: LMConfig) -> Params:
+    keys = jax.random.split(key, n)
+    return jax.vmap(lambda k: init_one(k, cfg))(keys)
+
+
+# ---------------------------------------------------------------------------
+# block forwards (single layer)
+# ---------------------------------------------------------------------------
+
+def _dense_block_fwd(h: jax.Array, bp: Params, cfg: LMConfig,
+                     positions: jax.Array | None) -> tuple[jax.Array, jax.Array]:
+    """Returns (h, moe_aux_loss)."""
+    a = L.self_attention(bp["attn"], L.rmsnorm(h, bp["ln1"], cfg.norm_eps),
+                         cfg, causal=True, positions=positions)
+    h = h + a
+    x = L.rmsnorm(h, bp["ln2"], cfg.norm_eps)
+    if cfg.n_experts:
+        y, aux = moe_mod.moe_apply(bp["moe"], x, cfg)
+        lb = aux["lb_loss"]
+    else:
+        y = L.mlp_apply(bp["mlp"], x, cfg)
+        lb = jnp.zeros((), jnp.float32)
+    return h + y, lb
+
+
+def _ssm_block_fwd(h: jax.Array, bp: Params, cfg: LMConfig) -> jax.Array:
+    return h + ssm_mod.ssm_block_apply(
+        bp["ssm"], L.rmsnorm(h, bp["ln"], cfg.norm_eps), cfg)
+
+
+def _cross_block_fwd(h: jax.Array, bp: Params, memory: jax.Array,
+                     cfg: LMConfig) -> jax.Array:
+    a = L.cross_attention(bp["xattn"], L.rmsnorm(h, bp["ln1"], cfg.norm_eps),
+                          memory, cfg)
+    h = h + a
+    y = L.mlp_apply(bp["mlp"], L.rmsnorm(h, bp["ln2"], cfg.norm_eps), cfg)
+    return h + y
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_params(key: jax.Array, cfg: LMConfig) -> Params:
+    ke, kb, ks = jax.random.split(key, 3)
+    params: Params = {"embed": L.embed_init(ke, cfg),
+                      "final_norm": L.rmsnorm_init(cfg.d_model, L.pdt(cfg))}
+    fam = cfg.family
+    if fam in ("dense", "moe"):
+        params["blocks"] = _stack_init(_dense_block_init, kb, cfg.n_layers, cfg)
+    elif fam == "ssm":
+        params["blocks"] = _stack_init(_ssm_block_init, kb, cfg.n_layers, cfg)
+    elif fam == "hybrid":
+        k = cfg.attn_every
+        n_groups = cfg.n_layers // k
+        # scanned groups of k ssm blocks each  +  ONE shared attention block
+        stacked = _stack_init(_ssm_block_init, kb, n_groups * k, cfg)
+        params["blocks"] = jax.tree.map(
+            lambda x: x.reshape((n_groups, k) + x.shape[1:]), stacked)
+        params["shared"] = _dense_block_init(ks, cfg)
+    elif fam == "vlm":
+        k = cfg.cross_every
+        n_groups = cfg.n_layers // k
+        n_self = n_groups * (k - 1)
+        stacked = _stack_init(_dense_block_init, kb, n_self, cfg)
+        params["blocks"] = jax.tree.map(
+            lambda x: x.reshape((n_groups, k - 1) + x.shape[1:]), stacked)
+        params["cross_blocks"] = _stack_init(_cross_block_init, ks, n_groups, cfg)
+    else:
+        raise ValueError(fam)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward (train / full-sequence)
+# ---------------------------------------------------------------------------
+
+def backbone(params: Params, h: jax.Array, cfg: LMConfig,
+             positions: jax.Array | None = None,
+             img_embed: jax.Array | None = None) -> tuple[jax.Array, jax.Array]:
+    """Run the layer stack. Returns (hidden, total moe aux loss)."""
+    fam = cfg.family
+
+    if fam in ("dense", "moe"):
+        def body(carry, bp):
+            h, lb = carry
+            h = shard_batch(h)   # pin the loop carry: see rules.shard_batch
+            h, lb_i = _dense_block_fwd(h, bp, cfg, positions)
+            return (shard_batch(h), lb + lb_i), None
+        (h, lb), _ = lax.scan(_maybe_remat(body, cfg), (h, jnp.zeros((), jnp.float32)),
+                              params["blocks"])
+        return h, lb
+
+    if fam == "ssm":
+        def body(h, bp):
+            h = shard_batch(h)
+            return shard_batch(_ssm_block_fwd(h, bp, cfg)), None
+        h, _ = lax.scan(_maybe_remat(body, cfg), h, params["blocks"])
+        return h, jnp.zeros((), jnp.float32)
+
+    if fam == "hybrid":
+        shared = params["shared"]
+
+        def group(h, gp):
+            h = shard_batch(h)
+            def inner(hh, bp):
+                return shard_batch(_ssm_block_fwd(hh, bp, cfg)), None
+            h, _ = lax.scan(inner, h, gp)
+            h, _ = _dense_block_fwd(h, shared, cfg, positions)
+            return shard_batch(h), None
+        h, _ = lax.scan(_maybe_remat(group, cfg), h, params["blocks"])
+        return h, jnp.zeros((), jnp.float32)
+
+    if fam == "vlm":
+        assert img_embed is not None, "vlm needs image embeddings"
+
+        def group(h, gp):
+            h = shard_batch(h)
+            sp, xp = gp
+            def inner(hh, bp):
+                hh, _ = _dense_block_fwd(hh, bp, cfg, positions)
+                return shard_batch(hh), None
+            h, _ = lax.scan(inner, h, sp)
+            h = _cross_block_fwd(h, xp, img_embed, cfg)
+            return shard_batch(h), None
+        h, _ = lax.scan(_maybe_remat(group, cfg), h,
+                        (params["blocks"], params["cross_blocks"]))
+        return h, jnp.zeros((), jnp.float32)
+
+    raise ValueError(fam)
+
+
+def forward(params: Params, tokens: jax.Array, cfg: LMConfig,
+            img_embed: jax.Array | None = None) -> tuple[jax.Array, jax.Array]:
+    """tokens [B, S] → (logits [B, S, Vp], moe aux loss)."""
+    h = L.embed_apply(params["embed"], tokens, cfg)
+    h, lb = backbone(params, h, cfg, img_embed=img_embed)
+    h = L.rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    return L.unembed_apply(params["embed"], h, cfg), lb
+
+
+def loss_fn(params: Params, batch: dict, cfg: LMConfig,
+            lb_coef: float = 0.01) -> tuple[jax.Array, dict]:
+    """Training loss. Uses the chunked CE (no [B,S,V] logits materialized)."""
+    h = L.embed_apply(params["embed"], batch["tokens"], cfg)
+    h, lb = backbone(params, h, cfg, img_embed=batch.get("img_embed"))
+    h = L.rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    ce = L.chunked_cross_entropy(params["embed"], h, batch["labels"], cfg)
+    loss = ce + lb_coef * lb
+    return loss, {"ce": ce, "lb": lb}
+
+
+# ---------------------------------------------------------------------------
+# KV cache / decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: LMConfig, batch: int, max_len: int, dtype=None) -> dict:
+    dtype = dtype or L.cdt(cfg)
+    KV, hd = cfg.phys_kv_heads, cfg.head_dim
+    fam = cfg.family
+
+    def attn_cache(n, length):
+        return {"k": jnp.zeros((n, batch, length, KV, hd), dtype),
+                "v": jnp.zeros((n, batch, length, KV, hd), dtype)}
+
+    if fam in ("dense", "moe"):
+        return attn_cache(cfg.n_layers, max_len)
+    if fam == "ssm":
+        c = ssm_mod.ssm_init_cache(cfg, batch, dtype)
+        return jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (cfg.n_layers,) + x.shape).copy(), c)
+    if fam == "hybrid":
+        k = cfg.attn_every
+        n_groups = cfg.n_layers // k
+        c = ssm_mod.ssm_init_cache(cfg, batch, dtype)
+        ssm_c = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (n_groups, k) + x.shape).copy(), c)
+        return {"ssm": ssm_c, "attn": attn_cache(n_groups, max_len)}
+    if fam == "vlm":
+        k = cfg.cross_every
+        n_groups = cfg.n_layers // k
+        self_c = jax.tree.map(
+            lambda x: x.reshape((n_groups, k - 1) + x.shape[1:]),
+            attn_cache(n_groups * (k - 1), max_len))
+        cross_c = attn_cache(n_groups, cfg.n_image_tokens)
+        return {"self": self_c, "cross": cross_c}
+    raise ValueError(fam)
+
+
+def _attn_block_decode(h, bp, ck, cv, pos, cfg) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    a, ck, cv = L.decode_attention(bp["attn"], L.rmsnorm(h, bp["ln1"], cfg.norm_eps),
+                                   ck, cv, pos, cfg)
+    h = h + a
+    x = L.rmsnorm(h, bp["ln2"], cfg.norm_eps)
+    if cfg.n_experts:
+        y, _ = moe_mod.moe_apply(bp["moe"], x, cfg)
+    else:
+        y = L.mlp_apply(bp["mlp"], x, cfg)
+    return h + y, ck, cv
+
+
+def _cross_block_decode(h, bp, ck, cv, cfg, kv_len=None):
+    """Cross-attn block during decode: kv cache precomputed at prefill."""
+    x = L.rmsnorm(h, bp["ln1"], cfg.norm_eps)
+    q = L.project_q(bp["xattn"], x, cfg)
+    o = L.attention_core(q, ck.astype(q.dtype), cv.astype(q.dtype),
+                         causal=False, chunk=cfg.attn_chunk, kv_len=kv_len)
+    h = h + L.attn_out(bp["xattn"], o, cfg)
+    y = L.mlp_apply(bp["mlp"], L.rmsnorm(h, bp["ln2"], cfg.norm_eps), cfg)
+    return h + y
+
+
+def decode_step(params: Params, token: jax.Array, pos: jax.Array, cache: dict,
+                cfg: LMConfig) -> tuple[jax.Array, dict]:
+    """token [B, 1] → (logits [B, 1, Vp], new cache). One decode step."""
+    h = L.embed_apply(params["embed"], token, cfg)
+    fam = cfg.family
+
+    if fam in ("dense", "moe"):
+        def body(h, inp):
+            bp, ck, cv = inp
+            h, ck, cv = _attn_block_decode(shard_batch(h), bp, ck, cv, pos, cfg)
+            return shard_batch(h), (ck, cv)
+        h, (nk, nv) = lax.scan(body, h, (params["blocks"], cache["k"], cache["v"]))
+        new_cache = {"k": nk, "v": nv}
+
+    elif fam == "ssm":
+        def body(h, inp):
+            bp, c = inp
+            y, c = ssm_mod.ssm_block_decode(
+                bp["ssm"], L.rmsnorm(shard_batch(h), bp["ln"], cfg.norm_eps),
+                c, cfg)
+            return shard_batch(h + y), c
+        h, new_cache = lax.scan(body, h, (params["blocks"], cache))
+
+    elif fam == "hybrid":
+        shared = params["shared"]
+
+        def group(h, inp):
+            gp, ssm_c, ck, cv = inp
+            def inner(hh, i2):
+                bp, c = i2
+                y, c = ssm_mod.ssm_block_decode(
+                    bp["ssm"], L.rmsnorm(hh, bp["ln"], cfg.norm_eps), c, cfg)
+                return hh + y, c
+            h, ssm_c = lax.scan(inner, h, (gp, ssm_c))
+            h, ck, cv = _attn_block_decode(h, shared, ck, cv, pos, cfg)
+            return h, (ssm_c, ck, cv)
+        h, (ssm_c, nk, nv) = lax.scan(
+            group, h, (params["blocks"], cache["ssm"],
+                       cache["attn"]["k"], cache["attn"]["v"]))
+        new_cache = {"ssm": ssm_c, "attn": {"k": nk, "v": nv}}
+
+    elif fam == "vlm":
+        def group(h, inp):
+            sp, xp, ck, cv, xck, xcv = inp
+            def inner(hh, i2):
+                bp, k_, v_ = i2
+                hh, k_, v_ = _attn_block_decode(hh, bp, k_, v_, pos, cfg)
+                return hh, (k_, v_)
+            h, (ck, cv) = lax.scan(inner, h, (sp, ck, cv))
+            h = _cross_block_decode(h, xp, xck, xcv, cfg)
+            return h, (ck, cv)
+        h, (nk, nv) = lax.scan(
+            group, h, (params["blocks"], params["cross_blocks"],
+                       cache["self"]["k"], cache["self"]["v"],
+                       cache["cross"]["k"], cache["cross"]["v"]))
+        new_cache = {"self": {"k": nk, "v": nv}, "cross": cache["cross"]}
+    else:
+        raise ValueError(fam)
+
+    h = L.rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    return L.unembed_apply(params["embed"], h, cfg), new_cache
+
+
+# ---------------------------------------------------------------------------
+# prefill — build the cache for a prompt, return last-token logits
+# ---------------------------------------------------------------------------
+
+def prefill(params: Params, tokens: jax.Array, cfg: LMConfig,
+            img_embed: jax.Array | None = None,
+            max_len: int | None = None) -> tuple[jax.Array, dict]:
+    """tokens [B, S] → (last logits [B, Vp], cache with S entries)."""
+    B, S = tokens.shape
+    max_len = max_len or S
+    h = L.embed_apply(params["embed"], tokens, cfg)
+    positions = jnp.arange(S)[None, :]
+    fam = cfg.family
+
+    def attn_prefill(bp, x):
+        """Self-attn block that also emits its k/v for the cache."""
+        xn = L.rmsnorm(x, bp["ln1"], cfg.norm_eps)
+        q, k, v = L.project_qkv(bp["attn"], xn, xn, cfg, positions, positions)
+        o = L.attention_core(q, k, v, causal=True, chunk=cfg.attn_chunk)
+        x = x + L.attn_out(bp["attn"], o, cfg)
+        xm = L.rmsnorm(x, bp["ln2"], cfg.norm_eps)
+        if cfg.n_experts:
+            y, _ = moe_mod.moe_apply(bp["moe"], xm, cfg)
+        else:
+            y = L.mlp_apply(bp["mlp"], xm, cfg)
+        # pin the emitted cache rows to their final layout ([B@batch, S,
+        # KV@model, hd]) — otherwise GSPMD re-shards the stacked scan
+        # output with a full fp32 all-gather at the epilogue
+        k = shard_batch(k, None, "model", None)
+        v = shard_batch(v, None, "model", None)
+        return x + y, k, v
+
+    def pad_kv(k):
+        if max_len == S:
+            return k
+        return jnp.pad(k, ((0, 0), (0, max_len - S), (0, 0), (0, 0)))
+
+    def ssm_prefill_one(hh, bp):
+        xn = L.rmsnorm(hh, bp["ln"], cfg.norm_eps)
+        y, st, tails = ssm_mod._ssm_block_full(bp["ssm"], xn, cfg)
+        return hh + y, {"state": st, "conv_x": tails["x"], "conv_bc": tails["bc"]}
+
+    if fam in ("dense", "moe"):
+        def body(h, bp):
+            h = shard_batch(h)
+            h, k, v = attn_prefill(bp, h)
+            return shard_batch(h), (pad_kv(k), pad_kv(v))
+        h, (ks, vs) = lax.scan(_maybe_remat(body, cfg), h, params["blocks"])
+        cache = {"k": ks, "v": vs}
+
+    elif fam == "ssm":
+        def ssm_body(h, bp):
+            h, c = ssm_prefill_one(shard_batch(h), bp)
+            return shard_batch(h), c
+        h, cache = lax.scan(ssm_body, h, params["blocks"])
+
+    elif fam == "hybrid":
+        shared = params["shared"]
+
+        def group(h, gp):
+            h = shard_batch(h)
+            h, ssm_c = lax.scan(ssm_prefill_one, h, gp)
+            h, k, v = attn_prefill(shared, h)
+            return shard_batch(h), (ssm_c, pad_kv(k), pad_kv(v))
+        h, (ssm_c, ks, vs) = lax.scan(group, h, params["blocks"])
+        cache = {"ssm": ssm_c, "attn": {"k": ks, "v": vs}}
+
+    elif fam == "vlm":
+        assert img_embed is not None
+
+        def group(h, gp):
+            h = shard_batch(h)
+            sp, xp = gp
+            def inner(hh, bp):
+                hh, k, v = attn_prefill(bp, hh)
+                return shard_batch(hh), (pad_kv(k), pad_kv(v))
+            h, (ck, cv) = lax.scan(inner, h, sp)
+            # cross: cache image k/v for decode reuse
+            xn = L.rmsnorm(h, xp["ln1"], cfg.norm_eps)
+            q, k, v = L.project_qkv(xp["xattn"], xn, img_embed, cfg, None, None,
+                                    use_rope=False)
+            o = L.attention_core(q, k, v, causal=False, chunk=cfg.attn_chunk)
+            h = h + L.attn_out(xp["xattn"], o, cfg)
+            y = L.mlp_apply(xp["mlp"], L.rmsnorm(h, xp["ln2"], cfg.norm_eps), cfg)
+            return h + y, (ck, cv, k, v)
+        h, (ck, cv, xk, xv) = lax.scan(
+            group, h, (params["blocks"], params["cross_blocks"]))
+        cache = {"self": {"k": ck, "v": cv}, "cross": {"k": xk, "v": xv}}
+    else:
+        raise ValueError(fam)
+
+    h = L.rmsnorm(h[:, -1:, :], params["final_norm"], cfg.norm_eps)
+    return L.unembed_apply(params["embed"], h, cfg)[:, 0], cache

@@ -1,0 +1,380 @@
+"""Transformer building blocks: RMSNorm, RoPE, GQA attention (online-softmax
+chunked — flash-style memory profile in pure jnp), GLU MLPs, embeddings.
+
+All params are plain dicts of jnp arrays; every apply casts to the config's
+compute dtype internally and keeps softmax/norm statistics in fp32.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import LMConfig
+
+Params = dict
+
+
+def cdt(cfg: LMConfig):
+    return jnp.dtype(cfg.compute_dtype)
+
+
+def pdt(cfg: LMConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def _normal(key, shape, stddev, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * stddev).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d: int, dtype) -> jax.Array:
+    return jnp.ones((d,), dtype)
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    y = xf * lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (y * scale.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., S, n_heads, head_dim]; positions: broadcastable to [..., S]."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # [hd/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [..., S, hd/2]
+    cos = jnp.cos(ang)[..., None, :]                    # [..., S, 1, hd/2]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def attn_init(key, cfg: LMConfig, *, cross: bool = False) -> Params:
+    D, hd = cfg.d_model, cfg.head_dim
+    H, KV = cfg.phys_heads, cfg.phys_kv_heads
+    keys = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(D)
+    kv_in = cfg.vision_dim if (cross and cfg.vision_dim and cfg.family == "vlm") else D
+    p = {
+        "wq": _normal(keys[0], (D, H * hd), s, pdt(cfg)),
+        "wk": _normal(keys[1], (kv_in, KV * hd), s, pdt(cfg)),
+        "wv": _normal(keys[2], (kv_in, KV * hd), s, pdt(cfg)),
+        "wo": _normal(keys[3], (H * hd, D), s / math.sqrt(2 * cfg.n_layers), pdt(cfg)),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_init(hd, pdt(cfg))
+        p["k_norm"] = rmsnorm_init(hd, pdt(cfg))
+    return p
+
+
+def project_qkv(p: Params, x: jax.Array, kv_src: jax.Array, cfg: LMConfig,
+                positions: jax.Array | None, kv_positions: jax.Array | None,
+                *, use_rope: bool = True):
+    """Project and (optionally) rotate. Returns q [B,S,H,hd], k/v [B,Skv,KV,hd]."""
+    H, KV, hd = cfg.phys_heads, cfg.phys_kv_heads, cfg.head_dim
+    dt = cdt(cfg)
+    B, S = x.shape[0], x.shape[1]
+    Skv = kv_src.shape[1]
+    q = (x.astype(dt) @ p["wq"].astype(dt)).reshape(B, S, H, hd)
+    k = (kv_src.astype(dt) @ p["wk"].astype(dt)).reshape(B, Skv, KV, hd)
+    v = (kv_src.astype(dt) @ p["wv"].astype(dt)).reshape(B, Skv, KV, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    if use_rope:
+        if positions is None:
+            positions = jnp.arange(S)[None, :]
+        if kv_positions is None:
+            kv_positions = jnp.arange(Skv)[None, :]
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, kv_positions, cfg.rope_theta)
+    return q, k, v
+
+
+def project_q(p: Params, x: jax.Array, cfg: LMConfig) -> jax.Array:
+    """Query-only projection (decode over a precomputed cross-attn cache)."""
+    H, hd = cfg.phys_heads, cfg.head_dim
+    dt = cdt(cfg)
+    B, S = x.shape[0], x.shape[1]
+    q = (x.astype(dt) @ p["wq"].astype(dt)).reshape(B, S, H, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+    return q
+
+
+def attention_core(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                   causal: bool, chunk: int,
+                   q_offset: jax.Array | int = 0,
+                   kv_len: jax.Array | None = None) -> jax.Array:
+    """Online-softmax attention, scanned over KV chunks (flash-style memory).
+
+    q: [B, Sq, H, hd]; k, v: [B, Skv, KV, hd] with H % KV == 0 (GQA).
+    ``q_offset``: absolute position of q[0] (causal masking during decode).
+    ``kv_len``: number of valid kv positions (masks cache tail).
+    Returns [B, Sq, H, hd]; statistics in fp32.
+    """
+    B, Sq, H, hd = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = 1.0 / math.sqrt(hd)
+    qg = q.reshape(B, Sq, KV, G, hd)
+    chunk = min(chunk, Skv)
+    if Skv % chunk:  # pad KV to a chunk multiple; mask the tail via kv_len
+        pad = chunk - Skv % chunk
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        if kv_len is None:
+            kv_len = Skv
+        Skv = Skv + pad
+    n_chunks = Skv // chunk
+    kc = k.reshape(B, n_chunks, chunk, KV, hd)
+    vc = v.reshape(B, n_chunks, chunk, KV, hd)
+    off = jnp.asarray(q_offset)
+    # [Sq] for scalar offsets, [B, Sq] for per-row offsets
+    q_pos = off[..., None] + jnp.arange(Sq) if off.ndim else \
+        off + jnp.arange(Sq)
+
+    def step(qg, q_pos, carry, inp):
+        m, l, acc = carry
+        idx, kb, vb = inp                                  # [B,chunk,KV,hd]
+        s = jnp.einsum("bqkgh,bckh->bqkgc", qg, kb,
+                       preferred_element_type=jnp.float32) * scale
+        kv_pos = idx * chunk + jnp.arange(chunk)
+        # mask is [B, Sq, chunk]; q_pos/kv_len broadcast per-row ([B]) or
+        # batch-uniform (scalar) — continuous batching decodes rows at
+        # different sequence positions through the same step
+        mask = jnp.ones((1, qg.shape[1], chunk), jnp.bool_)
+        if causal:
+            mask = q_pos[..., :, None] >= kv_pos[None, :]
+            if mask.ndim == 2:
+                mask = mask[None]
+        if kv_len is not None:
+            kl = jnp.asarray(kv_len)
+            kl = kl[:, None, None] if kl.ndim == 1 else kl
+            mask = mask & (kv_pos[None, None, :] < kl)
+        s = jnp.where(mask[:, :, None, None, :], s, -jnp.inf)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        # guard fully-masked rows (m_new = -inf): contribute nothing
+        m_safe = jnp.where(jnp.isinf(m_new), 0.0, m_new)
+        # masked lanes carry s = -inf, so exp() already zeroes them — no
+        # second where() (saves one [B,Sq,KV,G,chunk] HBM materialization)
+        p = jnp.exp(s - m_safe[..., None])
+        corr = jnp.where(jnp.isinf(m), 0.0, jnp.exp(m - m_safe))
+        l = l * corr + p.sum(axis=-1)
+        # PV matmul at the model's compute dtype with fp32 accumulate
+        # (flash/MXU practice): for bf16 models this halves the dominant
+        # score-tensor HBM traffic; max |p| ≤ 1 so the cast costs < 2^-8
+        # relative. fp32 callers (tests/oracles) keep the exact path.
+        pv = jnp.einsum("bqkgc,bckh->bqkgh", p.astype(q.dtype),
+                        vb.astype(q.dtype),
+                        preferred_element_type=jnp.float32)
+        acc = acc * corr[..., None] + pv
+        return (m_new, l, acc), None
+
+    def run_scan(qg_i, q_pos_i, kv_hi):
+        """Online-softmax over kv chunks [0, kv_hi) for one q block."""
+        Sq_i = qg_i.shape[1]
+        m0 = jnp.full((B, Sq_i, KV, G), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, Sq_i, KV, G), jnp.float32)
+        a0 = jnp.zeros((B, Sq_i, KV, G, hd), jnp.float32)
+        idxs = jnp.arange(kv_hi)
+        (m, l, acc), _ = lax.scan(
+            partial(step, qg_i, q_pos_i), (m0, l0, a0),
+            (idxs, jnp.moveaxis(kc[:, :kv_hi], 1, 0),
+             jnp.moveaxis(vc[:, :kv_hi], 1, 0)))
+        out = acc / jnp.maximum(l[..., None], 1e-20)
+        return out
+
+    # causal q-splitting: q block i only attends to kv chunks ≤ its upper
+    # end, so later blocks scan longer prefixes — skips the fully-masked
+    # (i, j>i) tiles that cost ~half of a full S x S sweep (38% fewer score
+    # FLOPs/bytes at nq=4; the causal bound is 50%).
+    nq = 4
+    static_offset = isinstance(q_offset, int)
+    if (causal and static_offset and q_offset == 0 and Sq == Skv
+            and kv_len is None and n_chunks % nq == 0 and Sq % nq == 0
+            and n_chunks >= nq and Sq // nq >= 1):
+        outs = []
+        qs = Sq // nq
+        for i in range(nq):
+            qg_i = qg[:, i * qs:(i + 1) * qs]
+            q_pos_i = q_pos[i * qs:(i + 1) * qs]
+            outs.append(run_scan(qg_i, q_pos_i, (i + 1) * (n_chunks // nq)))
+        out = jnp.concatenate(outs, axis=1)
+    else:
+        out = run_scan(qg, q_pos, n_chunks)
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def attn_out(p: Params, o: jax.Array, cfg: LMConfig) -> jax.Array:
+    B, S = o.shape[0], o.shape[1]
+    dt = cdt(cfg)
+    return o.reshape(B, S, -1) @ p["wo"].astype(dt)
+
+
+def self_attention(p: Params, x: jax.Array, cfg: LMConfig, *,
+                   causal: bool = True,
+                   positions: jax.Array | None = None) -> jax.Array:
+    q, k, v = project_qkv(p, x, x, cfg, positions, positions)
+    o = attention_core(q, k, v, causal=causal, chunk=cfg.attn_chunk)
+    return attn_out(p, o, cfg)
+
+
+def cross_attention(p: Params, x: jax.Array, memory: jax.Array,
+                    cfg: LMConfig) -> jax.Array:
+    """memory: [B, Sm, D_mem] (already projected modality embeddings)."""
+    q, k, v = project_qkv(p, x, memory, cfg, None, None, use_rope=False)
+    o = attention_core(q, k, v, causal=False, chunk=cfg.attn_chunk)
+    return attn_out(p, o, cfg)
+
+
+# --- decode-path attention over a cache --------------------------------
+
+def decode_attention(p: Params, x: jax.Array, cache_k: jax.Array,
+                     cache_v: jax.Array, pos: jax.Array, cfg: LMConfig,
+                     ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token attention: x [B,1,D]; cache_k/v [B, Smax, KV, hd].
+
+    ``pos`` is the index the new token writes to; positions ≥ pos mask out.
+    Scalar pos = lockstep batch; **[B] pos = continuous batching** (each
+    slot at its own sequence length — rope, cache write, and the kv mask
+    are all per-row).
+    """
+    per_row = pos.ndim == 1
+    rope_pos = pos[:, None] if per_row else pos[None, None]
+    q, k, v = project_qkv(p, x, x, cfg, rope_pos, rope_pos)
+    cache_k = _cache_write(cache_k, k, pos)
+    cache_v = _cache_write(cache_v, v, pos)
+    o = attention_core(q, cache_k.astype(q.dtype), cache_v.astype(q.dtype),
+                       causal=False, chunk=cfg.attn_chunk, q_offset=pos,
+                       kv_len=pos + 1)
+    return attn_out(p, o, cfg), cache_k, cache_v
+
+
+def _cache_write(cache: jax.Array, new: jax.Array, pos: jax.Array) -> jax.Array:
+    """cache [B, Smax, KV, hd] ← new [B, 1, KV, hd] at position pos
+    (scalar, or [B] for per-row slots)."""
+    new = new.astype(cache.dtype)
+    if pos.ndim == 1:
+        return jax.vmap(
+            lambda c, n, p: lax.dynamic_update_slice(
+                c, n, (p.astype(jnp.int32), 0, 0)))(cache, new, pos)
+    return lax.dynamic_update_slice(
+        cache, new, (0, pos.astype(jnp.int32), 0, 0))
+
+
+# ---------------------------------------------------------------------------
+# MLP (GLU)
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, cfg: LMConfig, d_ff: int | None = None) -> Params:
+    D, F = cfg.d_model, d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    s = 1.0 / math.sqrt(D)
+    return {
+        "wg": _normal(k1, (D, F), s, pdt(cfg)),
+        "wu": _normal(k2, (D, F), s, pdt(cfg)),
+        "wd": _normal(k3, (F, D), (1.0 / math.sqrt(F)) / math.sqrt(2 * cfg.n_layers),
+                      pdt(cfg)),
+    }
+
+
+def _act(x: jax.Array, kind: str) -> jax.Array:
+    if kind == "silu":
+        return jax.nn.silu(x)
+    if kind == "gelu":
+        return jax.nn.gelu(x)
+    raise ValueError(kind)
+
+
+def mlp_apply(p: Params, x: jax.Array, cfg: LMConfig) -> jax.Array:
+    dt = cdt(cfg)
+    x = x.astype(dt)
+    h = _act(x @ p["wg"].astype(dt), cfg.act) * (x @ p["wu"].astype(dt))
+    return h @ p["wd"].astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# embeddings / unembedding
+# ---------------------------------------------------------------------------
+
+def embed_init(key, cfg: LMConfig) -> Params:
+    V, D = cfg.phys_vocab, cfg.d_model
+    k1, k2 = jax.random.split(key)
+    p = {"embedding": _normal(k1, (V, D), 1.0, pdt(cfg))}
+    if not cfg.tie_embeddings:
+        p["unembed"] = _normal(k2, (D, V), 1.0 / math.sqrt(D), pdt(cfg))
+    return p
+
+
+def embed_apply(p: Params, tokens: jax.Array, cfg: LMConfig) -> jax.Array:
+    return jnp.take(p["embedding"], tokens, axis=0).astype(cdt(cfg))
+
+
+def unembed_apply(p: Params, x: jax.Array, cfg: LMConfig) -> jax.Array:
+    dt = cdt(cfg)
+    if cfg.tie_embeddings:
+        logits = x.astype(dt) @ p["embedding"].T.astype(dt)
+    else:
+        logits = x.astype(dt) @ p["unembed"].astype(dt)
+    # mask padded vocab entries
+    if cfg.phys_vocab != cfg.vocab_size:
+        mask = jnp.arange(cfg.phys_vocab) < cfg.vocab_size
+        logits = jnp.where(mask, logits, -jnp.inf)
+    return logits
+
+
+def softmax_cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """logits [..., V] (may contain -inf pad-mask), labels [...]. fp32 math."""
+    lf = logits.astype(jnp.float32)
+    lf = jnp.where(jnp.isinf(lf), -1e30, lf)
+    lse = jax.scipy.special.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    return lse - gold
+
+
+def chunked_cross_entropy(p_embed: Params, h: jax.Array, labels: jax.Array,
+                          cfg, seq_chunk: int = 256) -> jax.Array:
+    """Mean CE without materializing [B, S, V] logits.
+
+    Scans over sequence chunks; each step computes logits for ``seq_chunk``
+    positions, reduces to (lse − gold), and discards them. Cuts peak
+    activation memory by S/seq_chunk — the difference between fitting and
+    not fitting HBM for 200k-vocab archs at 4k×256 batches.
+    """
+    B, S, D = h.shape
+    seq_chunk = min(seq_chunk, S)
+    assert S % seq_chunk == 0, (S, seq_chunk)
+    n = S // seq_chunk
+    hc = jnp.moveaxis(h.reshape(B, n, seq_chunk, D), 1, 0)
+    lc = jnp.moveaxis(labels.reshape(B, n, seq_chunk), 1, 0)
+
+    def step(tot, inp):
+        hb, lb = inp
+        logits = unembed_apply(p_embed, hb, cfg)
+        ce = softmax_cross_entropy(logits, lb)
+        return tot + ce.sum(), None
+
+    tot, _ = lax.scan(step, jnp.zeros((), jnp.float32), (hc, lc))
+    return tot / (B * S)

@@ -1,0 +1,151 @@
+"""Mixture-of-Experts layer: top-k routing with capacity, scatter-based
+dispatch (GShard-style but without the O(T·E·C) one-hot dispatch tensor —
+tokens are scattered into [E, C, D] buffers by rank, which stays feasible at
+million-token global batches).
+
+Sharding modes (decided by the sharding rules, not here):
+  * EP  — expert axis sharded over "model" (granite: 32 experts / 16)
+  * TP  — per-expert d_ff sharded over "model" (grok: 8 experts < 16)
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LMConfig
+from repro.nn.layers import _act, _normal, cdt, pdt
+
+Params = dict
+
+
+def moe_init(key, cfg: LMConfig) -> Params:
+    D, F, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    k0, k1, k2, k3 = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(D)
+    return {
+        "router": _normal(k0, (D, E), s, jnp.float32),   # router in fp32
+        "wg": _normal(k1, (E, D, F), s, pdt(cfg)),
+        "wu": _normal(k2, (E, D, F), s, pdt(cfg)),
+        "wd": _normal(k3, (E, F, D),
+                      (1.0 / math.sqrt(F)) / math.sqrt(2 * cfg.n_layers), pdt(cfg)),
+    }
+
+
+def capacity(n_tokens: int, cfg: LMConfig) -> int:
+    c = int(math.ceil(n_tokens * cfg.top_k * cfg.capacity_factor / cfg.n_experts))
+    return max(8, -(-c // 8) * 8)   # round up to 8
+
+
+def _batch_groups(total_tokens: int) -> int:
+    """Dispatch group count = number of batch shards in the ambient mesh.
+
+    GShard-style locality: capacity is enforced PER GROUP so the rank
+    cumsum and the dispatch scatter never cross a data shard — without
+    grouping, GSPMD must materialize the global [T·K, D] dispatch on every
+    device and all-reduce it (measured: 65% of granite-moe's collective
+    bytes and 14x its per-device memory traffic).
+    """
+    from jax.interpreters import pxla
+    import numpy as np
+    mesh = pxla.thread_resources.env.physical_mesh
+    if mesh.empty:
+        return 1
+    shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    g = int(np.prod([shape[a] for a in ("pod", "data") if a in shape]))
+    return g if g > 1 and total_tokens % g == 0 else 1
+
+
+def _shard_moe(x: jax.Array, *spec_tail) -> jax.Array:
+    """Constraint helper: leading group axis over batch axes."""
+    from jax.interpreters import pxla
+    mesh = pxla.thread_resources.env.physical_mesh
+    if mesh.empty or x.shape[0] == 1:
+        return x
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    if not axes:
+        return x
+    from jax.sharding import PartitionSpec as P
+    return jax.lax.with_sharding_constraint(
+        x, P(axes if len(axes) > 1 else axes[0], *spec_tail))
+
+
+def moe_apply(p: Params, x: jax.Array, cfg: LMConfig,
+              groups: int | None = None) -> tuple[jax.Array, dict]:
+    """x: [B, S, D] → (y [B, S, D], aux with load-balance loss + stats).
+
+    Grouped (locality-first) dispatch: tokens are split into ``groups``
+    independent dispatch groups (defaulting to the mesh's batch-shard
+    count); capacity, ranking, and the scatter/gather all stay inside a
+    group. The only cross-device movement is the [G, E, Cg, D] buffer
+    transpose to expert-major — an all-to-all over the EP axis.
+    """
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    T = B * S
+    G = groups if groups is not None else _batch_groups(T)
+    Tg = T // G
+    Cg = capacity(Tg, cfg)
+    dt = cdt(cfg)
+    xg = _shard_moe(x.reshape(G, Tg, D))
+
+    logits = xg.astype(jnp.float32) @ p["router"]            # [G, Tg, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)          # [G, Tg, K]
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(axis=-1, keepdims=True), 1e-9)
+
+    # --- rank within (group, expert): capacity enforcement --------------
+    # choice-major order so top-1 assignments win capacity slots first.
+    flat_e = jnp.swapaxes(expert_idx, 1, 2).reshape(G, K * Tg)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)      # [G, K*Tg, E]
+    ranks = jnp.cumsum(onehot, axis=1) - onehot              # rank in expert
+    rank = jnp.sum(ranks * onehot, axis=-1)                  # [G, K*Tg]
+    keep = rank < Cg
+    # aux: load-balance loss (Switch) + drop fraction
+    density = jnp.mean(jax.nn.one_hot(expert_idx[..., 0], E,
+                                      dtype=jnp.float32), axis=(0, 1))
+    density_prob = jnp.mean(probs, axis=(0, 1))
+    lb_loss = E * jnp.sum(density * density_prob)
+    aux = {"lb_loss": lb_loss,
+           "drop_frac": 1.0 - jnp.mean(keep.astype(jnp.float32))}
+
+    # --- scatter tokens into per-group [E*Cg, D] buffers -----------------
+    slot = flat_e * Cg + jnp.minimum(rank, Cg - 1)           # [G, K*Tg]
+    tok = jnp.tile(jnp.arange(Tg), K)                        # [K*Tg]
+    contrib = jnp.where(keep, 1.0, 0.0).astype(dt)           # [G, K*Tg]
+    src = xg.astype(dt)[:, tok, :] * contrib[..., None]      # [G, K*Tg, D]
+
+    def scatter_one(slots_g, src_g):
+        return jnp.zeros((E * Cg, D), dt).at[slots_g].add(src_g)
+    buf = jax.vmap(scatter_one)(slot, src)                   # [G, E*Cg, D]
+    buf = buf.reshape(G, E, Cg, D)
+
+    # --- expert FFN: transpose to expert-major (EP all-to-all) ----------
+    bufe = jnp.swapaxes(buf, 0, 1).reshape(E, G * Cg, D)
+    if E % max(cfg.tp_multiple, 1) == 0:
+        from jax.interpreters import pxla
+        if not pxla.thread_resources.env.physical_mesh.empty:
+            from jax.sharding import PartitionSpec as P
+            mesh = pxla.thread_resources.env.physical_mesh
+            if "model" in mesh.axis_names:
+                bufe = jax.lax.with_sharding_constraint(
+                    bufe, P("model", None, None))
+    h = _act(jnp.einsum("ecd,edf->ecf", bufe, p["wg"].astype(dt)), cfg.act)
+    h = h * jnp.einsum("ecd,edf->ecf", bufe, p["wu"].astype(dt))
+    out = jnp.einsum("ecf,efd->ecd", h, p["wd"].astype(dt))  # [E, G*Cg, D]
+
+    # --- transpose back + per-group gather/combine -----------------------
+    outg = _shard_moe(jnp.swapaxes(out.reshape(E, G, Cg, D), 0, 1)
+                      .reshape(G, E * Cg, D))
+
+    w = (jnp.swapaxes(gate_vals, 1, 2).reshape(G, K * Tg) *
+         jnp.where(keep, 1.0, 0.0)).astype(dt)               # [G, K*Tg]
+
+    def gather_one(out_g, slots_g, w_g):
+        gathered = out_g[slots_g]                            # [K*Tg, D]
+        return jnp.zeros((Tg, D), dt).at[tok].add(gathered * w_g[:, None])
+    y = jax.vmap(gather_one)(outg, slot, w)                  # [G, Tg, D]
+    return y.reshape(B, S, D), aux

@@ -1,0 +1,227 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060) block.
+
+Train/prefill path is the chunked SSD algorithm: quadratic attention-like
+term inside fixed-size chunks + a linear recurrence across chunk states.
+Decode path carries (conv_state, ssm_state) and costs O(1) per token — this
+is what makes the long_500k shape runnable for ssm/hybrid archs.
+
+Projections are kept *split* (wz / wx / wbc / wdt instead of one fused
+in_proj) so each output lands on a cleanly shardable axis: d_inner and the
+SSD head count shard over "model"; the small B/C projections replicate.
+Depthwise conv is per-channel, so splitting x from B/C is exact.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import LMConfig
+from repro.nn.layers import _normal, cdt, pdt, rmsnorm
+
+Params = dict
+
+
+def ssm_dims(cfg: LMConfig) -> dict:
+    di = cfg.ssm_inner
+    gn = cfg.ssm_groups * cfg.ssm_state
+    return dict(di=di, gn=gn, nh=cfg.ssm_nheads, hp=cfg.ssm_head_dim)
+
+
+def ssm_init(key, cfg: LMConfig) -> Params:
+    d = ssm_dims(cfg)
+    D = cfg.d_model
+    keys = jax.random.split(key, 6)
+    s = 1.0 / math.sqrt(D)
+    dt_init = jnp.log(jnp.exp(jnp.linspace(1e-3, 0.1, d["nh"])) - 1.0)  # inv softplus
+    return {
+        "wz": _normal(keys[0], (D, d["di"]), s, pdt(cfg)),
+        "wx": _normal(keys[1], (D, d["di"]), s, pdt(cfg)),
+        "wbc": _normal(keys[2], (D, 2 * d["gn"]), s, pdt(cfg)),
+        "wdt": _normal(keys[3], (D, d["nh"]), s, pdt(cfg)),
+        "conv_wx": _normal(keys[4], (cfg.ssm_conv, d["di"]), 0.2, pdt(cfg)),
+        "conv_bx": jnp.zeros((d["di"],), pdt(cfg)),
+        "conv_wbc": _normal(keys[5], (cfg.ssm_conv, 2 * d["gn"]), 0.2, pdt(cfg)),
+        "conv_bbc": jnp.zeros((2 * d["gn"],), pdt(cfg)),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, d["nh"])).astype(jnp.float32),
+        "D_skip": jnp.ones((d["nh"],), jnp.float32),
+        "dt_bias": dt_init.astype(jnp.float32),
+        "norm": jnp.ones((d["di"],), pdt(cfg)),
+        "out_proj": _normal(keys[2], (d["di"], D),
+                            (1.0 / math.sqrt(d["di"])) / math.sqrt(2 * cfg.n_layers),
+                            pdt(cfg)),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv. x [B,S,C], w [K,C] → [B,S,C]."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(K))
+    return out + b
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """a: [..., L] log-decay increments → [..., L, L] lower-tri cumulative sums
+    S[i,j] = sum_{k=j+1..i} a_k  (i ≥ j), -inf above diagonal."""
+    L = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+                C: jax.Array, chunk: int,
+                initial_state: jax.Array | None = None
+                ) -> tuple[jax.Array, jax.Array]:
+    """SSD scan.
+
+    x [b,s,h,p], dt [b,s,h] (post-softplus), A [h] (negative),
+    B, C [b,s,g,n] with h % g == 0. Returns (y [b,s,h,p], state [b,h,p,n]).
+    """
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    hr = h // g
+    chunk = min(chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    f32 = jnp.float32
+
+    xc = x.reshape(b, nc, chunk, h, p).astype(f32)
+    dtc = dt.reshape(b, nc, chunk, h).astype(f32)
+    Bc = B.reshape(b, nc, chunk, g, n).astype(f32)
+    Cc = C.reshape(b, nc, chunk, g, n).astype(f32)
+
+    a = dtc * A                                              # [b,nc,L,h] ≤ 0
+    a_cs = jnp.cumsum(a, axis=2)                             # [b,nc,L,h]
+
+    # ---- intra-chunk (quadratic within chunk) --------------------------
+    seg = _segsum(jnp.moveaxis(a, 2, -1))                    # [b,nc,h,L,L]
+    decay = jnp.exp(seg)
+    scores = jnp.einsum("bclgn,bcmgn->bcglm", Cc, Bc)        # [b,nc,g,L,L]
+    scores = jnp.repeat(scores, hr, axis=2)                  # g → h
+    scores = scores * decay * jnp.moveaxis(dtc, 2, -1)[..., None, :]
+    y_intra = jnp.einsum("bchlm,bcmhp->bclhp", scores, xc)
+
+    # ---- chunk states ----------------------------------------------------
+    decay_end = jnp.exp(a_cs[:, :, -1:, :] - a_cs)           # [b,nc,L,h]
+    Bh = jnp.repeat(Bc, hr, axis=3)                          # [b,nc,L,h,n]
+    S_chunk = jnp.einsum("bclhn,bclh,bclhp->bchpn",
+                         Bh, dtc * decay_end, xc)            # [b,nc,h,p,n]
+
+    # ---- inter-chunk recurrence -----------------------------------------
+    chunk_decay = jnp.exp(a_cs[:, :, -1, :])                 # [b,nc,h]
+    s0 = (initial_state.astype(f32) if initial_state is not None
+          else jnp.zeros((b, h, p, n), f32))
+
+    def step(state, inp):
+        cd, sc = inp                                          # [b,h], [b,h,p,n]
+        prev = state
+        state = state * cd[..., None, None] + sc
+        return state, prev
+
+    final, prev_states = lax.scan(
+        step, s0, (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(S_chunk, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)            # [b,nc,h,p,n]
+
+    Ch = jnp.repeat(Cc, hr, axis=3)                          # [b,nc,L,h,n]
+    y_inter = jnp.einsum("bclhn,bclh,bchpn->bclhp",
+                         Ch, jnp.exp(a_cs), prev_states)
+    y = (y_intra + y_inter).reshape(b, s, h, p)
+    return y.astype(x.dtype), final
+
+
+def _project(p: Params, x: jax.Array, cfg: LMConfig):
+    """Shared projection path. x [B,S,D] → (z, x_raw, bc_raw, dt_raw)."""
+    dt_ = cdt(cfg)
+    x = x.astype(dt_)
+    z = x @ p["wz"].astype(dt_)
+    xr = x @ p["wx"].astype(dt_)
+    bc = x @ p["wbc"].astype(dt_)
+    dtr = x @ p["wdt"].astype(dt_)
+    return z, xr, bc, dtr
+
+
+def ssm_block_apply(p: Params, x: jax.Array, cfg: LMConfig,
+                    chunk: int = 128) -> jax.Array:
+    """Full Mamba-2 block (training). x: [B, S, D] → [B, S, D]."""
+    y, _, _ = _ssm_block_full(p, x, cfg, chunk)
+    return y
+
+
+def _ssm_block_full(p: Params, x: jax.Array, cfg: LMConfig, chunk: int = 128):
+    """Returns (out, final ssm state, conv tails) — prefill needs all three."""
+    d = ssm_dims(cfg)
+    dt_ = cdt(cfg)
+    B_, S_, _ = x.shape
+    z, x_raw, bc_raw, dt_raw = _project(p, x, cfg)
+    xs = jax.nn.silu(_causal_conv(x_raw, p["conv_wx"].astype(dt_),
+                                  p["conv_bx"].astype(dt_)))
+    bcs = jax.nn.silu(_causal_conv(bc_raw, p["conv_wbc"].astype(dt_),
+                                   p["conv_bbc"].astype(dt_)))
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    xh = xs.reshape(B_, S_, d["nh"], d["hp"])
+    Bm = bcs[..., :d["gn"]].reshape(B_, S_, cfg.ssm_groups, cfg.ssm_state)
+    Cm = bcs[..., d["gn"]:].reshape(B_, S_, cfg.ssm_groups, cfg.ssm_state)
+    y, state = ssd_chunked(xh, dt, A, Bm, Cm, chunk)
+    y = y + p["D_skip"].astype(y.dtype)[:, None] * xh
+    y = y.reshape(B_, S_, d["di"])
+    y = rmsnorm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = y @ p["out_proj"].astype(dt_)
+    K = cfg.ssm_conv
+    tails = {"x": x_raw[:, -(K - 1):, :], "bc": bc_raw[:, -(K - 1):, :]}
+    return out, state, tails
+
+
+# ---------------------------------------------------------------------------
+# decode path — O(1) per token
+# ---------------------------------------------------------------------------
+
+def ssm_init_cache(cfg: LMConfig, batch: int, dtype) -> dict:
+    d = ssm_dims(cfg)
+    return {
+        "conv_x": jnp.zeros((batch, cfg.ssm_conv - 1, d["di"]), dtype),
+        "conv_bc": jnp.zeros((batch, cfg.ssm_conv - 1, 2 * d["gn"]), dtype),
+        "state": jnp.zeros((batch, d["nh"], d["hp"], cfg.ssm_state), jnp.float32),
+    }
+
+
+def ssm_block_decode(p: Params, x: jax.Array, cache: dict, cfg: LMConfig
+                     ) -> tuple[jax.Array, dict]:
+    """x: [B, 1, D] one token. Returns (y [B,1,D], new cache)."""
+    d = ssm_dims(cfg)
+    dt_ = cdt(cfg)
+    B_ = x.shape[0]
+    z, x_raw, bc_raw, dt_raw = _project(p, x[:, 0:1], cfg)
+    z, x_raw, bc_raw, dt_raw = z[:, 0], x_raw[:, 0], bc_raw[:, 0], dt_raw[:, 0]
+
+    def conv_step(win_cache, new, w, b):
+        win = jnp.concatenate([win_cache, new[:, None, :]], axis=1)  # [B,K,C]
+        out = jnp.einsum("bkc,kc->bc", win.astype(dt_), w.astype(dt_)) + b.astype(dt_)
+        return jax.nn.silu(out), win[:, 1:, :]
+
+    xs, new_cx = conv_step(cache["conv_x"], x_raw, p["conv_wx"], p["conv_bx"])
+    bcs, new_cbc = conv_step(cache["conv_bc"], bc_raw, p["conv_wbc"], p["conv_bbc"])
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # [B,nh]
+    A = -jnp.exp(p["A_log"])
+    hr = d["nh"] // cfg.ssm_groups
+    xh = xs.reshape(B_, d["nh"], d["hp"]).astype(jnp.float32)
+    Bm = jnp.repeat(bcs[..., :d["gn"]].reshape(B_, cfg.ssm_groups, cfg.ssm_state),
+                    hr, axis=1).astype(jnp.float32)
+    Cm = jnp.repeat(bcs[..., d["gn"]:].reshape(B_, cfg.ssm_groups, cfg.ssm_state),
+                    hr, axis=1).astype(jnp.float32)
+
+    decay = jnp.exp(dt * A)                                   # [B,nh]
+    state = cache["state"] * decay[..., None, None] + \
+        jnp.einsum("bh,bhn,bhp->bhpn", dt, Bm, xh)
+    y = jnp.einsum("bhn,bhpn->bhp", Cm, state)
+    y = y + p["D_skip"][:, None] * xh
+    y = y.reshape(B_, d["di"]).astype(dt_)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    y = (y @ p["out_proj"].astype(dt_))[:, None, :]
+    return y, {"conv_x": new_cx, "conv_bc": new_cbc, "state": state}

@@ -1,0 +1,134 @@
+"""Optimizers from scratch (no optax offline): AdamW, SGD(+momentum),
+global-norm clipping, LR schedules. Functional API:
+
+    opt = adamw(lr=3e-4)
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    params = apply_updates(params, updates)
+
+States are plain pytrees so they shard/checkpoint like params. The `pspec_fn`
+hook lets the sharding layer assign ZeRO-1 partition specs to state leaves.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+Schedule = Callable[[jax.Array], jax.Array]
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, PyTree], tuple[PyTree, PyTree]]
+
+
+def constant_schedule(lr: float) -> Schedule:
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_schedule(lr: float, total_steps: int, final_frac: float = 0.1) -> Schedule:
+    def fn(step):
+        t = jnp.clip(step / max(total_steps, 1), 0.0, 1.0)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return lr * (final_frac + (1 - final_frac) * cos)
+    return fn
+
+
+def warmup_cosine(lr: float, warmup_steps: int, total_steps: int,
+                  final_frac: float = 0.1) -> Schedule:
+    cos = cosine_schedule(lr, max(total_steps - warmup_steps, 1), final_frac)
+    def fn(step):
+        warm = lr * step / max(warmup_steps, 1)
+        return jnp.where(step < warmup_steps, warm, cos(step - warmup_steps))
+    return fn
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> tuple[PyTree, jax.Array]:
+    leaves = jax.tree.leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / (gnorm + 1e-9))
+    return jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads), gnorm
+
+
+def adamw(lr: float | Schedule = 1e-3, b1: float = 0.9, b2: float = 0.999,
+          eps: float = 1e-8, weight_decay: float = 0.01,
+          mask_fn: Callable[[str], bool] | None = None) -> Optimizer:
+    """AdamW. `mask_fn(path)` returns False to disable weight decay on a leaf
+    (biases/norms). Moments are fp32 regardless of param dtype."""
+    sched = lr if callable(lr) else constant_schedule(lr)
+
+    def init(params):
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return {"mu": zeros,
+                "nu": jax.tree.map(jnp.zeros_like, zeros),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr_t = sched(step)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                          state["mu"], grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) *
+                          jnp.square(g.astype(jnp.float32)), state["nu"], grads)
+
+        from repro.utils import tree_map_with_path
+
+        def upd(path, p):
+            m = _get(mu, path)
+            v = _get(nu, path)
+            u = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            wd = weight_decay if (mask_fn is None or mask_fn(path)) else 0.0
+            return (-(lr_t * (u + wd * p.astype(jnp.float32)))).astype(p.dtype)
+
+        updates = tree_map_with_path(upd, params)
+        return updates, {"mu": mu, "nu": nu, "step": step}
+
+    return Optimizer(init=init, update=update)
+
+
+def _get(tree: PyTree, path: str):
+    cur = tree
+    for part in path.split("/"):
+        if isinstance(cur, dict):
+            cur = cur[part]
+        elif isinstance(cur, (list, tuple)):
+            cur = cur[int(part)]
+        else:  # pragma: no cover
+            raise KeyError(path)
+    return cur
+
+
+def sgd(lr: float | Schedule = 1e-2, momentum: float = 0.9,
+        nesterov: bool = False) -> Optimizer:
+    sched = lr if callable(lr) else constant_schedule(lr)
+
+    def init(params):
+        return {"mom": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr_t = sched(step)
+        mom = jax.tree.map(lambda m, g: momentum * m + g.astype(jnp.float32),
+                           state["mom"], grads)
+        if nesterov:
+            eff = jax.tree.map(lambda m, g: momentum * m + g.astype(jnp.float32),
+                               mom, grads)
+        else:
+            eff = mom
+        updates = jax.tree.map(lambda e, p: (-(lr_t * e)).astype(p.dtype), eff, params)
+        return updates, {"mom": mom, "step": step}
+
+    return Optimizer(init=init, update=update)
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    return jax.tree.map(lambda p, u: p + u, params, updates)

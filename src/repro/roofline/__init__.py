@@ -1,0 +1,2 @@
+from repro.roofline.hlo import collective_bytes, parse_hlo_collectives  # noqa: F401
+from repro.roofline.model import HW_V5E, roofline_terms  # noqa: F401

@@ -1,0 +1,430 @@
+"""Loop-aware cost model over post-SPMD optimized HLO text.
+
+``compiled.cost_analysis()`` counts while-loop bodies ONCE — useless for
+scan-over-layers programs (a 64-layer model reports 1/64 of its FLOPs). This
+module re-derives the three roofline inputs directly from the HLO:
+
+  * MXU FLOPs:   2 · numel(result) · contraction for every ``dot`` (+convs),
+  * bytes:       operand + result bytes of every non-fused instruction
+                 (fusions count their boundary, not their interior — interior
+                 ops never touch HBM),
+  * collective bytes: operand bytes of all-gather / all-reduce /
+                 reduce-scatter / all-to-all / collective-permute, split
+                 intra- vs cross-pod via replica_groups,
+
+with every while body multiplied by its ``known_trip_count`` backend config
+(jax scans always carry it). Computation costs are memoized; call graphs are
+DAGs so this is linear in HLO size.
+"""
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3": 1, "f8e5m2fnuz": 1, "f8e4m3b11fnuz": 1, "token": 0,
+    "u1": 1, "s1": 1,
+}
+
+_COLLECTIVE_KINDS = ("all-reduce", "all-gather", "reduce-scatter",
+                     "all-to-all", "collective-permute")
+
+_TYPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s+\((.*)\)\s*->")
+_INSTR_RE = re.compile(r"^\s+(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*)$")
+_TRIP_RE = re.compile(r'known_trip_count[^\d]*(\d+)')
+_CALLS_RE = re.compile(r"calls=%?([\w\.\-]+)")
+_TO_APPLY_RE = re.compile(r"to_apply=%?([\w\.\-]+)")
+_WHILE_RE = re.compile(r"condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)")
+_GROUPS_RE = re.compile(r"replica_groups=\{(.*?)\}[,)\s]")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_OPERANDS_RE = re.compile(r"%([\w\.\-]+)")
+
+
+def _shapes_of(type_str: str) -> list[tuple[str, tuple[int, ...]]]:
+    out = []
+    for m in _TYPE_RE.finditer(type_str):
+        dims = tuple(int(d) for d in m.group(2).split(",")) if m.group(2) else ()
+        out.append((m.group(1), dims))
+    return out
+
+
+def _bytes_of(type_str: str) -> int:
+    total = 0
+    for dt, dims in _shapes_of(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class _Instr:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str           # text after the opcode's '(' (operands + attrs)
+    line: str
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: dict = field(default_factory=dict)        # kind -> bytes
+    coll_count: dict = field(default_factory=dict)  # kind -> count
+    cross_pod: float = 0.0
+    intra_pod: float = 0.0
+
+    def __iadd__(self, o: "Cost"):
+        self.flops += o.flops
+        self.bytes += o.bytes
+        for k, v in o.coll.items():
+            self.coll[k] = self.coll.get(k, 0) + v
+        for k, v in o.coll_count.items():
+            self.coll_count[k] = self.coll_count.get(k, 0) + v
+        self.cross_pod += o.cross_pod
+        self.intra_pod += o.intra_pod
+        return self
+
+    def scaled(self, n: float) -> "Cost":
+        return Cost(self.flops * n, self.bytes * n,
+                    {k: v * n for k, v in self.coll.items()},
+                    {k: v * n for k, v in self.coll_count.items()},
+                    self.cross_pod * n, self.intra_pod * n)
+
+    @property
+    def collective_bytes(self) -> float:
+        return float(sum(self.coll.values()))
+
+    def as_dict(self) -> dict:
+        return {
+            "flops": self.flops,
+            "bytes_accessed": self.bytes,
+            "total_bytes": self.collective_bytes,
+            "bytes_by_kind": {k: float(v) for k, v in self.coll.items()},
+            "count_by_kind": {k: float(v) for k, v in self.coll_count.items()},
+            "cross_pod_bytes": float(self.cross_pod),
+            "intra_pod_bytes": float(self.intra_pod),
+        }
+
+
+def _split_computations(text: str) -> dict[str, list[_Instr]]:
+    comps: dict[str, list[_Instr]] = {}
+    cur: list[_Instr] | None = None
+    cur_name = None
+    for line in text.splitlines():
+        hdr = _COMP_HDR_RE.match(line)
+        if hdr and ("{" in line or line.rstrip().endswith("->")):
+            cur_name = hdr.group(1)
+            cur = []
+            comps[cur_name] = cur
+            # register the computation's parameters from the signature
+            sig = hdr.group(2)
+            for pm in re.finditer(r"([\w\.\-]+)\s*:\s*(\(?[^,()]*(?:\([^)]*\))?"
+                                  r"[^,]*)", sig):
+                pass   # parameter types handled via 'parameter' instructions
+            continue
+        if cur is None:
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.group(1), m.group(2)
+        # result type: leading tuple-paren or single token
+        if rhs.startswith("("):
+            depth, i = 0, 0
+            for i, ch in enumerate(rhs):
+                depth += ch == "("
+                depth -= ch == ")"
+                if depth == 0:
+                    break
+            type_str = rhs[:i + 1]
+            tail = rhs[i + 1:].strip()
+        else:
+            type_str, _, tail = rhs.partition(" ")
+        # opcode = first word of tail, its args follow in parens
+        paren = tail.find("(")
+        if paren < 0:
+            continue
+        opcode = tail[:paren].strip()
+        rest = tail[paren + 1:]
+        comps[cur_name].append(_Instr(name, type_str, opcode, rest, line))
+    return comps
+
+
+def _sig_param_types(text: str) -> dict[str, dict[str, str]]:
+    """computation -> param name -> type str (from signatures)."""
+    out: dict[str, dict[str, str]] = {}
+    for line in text.splitlines():
+        hdr = _COMP_HDR_RE.match(line)
+        if not hdr:
+            continue
+        comp, sig = hdr.group(1), hdr.group(2)
+        params: dict[str, str] = {}
+        depth = 0
+        token = ""
+        parts = []
+        for ch in sig:
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+            if ch == "," and depth == 0:
+                parts.append(token)
+                token = ""
+            else:
+                token += ch
+        if token.strip():
+            parts.append(token)
+        for part in parts:
+            if ":" not in part:
+                continue
+            pname, ptype = part.split(":", 1)
+            params[pname.strip().lstrip("%")] = ptype.strip()
+        out[comp] = params
+    return out
+
+
+def _dot_flops(instr: _Instr, table: dict[str, str]) -> float:
+    result_elems = 1
+    shapes = _shapes_of(instr.type_str)
+    if not shapes:
+        return 0.0
+    for d in shapes[0][1]:
+        result_elems *= d
+    cm = _CONTRACT_RE.search(instr.rest)
+    ops = _OPERANDS_RE.findall(instr.rest.split(")")[0])
+    contraction = 1
+    if cm and ops:
+        lhs_type = table.get(ops[0])
+        if lhs_type:
+            lhs_shapes = _shapes_of(lhs_type)
+            if lhs_shapes:
+                dims = lhs_shapes[0][1]
+                for idx in (int(x) for x in cm.group(1).split(",") if x):
+                    if idx < len(dims):
+                        contraction *= dims[idx]
+    return 2.0 * result_elems * contraction
+
+
+def _conv_flops(instr: _Instr, table: dict[str, str]) -> float:
+    shapes = _shapes_of(instr.type_str)
+    if not shapes:
+        return 0.0
+    result_elems = 1
+    for d in shapes[0][1]:
+        result_elems *= d
+    ops = _OPERANDS_RE.findall(instr.rest.split(")")[0])
+    if len(ops) < 2 or ops[1] not in table:
+        return 2.0 * result_elems   # unknown kernel: lower bound
+    k_shapes = _shapes_of(table[ops[1]])
+    if not k_shapes:
+        return 2.0 * result_elems
+    kdims = k_shapes[0][1]
+    k_elems = 1
+    for d in kdims:
+        k_elems *= d
+    # per output element: kernel_elems / out_channels MACs (feature dim last)
+    out_feat = kdims[-1] if kdims else 1
+    return 2.0 * result_elems * (k_elems / max(out_feat, 1))
+
+
+def _is_cross_pod(line: str, pod_stride: int) -> bool | None:
+    m = _GROUPS_RE.search(line)
+    if not m:
+        return None
+    for grp in re.findall(r"\{([\d,\s]*)\}", "{" + m.group(1) + "}"):
+        ids = [int(x) for x in grp.replace(" ", "").split(",") if x]
+        if len(ids) >= 2 and (max(ids) // pod_stride) != (min(ids) // pod_stride):
+            return True
+    return False
+
+
+class HloCostModel:
+    def __init__(self, hlo_text: str, pod_stride: int = 256):
+        self.comps = _split_computations(hlo_text)
+        self.sig_params = _sig_param_types(hlo_text)
+        self.pod_stride = pod_stride
+        self._memo: dict[str, Cost] = {}
+        self._fused: set[str] = set()
+        # fused computations: bodies of fusion ops — their interior doesn't
+        # touch HBM; FLOPs inside still count.
+        for comp, instrs in self.comps.items():
+            for ins in instrs:
+                if ins.opcode == "fusion":
+                    cm = _CALLS_RE.search(ins.rest)
+                    if cm:
+                        self._fused.add(cm.group(1))
+
+    def _table_for(self, comp: str) -> dict[str, str]:
+        table: dict[str, str] = dict(self.sig_params.get(comp, {}))
+        for ins in self.comps.get(comp, []):
+            table[ins.name] = ins.type_str
+        return table
+
+    def comp_cost(self, comp: str, *, in_fusion: bool = False) -> Cost:
+        key = comp + ("#f" if in_fusion else "")
+        if key in self._memo:
+            return self._memo[key]
+        total = Cost()
+        table = self._table_for(comp)
+        for ins in self.comps.get(comp, []):
+            total += self._instr_cost(ins, table, in_fusion)
+        self._memo[key] = total
+        return total
+
+    def _operand_bytes(self, ins: _Instr, table: dict[str, str]) -> int:
+        seg = ins.rest.split(")")[0]
+        names = _OPERANDS_RE.findall(seg)
+        if ins.opcode == "fusion":
+            return self._fusion_operand_bytes(ins, names, table)
+        return sum(_bytes_of(table[n]) for n in names if n in table)
+
+    def _fusion_operand_bytes(self, ins: _Instr, names: list[str],
+                              table: dict[str, str]) -> int:
+        """Fusion operand traffic, dynamic-slice aware.
+
+        A fusion whose parameter is consumed ONLY by dynamic-slice ops reads
+        just the slice from HBM, not the whole operand — charging the full
+        array over-counts scan-over-stacked-weights programs by n_layers x
+        (a decode step reads [1, ...] of a [48, ...] stack per iteration).
+        """
+        m = _CALLS_RE.search(ins.rest)
+        total = 0
+        sliced: dict[int, int] = {}
+        if m and m.group(1) in self.comps:
+            body = self.comps[m.group(1)]
+            # parameter index -> instruction name
+            pidx: dict[str, int] = {}
+            for bi in body:
+                if bi.opcode == "parameter":
+                    pm = re.match(r"(\d+)", bi.rest)
+                    if pm:
+                        pidx[bi.name] = int(pm.group(1))
+            # find params consumed only by dynamic-slice; record slice bytes
+            consumers: dict[str, list[_Instr]] = {}
+            for bi in body:
+                for opn in _OPERANDS_RE.findall(bi.rest.split(")")[0]):
+                    if opn in pidx:
+                        consumers.setdefault(opn, []).append(bi)
+            for pname, uses in consumers.items():
+                if uses and all(u.opcode in ("dynamic-slice",
+                                             "dynamic-update-slice")
+                                for u in uses):
+                    # dynamic-slice reads the slice; dynamic-update-slice
+                    # aliases its big operand in place (reads nothing of it)
+                    sliced[pidx[pname]] = sum(
+                        _bytes_of(u.type_str) for u in uses
+                        if u.opcode == "dynamic-slice")
+        for i, n in enumerate(names):
+            if n not in table:
+                continue
+            total += sliced.get(i, _bytes_of(table[n]))
+        return total
+
+    def _instr_cost(self, ins: _Instr, table: dict[str, str],
+                    in_fusion: bool) -> Cost:
+        c = Cost()
+        op = ins.opcode
+        if op == "dot":
+            c.flops += _dot_flops(ins, table)
+        elif op == "convolution":
+            c.flops += _conv_flops(ins, table)
+        elif op == "while":
+            m = _WHILE_RE.search(ins.rest)
+            trips = 1
+            tm = _TRIP_RE.search(ins.line)
+            if tm:
+                trips = int(tm.group(1))
+            if m:
+                body = self.comp_cost(m.group(2), in_fusion=in_fusion)
+                cond = self.comp_cost(m.group(1), in_fusion=in_fusion)
+                inner = Cost()
+                inner += body
+                inner += cond
+                c += inner.scaled(trips)
+            return c      # while op itself: no extra bytes (buffers alias)
+        elif op == "fusion":
+            m = _CALLS_RE.search(ins.rest)
+            if m:
+                c += self.comp_cost(m.group(1), in_fusion=True)
+        elif op in ("call", "custom-call", "conditional", "async-start"):
+            m = _TO_APPLY_RE.search(ins.rest) or _CALLS_RE.search(ins.rest)
+            if m:
+                c += self.comp_cost(m.group(1), in_fusion=in_fusion)
+        elif op.startswith(_COLLECTIVE_KINDS) or any(
+                op == k or op == k + "-start" for k in _COLLECTIVE_KINDS):
+            kind = next(k for k in _COLLECTIVE_KINDS if op.startswith(k))
+            if not op.endswith("-done"):
+                nbytes = self._operand_bytes(ins, table)
+                if nbytes == 0:
+                    nbytes = _bytes_of(ins.type_str)
+                c.coll[kind] = c.coll.get(kind, 0) + nbytes
+                c.coll_count[kind] = c.coll_count.get(kind, 0) + 1
+                xp = _is_cross_pod(ins.line, self.pod_stride)
+                if xp:
+                    c.cross_pod += nbytes
+                elif xp is False:
+                    c.intra_pod += nbytes
+        # memory traffic: boundary of non-fused instructions only
+        if not in_fusion and op not in ("while", "parameter", "constant",
+                                        "get-tuple-element", "tuple", "bitcast"):
+            c.bytes += self._result_bytes(ins) + self._operand_bytes(ins, table)
+        return c
+
+    def _result_bytes(self, ins: _Instr) -> int:
+        """Result-side traffic; a fusion rooted at dynamic-update-slice
+        writes only the update (the carried array aliases in place)."""
+        if ins.opcode == "fusion":
+            m = _CALLS_RE.search(ins.rest)
+            if m and m.group(1) in self.comps:
+                body = self.comps[m.group(1)]
+                if body and body[-1].opcode == "dynamic-update-slice":
+                    root = body[-1]
+                    names = _OPERANDS_RE.findall(root.rest.split(")")[0])
+                    tbl = self._table_for(m.group(1))
+                    if len(names) >= 2 and names[1] in tbl:
+                        return _bytes_of(tbl[names[1]])
+        return _bytes_of(ins.type_str)
+
+    def entry_cost(self) -> Cost:
+        entry = None
+        for name in self.comps:
+            if "main" in name or name.startswith("entry"):
+                entry = name
+                break
+        if entry is None:   # fall back: the computation not called by others
+            called: set[str] = set()
+            for instrs in self.comps.values():
+                for ins in instrs:
+                    for pat in (_CALLS_RE, _TO_APPLY_RE, _WHILE_RE):
+                        m = pat.search(ins.rest)
+                        if m:
+                            called.update(g for g in m.groups() if g)
+            entry = next(n for n in self.comps if n not in called)
+        return self.comp_cost(entry)
+
+
+def analyze_hlo(hlo_text: str, pod_stride: int = 256) -> Cost:
+    return HloCostModel(hlo_text, pod_stride).entry_cost()
+
+
+# --- compatibility helpers -------------------------------------------------
+
+def parse_hlo_collectives(hlo_text: str, pod_stride: int = 256) -> Cost:
+    return analyze_hlo(hlo_text, pod_stride)
+
+
+def collective_bytes(hlo_text: str) -> float:
+    return analyze_hlo(hlo_text).collective_bytes

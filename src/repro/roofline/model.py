@@ -1,0 +1,51 @@
+"""Roofline terms from compiled dry-run artifacts (TPU v5e targets).
+
+    compute term    = HLO_FLOPs / (chips × peak_FLOP/s)
+    memory term     = HLO_bytes / (chips × HBM_bw)
+    collective term = collective_bytes / (chips × link_bw)
+
+HLO_FLOPs / bytes come from ``compiled.cost_analysis()`` — note these are
+*global* (whole-program) numbers under SPMD, so dividing by chip count gives
+the per-chip time. Collective bytes come from the HLO parser (hlo.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class HardwareModel:
+    name: str
+    peak_flops: float          # per chip, bf16
+    hbm_bw: float              # bytes/s per chip
+    ici_bw: float              # bytes/s per link
+
+
+HW_V5E = HardwareModel(name="tpu-v5e", peak_flops=197e12, hbm_bw=819e9,
+                       ici_bw=50e9)
+
+
+def roofline_terms(flops: float, bytes_accessed: float,
+                   collective_bytes: float, chips: int,
+                   hw: HardwareModel = HW_V5E) -> dict:
+    t_compute = flops / (chips * hw.peak_flops)
+    t_memory = bytes_accessed / (chips * hw.hbm_bw)
+    t_collective = collective_bytes / (chips * hw.ici_bw)
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_collective}
+    dominant = max(terms, key=terms.get)
+    bound = max(t_compute, t_memory, t_collective)
+    return {
+        **terms,
+        "dominant": dominant.replace("_s", ""),
+        "roofline_bound_s": bound,
+        # fraction of peak compute achievable if the dominant term were the
+        # only cost (the score we hillclimb):
+        "compute_fraction": t_compute / bound if bound > 0 else 0.0,
+    }
+
+
+def model_flops(param_count: float, tokens: float, kind: str = "train") -> float:
+    """6·N·D for train (fwd+bwd), 2·N·D for inference forward."""
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * param_count * tokens

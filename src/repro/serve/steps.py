@@ -1,0 +1,124 @@
+"""Serving-step builders: prefill_step (prompt → cache + last logits) and
+serve_step (one decode token against a KV/SSM cache). Caches are donated —
+decode updates in place.
+
+Serving uses bf16 params (the config is rewritten on entry) and, for the
+large archs, 2D weight sharding so weights + cache fit HBM.
+"""
+from __future__ import annotations
+
+from dataclasses import replace
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import LMConfig, ShapeConfig
+from repro.models import encdec, lm
+from repro.sharding import rules
+from repro.train.steps import param_structs
+
+PyTree = Any
+
+
+def serve_config(cfg: LMConfig) -> LMConfig:
+    """Serving numerics: bf16 params, no remat, dropless MoE.
+
+    capacity_factor = E/K makes the expert capacity cover the worst-case
+    routing (every token to one expert), so inference never drops tokens —
+    drops are a *training* regularizer; at serving they would make outputs
+    depend on batch composition (vLLM/DeepSeek practice: dropless decode).
+    """
+    kw = dict(param_dtype="bfloat16", remat="none")
+    if cfg.n_experts:
+        kw["capacity_factor"] = cfg.n_experts / max(cfg.top_k, 1)
+    return replace(cfg, **kw)
+
+
+def cache_structs(cfg: LMConfig, mesh: Mesh, batch: int, max_len: int,
+                  enc_len: int | None = None) -> PyTree:
+    if cfg.is_encdec:
+        shapes = jax.eval_shape(partial(encdec.init_cache, cfg, batch, max_len,
+                                        enc_len or max_len))
+    else:
+        shapes = jax.eval_shape(partial(lm.init_cache, cfg, batch, max_len))
+    specs = rules.cache_pspecs(shapes, cfg, mesh, batch)
+    return jax.tree.map(
+        lambda s, sp: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                           sharding=NamedSharding(mesh, sp)),
+        shapes, specs, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def build_serve_step(cfg: LMConfig, shape: ShapeConfig, mesh: Mesh,
+                     donate: bool = True):
+    """One-token decode step. Returns (jitted, (params_sds, token_sds, pos_sds,
+    cache_sds))."""
+    cfg = serve_config(cfg)
+    B, S = shape.global_batch, shape.seq_len
+    p_sds, _ = param_structs(cfg, mesh)
+    c_sds = cache_structs(cfg, mesh, B, S, enc_len=S if cfg.is_encdec else None)
+    bspec = rules.input_pspecs(cfg, shape, mesh)["tokens"]
+    tok_sds = jax.ShapeDtypeStruct((B, 1), jnp.int32,
+                                   sharding=NamedSharding(mesh, bspec))
+    pos_sds = jax.ShapeDtypeStruct((), jnp.int32)
+
+    decode = encdec.decode_step if cfg.is_encdec else lm.decode_step
+
+    def step(params, token, pos, cache):
+        logits, cache = decode(params, token, pos, cache, cfg)
+        return logits, cache
+
+    cache_shardings = jax.tree.map(
+        lambda s: s.sharding, c_sds,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    logits_sharding = NamedSharding(
+        mesh, P(bspec[0] if len(bspec) else None, None, "model"))
+    jitted = jax.jit(step,
+                     donate_argnums=(3,) if donate else (),
+                     out_shardings=(logits_sharding, cache_shardings))
+    return jitted, (p_sds, tok_sds, pos_sds, c_sds), cfg
+
+
+def build_prefill_step(cfg: LMConfig, shape: ShapeConfig, mesh: Mesh):
+    """Prompt prefill: tokens [B,S] → (last logits, cache)."""
+    cfg = serve_config(cfg)
+    B, S = shape.global_batch, shape.seq_len
+    p_sds, _ = param_structs(cfg, mesh)
+    in_specs = rules.input_pspecs(cfg, shape, mesh)
+    tok_sds = jax.ShapeDtypeStruct((B, S), jnp.int32,
+                                   sharding=NamedSharding(mesh, in_specs["tokens"]))
+    extras = {}
+    cdt = jnp.dtype(cfg.compute_dtype)
+    if cfg.family == "vlm":
+        extras["img_embed"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_image_tokens, cfg.vision_dim), cdt,
+            sharding=NamedSharding(mesh, in_specs["img_embed"]))
+    if cfg.is_encdec:
+        extras["frames"] = jax.ShapeDtypeStruct(
+            (B, S, cfg.d_model), cdt,
+            sharding=NamedSharding(mesh, in_specs["frames"]))
+
+    c_sds = cache_structs(cfg, mesh, B, S, enc_len=S if cfg.is_encdec else None)
+    cache_shardings = jax.tree.map(
+        lambda s: s.sharding, c_sds,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    logits_sharding = NamedSharding(
+        mesh, P(in_specs["tokens"][0] if len(in_specs["tokens"]) else None, "model"))
+
+    if cfg.is_encdec:
+        def step(params, tokens, frames):
+            return encdec.prefill(params, frames, tokens, cfg)
+        args = (p_sds, tok_sds, extras["frames"])
+    elif cfg.family == "vlm":
+        def step(params, tokens, img_embed):
+            return lm.prefill(params, tokens, cfg, img_embed=img_embed)
+        args = (p_sds, tok_sds, extras["img_embed"])
+    else:
+        def step(params, tokens):
+            return lm.prefill(params, tokens, cfg)
+        args = (p_sds, tok_sds)
+
+    jitted = jax.jit(step, out_shardings=(logits_sharding, cache_shardings))
+    return jitted, args, cfg

@@ -1,0 +1,4 @@
+from repro.sharding.rules import (  # noqa: F401
+    batch_axes, param_pspecs, zero1_pspecs, activation_pspec, cache_pspecs,
+    input_pspecs, named_shardings,
+)

@@ -1,0 +1,254 @@
+"""Path-regex → PartitionSpec rules for every param/cache/input tree.
+
+Mesh axes: ("data", "model") single-pod, ("pod", "data", "model") multi-pod.
+Batch always shards over all batch axes (pod+data); weights shard over
+"model" (TP) and — in "2d" mode — additionally over "data" (FSDP-style),
+which is mandatory for the >8B archs whose optimizer state cannot replicate
+across the data axis.
+
+Rules are ordered; first match wins. A rule maps to a *logical* spec whose
+axis names are resolved against the mesh (absent axes dropped) and whose
+dims are divisibility-checked against the actual leaf shape — a dim that
+does not divide evenly falls back to replication (with the physical-padding
+machinery in configs/base.py this should never fire for the production
+archs; an assert hook surfaces violations in tests).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import LMConfig, ShapeConfig
+from repro.utils import tree_map_with_path
+
+PyTree = Any
+
+BATCH = "__batch__"      # placeholder resolved to ("pod","data") / ("data",)
+FSDP = "__fsdp__"        # placeholder: "data" in 2d mode, None in tp mode
+
+
+def batch_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+# ---------------------------------------------------------------------------
+# parameter rules
+# ---------------------------------------------------------------------------
+# (regex, spec-without-stack-axis). Stacked leaves (blocks/...) get leading
+# None axes prepended automatically based on ndim difference.
+
+_PARAM_RULES: list[tuple[str, tuple]] = [
+    # embeddings
+    (r"embed/embedding$",            ("model", FSDP)),
+    (r"embed/unembed$",              (FSDP, "model")),
+    # norms and small vectors — replicate
+    (r"(ln\d?|lnx|final_norm|enc_norm|q_norm|k_norm)$", None),
+    (r"(A_log|D_skip|dt_bias)$",     ("model",)),
+    (r"ssm/norm$",                   ("model",)),
+    # attention
+    (r"(attn|xattn)/wq$",            (FSDP, "model")),
+    (r"(attn|xattn)/wk$",            (FSDP, "model")),
+    (r"(attn|xattn)/wv$",            (FSDP, "model")),
+    (r"(attn|xattn)/wo$",            ("model", FSDP)),
+    # dense mlp
+    (r"mlp/wg$",                     (FSDP, "model")),
+    (r"mlp/wu$",                     (FSDP, "model")),
+    (r"mlp/wd$",                     ("model", FSDP)),
+    # moe — EP over the expert axis, or TP inside experts (chosen per-config)
+    (r"moe/router$",                 None),
+    (r"moe/w[gu]$__EP",              ("model", None, FSDP)),
+    (r"moe/wd$__EP",                 ("model", FSDP, None)),
+    (r"moe/w[gu]$__TP",              (None, FSDP, "model")),
+    (r"moe/wd$__TP",                 (None, "model", FSDP)),
+    # ssm projections
+    (r"ssm/wz$",                     (FSDP, "model")),
+    (r"ssm/wx$",                     (FSDP, "model")),
+    (r"ssm/wbc$",                    (FSDP, None)),
+    (r"ssm/wdt$",                    (FSDP, "model")),
+    (r"ssm/conv_wx$",                (None, "model")),
+    (r"ssm/conv_bx$",                ("model",)),
+    (r"ssm/conv_wbc$",               None),
+    (r"ssm/conv_bbc$",               None),
+    (r"ssm/out_proj$",               ("model", FSDP)),
+]
+
+
+def _moe_mode(cfg: LMConfig) -> str:
+    tp = cfg.tp_multiple
+    return "EP" if cfg.n_experts and cfg.n_experts % tp == 0 else "TP"
+
+
+def _resolve(spec: tuple | None, mesh: Mesh, fsdp_on: bool,
+             shape: tuple[int, ...]) -> P:
+    if spec is None:
+        return P()
+    axes = []
+    mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    for dim, ax in enumerate(spec):
+        if ax == FSDP:
+            ax = "data" if fsdp_on else None
+        if ax == BATCH:
+            ax = batch_axes(mesh)
+        if ax is None:
+            axes.append(None)
+            continue
+        names = ax if isinstance(ax, tuple) else (ax,)
+        names = tuple(n for n in names if n in mesh.axis_names)
+        if not names:
+            axes.append(None)
+            continue
+        total = int(np.prod([mesh_shape[n] for n in names]))
+        if shape[dim] % total != 0:
+            axes.append(None)           # fallback: replicate this dim
+            continue
+        axes.append(names if len(names) > 1 else names[0])
+    return P(*axes)
+
+
+def param_pspecs(params: PyTree, cfg: LMConfig, mesh: Mesh) -> PyTree:
+    """PartitionSpec tree matching the param tree."""
+    fsdp_on = cfg.effective_weight_sharding() == "2d"
+    moe_suffix = _moe_mode(cfg)
+
+    def rule_for(path: str, leaf) -> P:
+        for pat, spec in _PARAM_RULES:
+            if "__" in pat:
+                pat_base, mode = pat.split("__")
+                if mode != moe_suffix:
+                    continue
+                pat = pat_base
+            if re.search(pat, path):
+                if spec is None:
+                    return P()
+                # prepend stack axes (scan-stacked params have extra leading dims)
+                extra = leaf.ndim - len(spec)
+                full = (None,) * extra + tuple(spec)
+                return _resolve(full, mesh, fsdp_on, leaf.shape)
+        return P()   # default: replicate
+
+    return tree_map_with_path(rule_for, params)
+
+
+def zero1_pspecs(param_specs: PyTree, params: PyTree, mesh: Mesh,
+                 cfg: LMConfig) -> PyTree:
+    """Optimizer-moment specs: param spec + shard one free dim over "data".
+
+    ZeRO-1: moments never need replication across the data axis; we pick the
+    first unsharded dim whose size divides the data-axis size. (In 2d mode
+    params already consume "data"; specs pass through unchanged.)
+    """
+    if not cfg.zero1 or cfg.effective_weight_sharding() == "2d":
+        return param_specs
+    if "data" not in mesh.axis_names:
+        return param_specs
+    dsize = dict(zip(mesh.axis_names, mesh.devices.shape))["data"]
+
+    def shard_one(spec: P, leaf) -> P:
+        axes = list(spec) + [None] * (leaf.ndim - len(spec))
+        for i, ax in enumerate(axes):
+            if ax is None and leaf.shape[i] % dsize == 0 and leaf.shape[i] > 1:
+                axes[i] = "data"
+                return P(*axes)
+        return spec
+
+    return jax.tree.map(shard_one, param_specs, params,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# activations / inputs / caches
+# ---------------------------------------------------------------------------
+
+def activation_pspec(mesh: Mesh, *trailing) -> P:
+    return P(batch_axes(mesh), *trailing)
+
+
+def shard_batch(x: jax.Array, *trailing) -> jax.Array:
+    """Pin the leading (batch) axis of an activation to ("pod","data").
+
+    GSPMD's sharding propagation gives up on while-loop carries surprisingly
+    often — a scan-over-layers body whose carry resolves to `replicated`
+    silently runs the FULL batch on every device (16-32x redundant compute
+    and memory). Pinning h at each layer boundary keeps the whole loop body
+    batch-sharded. No-op outside a mesh context or when the batch does not
+    divide (long_500k's B=1).
+    """
+    from jax.interpreters import pxla
+    mesh = pxla.thread_resources.env.physical_mesh
+    if mesh.empty:
+        return x
+    axes = batch_axes(mesh)
+    if not axes:
+        return x
+    mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    n = int(np.prod([mesh_shape[a] for a in axes]))
+    if n <= 1 or x.shape[0] % n != 0:
+        return x
+    spec = P(axes if len(axes) > 1 else axes[0],
+             *trailing[:x.ndim - 1])
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def input_pspecs(cfg: LMConfig, shape: ShapeConfig, mesh: Mesh) -> dict[str, P]:
+    """Specs for the data batch (tokens/labels/frames/img_embed)."""
+    b = batch_axes(mesh)
+    nb = int(np.prod([dict(zip(mesh.axis_names, mesh.devices.shape))[a] for a in b])) \
+        if b else 1
+    bspec = b if shape.global_batch % max(nb, 1) == 0 else ()
+    out = {"tokens": P(bspec, None), "labels": P(bspec, None)}
+    if cfg.family == "vlm":
+        out["img_embed"] = P(bspec, None, None)
+    if cfg.is_encdec:
+        out["frames"] = P(bspec, None, None)
+    return out
+
+
+def cache_pspecs(cache: PyTree, cfg: LMConfig, mesh: Mesh,
+                 global_batch: int) -> PyTree:
+    """KV/SSM cache specs. Batch shards over (pod, data) when divisible;
+    otherwise (long_500k, B=1) the *sequence* axis of attention caches
+    shards over "data" and SSM states replicate across data."""
+    b = batch_axes(mesh)
+    mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    nb = int(np.prod([mesh_shape[a] for a in b])) if b else 1
+    batch_ok = global_batch % max(nb, 1) == 0
+
+    def spec_for(path: str, leaf) -> P:
+        shape = leaf.shape
+        if path in ("k", "v") or path.endswith("/k") or path.endswith("/v"):
+            # [*stack, B, S, KV, hd]
+            extra = leaf.ndim - 4
+            bspec = b if batch_ok else None
+            sspec = None
+            if not batch_ok and shape[extra + 1] % mesh_shape.get("data", 1) == 0:
+                sspec = "data"
+            kvspec = "model" if shape[extra + 2] % mesh_shape.get("model", 1) == 0 \
+                else None
+            return P(*((None,) * extra), bspec, sspec, kvspec, None)
+        if path.endswith("state"):       # [*stack, B, nh, hp, N]
+            extra = leaf.ndim - 4
+            bspec = b if batch_ok else None
+            return P(*((None,) * extra), bspec, "model"
+                     if shape[extra + 1] % mesh_shape.get("model", 1) == 0 else None,
+                     None, None)
+        if "conv_x" in path:             # [*stack, B, K-1, di]
+            extra = leaf.ndim - 3
+            bspec = b if batch_ok else None
+            return P(*((None,) * extra), bspec, None, "model"
+                     if shape[extra + 2] % mesh_shape.get("model", 1) == 0 else None)
+        if "conv_bc" in path:
+            extra = leaf.ndim - 3
+            return P(*((None,) * extra), b if batch_ok else None, None, None)
+        return P()
+
+    return tree_map_with_path(spec_for, cache)
+
+
+def named_shardings(spec_tree: PyTree, mesh: Mesh) -> PyTree:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree, is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,136 @@
+"""pjit train-step builders for the LM-family archs.
+
+``build_train_step`` returns (jitted_fn, arg ShapeDtypeStructs) so the same
+artifact serves real training (feed arrays) and the multi-pod dry-run
+(``.lower(*specs).compile()``).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import LMConfig, ShapeConfig
+from repro.models import encdec, lm
+from repro.optim import adamw, clip_by_global_norm
+from repro.optim.optimizers import apply_updates
+from repro.sharding import rules
+
+PyTree = Any
+
+
+def _loss_for(cfg: LMConfig):
+    return encdec.loss_fn if cfg.is_encdec else lm.loss_fn
+
+
+def make_batch_specs(cfg: LMConfig, shape: ShapeConfig, mesh: Mesh
+                     ) -> dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStructs (with shardings) for one global training batch."""
+    B, S = shape.global_batch, shape.seq_len
+    specs = rules.input_pspecs(cfg, shape, mesh)
+    cdt = jnp.dtype(cfg.compute_dtype)
+    out = {
+        "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32,
+                                       sharding=NamedSharding(mesh, specs["tokens"])),
+        "labels": jax.ShapeDtypeStruct((B, S), jnp.int32,
+                                       sharding=NamedSharding(mesh, specs["labels"])),
+    }
+    if cfg.family == "vlm":
+        out["img_embed"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_image_tokens, cfg.vision_dim), cdt,
+            sharding=NamedSharding(mesh, specs["img_embed"]))
+    if cfg.is_encdec:
+        out["frames"] = jax.ShapeDtypeStruct(
+            (B, S, cfg.d_model), cdt,
+            sharding=NamedSharding(mesh, specs["frames"]))
+    return out
+
+
+def param_structs(cfg: LMConfig, mesh: Mesh) -> tuple[PyTree, PyTree]:
+    """(ShapeDtypeStruct tree with shardings, pspec tree) — no allocation."""
+    init = encdec.init_params if cfg.is_encdec else lm.init_params
+    shapes = jax.eval_shape(partial(init, cfg=cfg), jax.random.PRNGKey(0))
+    pspecs = rules.param_pspecs(shapes, cfg, mesh)
+    with_sharding = jax.tree.map(
+        lambda s, sp: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                           sharding=NamedSharding(mesh, sp)),
+        shapes, pspecs, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    return with_sharding, pspecs
+
+
+def opt_structs(opt, param_structs_tree: PyTree, param_pspecs: PyTree,
+                cfg: LMConfig, mesh: Mesh) -> tuple[PyTree, PyTree]:
+    shapes = jax.eval_shape(opt.init, param_structs_tree)
+    moment_specs = rules.zero1_pspecs(param_pspecs, param_structs_tree, mesh, cfg)
+    specs = {"mu": moment_specs, "nu": moment_specs, "step": P()}
+    sds = jax.tree.map(
+        lambda s, sp: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                           sharding=NamedSharding(mesh, sp)),
+        shapes, specs, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    return sds, specs
+
+
+def build_train_step(cfg: LMConfig, shape: ShapeConfig, mesh: Mesh,
+                     lr: float = 3e-4, grad_clip: float = 1.0,
+                     donate: bool = True, grad_accum: int = 1):
+    """Returns (jitted_step, (params_sds, opt_sds, batch_sds)).
+
+    ``grad_accum > 1`` splits the global batch into that many microbatches
+    scanned inside the step (mean-of-gradients — bit-exact in expectation
+    with the single-shot step). Two users: activation-memory relief for the
+    big archs, and the elastic planner (ft/elastic.py), whose re-mesh plans
+    restore the exact global batch on fewer chips via accumulation.
+    """
+    opt = adamw(lr)
+    loss_fn = _loss_for(cfg)
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(loss_fn, has_aux=True)(params, batch, cfg)
+
+    def step(params, opt_state, batch):
+        if grad_accum > 1:
+            B = shape.global_batch
+            assert B % grad_accum == 0, (B, grad_accum)
+            micro = jax.tree.map(
+                lambda x: x.reshape((grad_accum, B // grad_accum)
+                                    + x.shape[1:]), batch)
+
+            def acc_body(carry, mb):
+                g_sum, loss_sum = carry
+                (loss, _), g = grads_of(params, mb)
+                g_sum = jax.tree.map(jnp.add, g_sum, g)
+                return (g_sum, loss_sum + loss), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+            (g_sum, loss_sum), _ = jax.lax.scan(
+                acc_body, (g0, jnp.zeros((), jnp.float32)), micro)
+            grads = jax.tree.map(lambda g: g / grad_accum, g_sum)
+            loss = loss_sum / grad_accum
+            metrics = {}
+        else:
+            (loss, metrics), grads = grads_of(params, batch)
+        grads, gnorm = clip_by_global_norm(grads, grad_clip)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        metrics = dict(metrics, loss=loss, gnorm=gnorm)
+        return params, opt_state, metrics
+
+    p_sds, p_specs = param_structs(cfg, mesh)
+    o_sds, o_specs = opt_structs(opt, p_sds, p_specs, cfg, mesh)
+    b_sds = make_batch_specs(cfg, shape, mesh)
+
+    out_shardings = (
+        jax.tree.map(lambda s: s.sharding, p_sds,
+                     is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct)),
+        jax.tree.map(lambda s: s.sharding, o_sds,
+                     is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct)),
+        NamedSharding(mesh, P()),
+    )
+    jitted = jax.jit(step,
+                     donate_argnums=(0, 1) if donate else (),
+                     out_shardings=out_shardings)
+    return jitted, (p_sds, o_sds, b_sds), opt

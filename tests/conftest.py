@@ -1,0 +1,29 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests and benches must
+see the real single CPU device; only launch/dryrun.py forces 512."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="session")
+def host_mesh():
+    from repro.launch.mesh import make_host_mesh
+    return make_host_mesh()
+
+
+def assert_finite(tree, msg=""):
+    import numpy as np
+    for path, leaf in _paths(tree):
+        arr = np.asarray(leaf)
+        if arr.dtype.kind == "f":
+            assert np.isfinite(arr).all(), f"non-finite at {path} {msg}"
+
+
+def _paths(tree):
+    from repro.utils import tree_paths
+    return tree_paths(tree)

@@ -1,0 +1,106 @@
+"""The paper-level integration test: a miniature T_INTG co-design sweep must
+reproduce the directional claims of Table 1 / Fig 2 (bandwidth ↑, training
+slower, energy improvement ≥, at shorter T_INTG; P²M ≥ ~2× energy win)."""
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import codesign
+from repro.core.codesign import P2MModelConfig, SweepConfig
+from repro.core.leakage import CircuitConfig, LeakageConfig
+from repro.core.p2m_layer import P2MConfig
+from repro.core.snn import SpikingCNNConfig
+from repro.data import events as ev_mod
+
+
+def _mini():
+    model = P2MModelConfig(
+        p2m=P2MConfig(out_channels=8, n_sub=2, t_intg_ms=120.0,
+                      leak=LeakageConfig(circuit=CircuitConfig.NULLIFIED)),
+        backbone=SpikingCNNConfig(channels=(8, 8, 8, 8), input_hw=(16, 16),
+                                  fc_hidden=16, n_classes=5,
+                                  first_layer_external=True),
+        coarse_window_ms=120.0)
+    data = ev_mod.EventStreamConfig(name="gesture", height=16, width=16,
+                                    n_classes=5, duration_ms=240.0)
+    sweep = SweepConfig(t_intg_grid_ms=(5.0, 30.0, 120.0), batch_size=2,
+                        pretrain_steps=4, finetune_steps=2, eval_batches=2,
+                        seed=0)
+    return model, data, sweep
+
+
+@pytest.fixture(scope="module")
+def sweep_records():
+    model, data, sweep = _mini()
+    return codesign.run_sweep(data, model, sweep, log=lambda *_: None)
+
+
+class TestCoDesignSweep:
+    def test_record_completeness(self, sweep_records):
+        recs = sweep_records
+        assert len(recs) == 3
+        for r in recs:
+            for k in ("accuracy", "train_time_s", "bandwidth_norm",
+                      "backend_energy_p2m_j", "backend_energy_conventional_j",
+                      "energy_improvement", "train_time_norm"):
+                assert k in r, k
+            assert 0.0 <= r["accuracy"] <= 1.0
+
+    def test_bandwidth_increases_at_short_t(self, sweep_records):
+        """Fig 2 left: normalized bandwidth > 1 at short T_INTG."""
+        recs = sweep_records
+        assert recs[0]["bandwidth_norm"] > recs[-1]["bandwidth_norm"]
+        assert abs(recs[-1]["bandwidth_norm"] - 1.0) < 1e-6
+
+    def test_training_slower_at_short_t(self, sweep_records):
+        """Table 1: more timesteps at short T_INTG → slower steps."""
+        recs = sweep_records
+        assert recs[0]["train_time_norm"] > 1.5 * recs[-1]["train_time_norm"]
+
+    def test_p2m_energy_wins(self, sweep_records):
+        """Fig 2 right: ≥~2× backend-energy improvement at every T."""
+        for r in sweep_records:
+            assert r["energy_improvement"] > 1.5, r["t_intg_ms"]
+
+    def test_energy_improvement_grows_with_t(self, sweep_records):
+        recs = sweep_records
+        assert recs[-1]["energy_improvement"] >= recs[0]["energy_improvement"]
+
+
+class TestTrainingProtocol:
+    def test_freeze_p2m_keeps_layer1_static(self):
+        """Phase-2 finetune must not move P²M weights (paper §3)."""
+        from repro.optim import adamw
+        model, data, _ = _mini()
+        key = jax.random.PRNGKey(0)
+        params, state = codesign.model_init(key, model)
+        opt = adamw(1e-2)
+        opt_state = opt.init(params)
+        step = codesign.make_train_step(model, opt, freeze_p2m=True)
+        ev, labels = ev_mod.sample_batch(key, data, 2, model.p2m.t_intg_ms,
+                                         n_sub=model.p2m.n_sub)
+        w0 = np.asarray(params["p2m"]["w"]).copy()
+        b0 = np.asarray(params["backbone"]["fc1"]["w"]).copy()
+        params, opt_state, state, m, aux = step(params, opt_state, state,
+                                                ev, labels)
+        np.testing.assert_array_equal(np.asarray(params["p2m"]["w"]), w0)
+        assert not np.array_equal(np.asarray(params["backbone"]["fc1"]["w"]), b0)
+
+    def test_full_model_gradients_finite(self):
+        model, data, _ = _mini()
+        key = jax.random.PRNGKey(1)
+        params, state = codesign.model_init(key, model)
+        ev, labels = ev_mod.sample_batch(key, data, 2, model.p2m.t_intg_ms,
+                                         n_sub=model.p2m.n_sub)
+
+        def loss(p):
+            logits, _, _ = codesign.model_apply(p, state, ev, model, train=True)
+            return jnp.mean(
+                jax.nn.log_softmax(logits)[jnp.arange(2), labels]) * -1.0
+
+        g = jax.grad(loss)(params)
+        for leaf in jax.tree.leaves(g):
+            assert bool(jnp.all(jnp.isfinite(leaf)))

@@ -1,0 +1,46 @@
+"""Dry-run smoke: one real (arch × shape × mesh) cell through the actual
+launch path, in a subprocess (dryrun.py must own XLA_FLAGS before jax
+init — never import it in-process)."""
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+@pytest.mark.slow
+def test_dryrun_single_cell(tmp_path):
+    env = dict(os.environ, PYTHONPATH=str(REPO / "src"))
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch",
+         "internlm2-1.8b", "--shape", "decode_32k", "--pods", "1",
+         "--out", str(tmp_path)],
+        env=env, cwd=REPO, capture_output=True, text=True, timeout=900)
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    rec = json.loads(
+        (tmp_path / "internlm2-1.8b__decode_32k__1pod.json").read_text())
+    assert rec["status"] == "ok", rec.get("error")
+    assert rec["chips"] == 256
+    assert rec["roofline"]["dominant"] in ("compute", "memory", "collective")
+    assert rec["cost"]["flops"] > 0
+
+
+@pytest.mark.slow
+def test_dryrun_full_mesh_cell(tmp_path):
+    """The real 512-device two-pod cell for the paper-relevant SSM arch."""
+    env = dict(os.environ, PYTHONPATH=str(REPO / "src"))
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch",
+         "mamba2-780m", "--shape", "long_500k", "--pods", "2",
+         "--out", str(tmp_path)],
+        env=env, cwd=REPO, capture_output=True, text=True, timeout=900)
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    rec = json.loads(
+        (tmp_path / "mamba2-780m__long_500k__2pod.json").read_text())
+    assert rec["status"] == "ok", rec.get("error")
+    assert rec["chips"] == 512
+    assert rec["mesh"] == {"pod": 2, "data": 16, "model": 16}

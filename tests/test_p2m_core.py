@@ -1,0 +1,226 @@
+"""P²M core: analog MAC model, leakage configs, the in-pixel layer, and
+the paper's qualitative claims at module level."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import analog, leakage
+from repro.core.analog import AnalogConfig
+from repro.core.leakage import CircuitConfig, LeakageConfig
+from repro.core.p2m_layer import (
+    P2MConfig, coarsen_spikes, p2m_apply, p2m_forward_curvefit,
+    p2m_forward_scan, p2m_init,
+)
+
+
+# ---------------------------------------------------------------------------
+# analog model
+# ---------------------------------------------------------------------------
+
+
+class TestAnalog:
+    def test_quantizer_levels(self):
+        cfg = AnalogConfig(weight_levels=16)
+        w = jnp.linspace(-1.2, 1.2, 101)
+        q = analog.quantize_weights(w, cfg)
+        scale = cfg.w_clip / (cfg.weight_levels // 2)
+        lv = np.asarray(q / scale)
+        np.testing.assert_allclose(lv, np.round(lv), atol=1e-5)
+        assert float(jnp.max(jnp.abs(q))) <= cfg.w_clip + 1e-6
+
+    def test_quantizer_straight_through(self):
+        cfg = AnalogConfig()
+        g = jax.grad(lambda w: jnp.sum(analog.quantize_weights(w, cfg)))(
+            jnp.array([0.3, -0.7]))
+        np.testing.assert_allclose(np.asarray(g), [1.0, 1.0])
+
+    def test_transfer_curve_compresses(self):
+        """Cubic fit compresses large swings (c3 < 0) and clamps to rails."""
+        cfg = AnalogConfig()
+        x = jnp.array([0.05, 0.2, 0.39])
+        y = analog.transfer_curve(x, cfg)
+        assert float(y[0]) < 0.05 and float(y[0]) > 0.04
+        # compression grows with amplitude
+        ratios = np.asarray(y / x)
+        assert ratios[0] > ratios[1] > ratios[2]
+        big = analog.transfer_curve(jnp.array([10.0]), cfg)
+        assert float(big[0]) <= cfg.vdd - cfg.v_precharge + 1e-6
+
+    def test_process_variation_stats(self):
+        cfg = AnalogConfig(pv_gain_sigma=0.02)
+        pv = analog.sample_process_variation(jax.random.PRNGKey(0), 4096, cfg)
+        assert abs(float(jnp.std(pv["gain"])) - 0.02) < 0.005
+        assert abs(float(jnp.mean(pv["gain"])) - 1.0) < 0.01
+
+    def test_step_nonlinearity_shrinks_near_rail(self):
+        cfg = AnalogConfig()
+        g0 = analog.step_nonlinearity(jnp.array(0.0), cfg)
+        gr = analog.step_nonlinearity(jnp.array(0.35), cfg)
+        assert float(g0) == 1.0
+        assert float(gr) < 0.4
+
+
+# ---------------------------------------------------------------------------
+# leakage configs (paper Fig 3/4)
+# ---------------------------------------------------------------------------
+
+
+class TestLeakage:
+    def _params(self, circuit, w=None):
+        if w is None:
+            w = jax.random.normal(jax.random.PRNGKey(0), (3, 3, 2, 8))
+        return leakage.kernel_leak_params(
+            w, LeakageConfig(circuit=circuit)), w
+
+    def test_retention_ordering_c_beats_b_beats_a(self):
+        """Fig 4a: config (c) ≻ (b) ≻ (a) in charge retention."""
+        v0 = jnp.full((8,), 0.15)
+        errs = {}
+        for c in (CircuitConfig.BASIC, CircuitConfig.SWITCH,
+                  CircuitConfig.NULLIFIED):
+            p, _ = self._params(c)
+            errs[c] = float(jnp.mean(leakage.retention_error(p, v0, 10.0)))
+        assert errs[CircuitConfig.NULLIFIED] < errs[CircuitConfig.SWITCH]
+        assert errs[CircuitConfig.SWITCH] < errs[CircuitConfig.BASIC]
+
+    def test_config_c_holds_10ms(self):
+        """The paper's co-design claim: (c) holds charge at T=10 ms."""
+        p, _ = self._params(CircuitConfig.NULLIFIED)
+        err = leakage.retention_error(p, jnp.full((8,), 0.2), 10.0)
+        assert float(jnp.max(err)) < 0.01     # < 10 mV drift on 200 mV
+
+    def test_config_a_saturates(self):
+        """(a) drifts toward its kernel-dependent asymptote."""
+        p, w = self._params(CircuitConfig.BASIC)
+        v = jnp.zeros((8,))
+        v_late = leakage.leak_step(v, p, 1000.0)
+        np.testing.assert_allclose(np.asarray(v_late), np.asarray(p.v_inf),
+                                   atol=1e-4)
+
+    def test_config_a_direction_kernel_dependent(self):
+        """All-positive kernels leak toward VDD, all-negative toward GND."""
+        cfg = LeakageConfig(circuit=CircuitConfig.BASIC)
+        w_pos = jnp.ones((3, 3, 2, 4)) * 0.5
+        w_neg = -w_pos
+        p_pos = leakage.kernel_leak_params(w_pos, cfg)
+        p_neg = leakage.kernel_leak_params(w_neg, cfg)
+        assert float(jnp.min(p_pos.v_inf)) > 0.3     # toward +rail
+        assert float(jnp.max(p_neg.v_inf)) < -0.3    # toward ground
+
+    def test_ideal_no_decay(self):
+        p, _ = self._params(CircuitConfig.IDEAL)
+        v = jnp.array([0.1, -0.2, 0.3, 0.0, 0.1, 0.1, 0.1, 0.1])
+        np.testing.assert_allclose(
+            np.asarray(leakage.leak_step(v, p, 1e6)), np.asarray(v))
+
+    def test_exact_ode_integration(self):
+        """leak_step(dt) twice == leak_step(2dt) — exact exponential."""
+        p, _ = self._params(CircuitConfig.SWITCH)
+        v = jnp.full((8,), 0.2)
+        one = leakage.leak_step(leakage.leak_step(v, p, 3.0), p, 3.0)
+        two = leakage.leak_step(v, p, 6.0)
+        np.testing.assert_allclose(np.asarray(one), np.asarray(two), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# the P²M layer
+# ---------------------------------------------------------------------------
+
+
+class TestP2MLayer:
+    def _setup(self, mode="curvefit", circuit=CircuitConfig.NULLIFIED,
+               t_intg=10.0, n_sub=4):
+        cfg = P2MConfig(out_channels=6, t_intg_ms=t_intg, n_sub=n_sub,
+                        mode=mode,
+                        leak=LeakageConfig(circuit=circuit))
+        params = p2m_init(jax.random.PRNGKey(0), cfg)
+        ev = jax.random.poisson(jax.random.PRNGKey(1), 0.4,
+                                (2, 3, n_sub, 12, 12, 2)).astype(jnp.float32)
+        return cfg, params, ev
+
+    def test_shapes(self):
+        cfg, params, ev = self._setup()
+        s, v = p2m_apply(params, ev, cfg)
+        assert s.shape == (2, 3, 12, 12, 6)
+        assert v.shape == s.shape
+        assert set(np.unique(np.asarray(s))) <= {0.0, 1.0}
+
+    def test_scan_curvefit_agree_ideal(self):
+        """With no leak and no nonlinearity the two paths are identical."""
+        an = AnalogConfig(enable_nonlinearity=False,
+                          enable_process_variation=False)
+        cfg = P2MConfig(out_channels=4, n_sub=3, mode="scan",
+                        analog=dataclasses.replace(an),
+                        leak=LeakageConfig(circuit=CircuitConfig.IDEAL))
+        params = p2m_init(jax.random.PRNGKey(2), cfg)
+        params = {**params, "pv_gain": jnp.ones_like(params["pv_gain"]),
+                  "pv_offset": jnp.zeros_like(params["pv_offset"])}
+        ev = jax.random.poisson(jax.random.PRNGKey(3), 0.2,
+                                (1, 2, 3, 10, 10, 2)).astype(jnp.float32)
+        _, v_scan = p2m_forward_scan(params, ev, cfg)
+        _, v_fit = p2m_forward_curvefit(params, ev, cfg)
+        np.testing.assert_allclose(np.asarray(v_fit), np.asarray(v_scan),
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_leak_degrades_with_t_intg(self):
+        """Longer T_INTG at fixed circuit = more leak error vs ideal (Fig 4b-d)."""
+        errs = []
+        for t in (1.0, 10.0, 100.0):
+            cfg, params, ev = self._setup(mode="scan",
+                                          circuit=CircuitConfig.SWITCH,
+                                          t_intg=t)
+            _, v_leaky = p2m_forward_scan(params, ev, cfg)
+            cfg_i = dataclasses.replace(
+                cfg, leak=LeakageConfig(circuit=CircuitConfig.IDEAL))
+            _, v_ideal = p2m_forward_scan(params, ev, cfg_i)
+            errs.append(float(jnp.mean(jnp.abs(v_leaky - v_ideal))))
+        assert errs[0] < errs[1] < errs[2]
+
+    def test_gradients_flow(self):
+        cfg, params, ev = self._setup(mode="curvefit")
+        def loss(p):
+            s, v = p2m_apply(p, ev, cfg)
+            return jnp.sum(v ** 2)
+        g = jax.grad(loss)(params)
+        assert bool(jnp.all(jnp.isfinite(g["w"])))
+        assert float(jnp.max(jnp.abs(g["w"]))) > 0.0
+
+    def test_coarsen_spikes(self):
+        s = jnp.ones((2, 8, 4, 4, 3))
+        c = coarsen_spikes(s, 4)
+        assert c.shape == (2, 2, 4, 4, 3)
+        np.testing.assert_allclose(np.asarray(c), 4.0)
+
+    def test_kernel_mode_matches_scan(self):
+        cfg, params, ev = self._setup(mode="scan")
+        s_scan, v_scan = p2m_apply(params, ev, cfg)
+        cfg_k = dataclasses.replace(cfg, mode="kernel")
+        s_k, v_k = p2m_apply(params, ev, cfg_k)
+        np.testing.assert_allclose(np.asarray(v_k), np.asarray(v_scan),
+                                   rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# energy / bandwidth model (paper Fig 2 directionality)
+# ---------------------------------------------------------------------------
+
+
+class TestEnergyModel:
+    def test_p2m_beats_conventional(self):
+        from repro.core import energy
+        aux = {"synops/conv1": 1e6, "synops/fc0": 1e5}
+        macs, spikes = 1e6, 2e4
+        conv = energy.backend_energy_conventional(aux, macs)
+        p2m = energy.backend_energy_p2m(aux, spikes, macs)
+        assert conv / p2m > 2.0    # the paper's ≥2× claim
+
+    def test_energy_improvement_grows_with_fewer_spikes(self):
+        from repro.core import energy
+        aux = {"synops/conv1": 1e6}
+        macs = 1e6
+        imp_many = energy.improvement(aux, 1e6, macs)
+        imp_few = energy.improvement(aux, 1e3, macs)
+        assert imp_few > imp_many

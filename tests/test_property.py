@@ -1,0 +1,198 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+MAX_EXAMPLES = 25
+
+
+# ---------------------------------------------------------------------------
+# leakage ODE invariants
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=MAX_EXAMPLES, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       dt1=st.floats(0.01, 50.0), dt2=st.floats(0.01, 50.0),
+       circuit=st.sampled_from(["a", "b", "c"]))
+def test_leak_semigroup_property(seed, dt1, dt2, circuit):
+    """leak(dt1) ∘ leak(dt2) == leak(dt1+dt2) — exact exponential ODE."""
+    from repro.core import leakage
+    from repro.core.leakage import CircuitConfig, LeakageConfig
+    cfg = LeakageConfig(circuit=CircuitConfig(circuit))
+    w = jax.random.normal(jax.random.PRNGKey(seed), (3, 3, 2, 4))
+    p = leakage.kernel_leak_params(w, cfg)
+    v0 = jax.random.normal(jax.random.fold_in(jax.random.PRNGKey(seed), 1),
+                           (4,)) * 0.3
+    a = leakage.leak_step(leakage.leak_step(v0, p, dt1), p, dt2)
+    b = leakage.leak_step(v0, p, dt1 + dt2)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=MAX_EXAMPLES, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), dt=st.floats(0.01, 1000.0))
+def test_leak_contraction_toward_vinf(seed, dt):
+    """|V(t) − V_inf| never grows — the ODE is a contraction."""
+    from repro.core import leakage
+    from repro.core.leakage import CircuitConfig, LeakageConfig
+    cfg = LeakageConfig(circuit=CircuitConfig.BASIC)
+    w = jax.random.normal(jax.random.PRNGKey(seed), (3, 3, 2, 4))
+    p = leakage.kernel_leak_params(w, cfg)
+    v0 = jax.random.normal(jax.random.fold_in(jax.random.PRNGKey(seed), 2),
+                           (4,)) * 0.4
+    v1 = leakage.leak_step(v0, p, dt)
+    d0 = np.abs(np.asarray(v0 - p.v_inf))
+    d1 = np.abs(np.asarray(v1 - p.v_inf))
+    assert (d1 <= d0 + 1e-7).all()
+
+
+# ---------------------------------------------------------------------------
+# analog quantizer
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=MAX_EXAMPLES, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       levels=st.sampled_from([4, 8, 16, 32]))
+def test_quantizer_error_bound(seed, levels):
+    """|w − q(w)| ≤ step/2 inside the clip range."""
+    from repro.core import analog
+    from repro.core.analog import AnalogConfig
+    cfg = AnalogConfig(weight_levels=levels)
+    w = jax.random.uniform(jax.random.PRNGKey(seed), (64,), minval=-1.0,
+                           maxval=1.0)
+    q = analog.quantize_weights(w, cfg)
+    step = cfg.w_clip / (levels // 2)
+    assert float(jnp.max(jnp.abs(q - w))) <= step / 2 + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# event pipeline conservation
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), factor=st.sampled_from([2, 4]))
+def test_refine_slots_conserves_events(seed, factor):
+    from repro.data import events as ev
+    x = jax.random.poisson(jax.random.PRNGKey(seed), 0.5,
+                           (2, 8, 2, 6, 6, 2)).astype(jnp.float32)
+    y = ev.refine_slots(x, factor)
+    assert y.shape[1] == 8 // factor
+    np.testing.assert_allclose(float(jnp.sum(y)), float(jnp.sum(x)))
+
+
+# ---------------------------------------------------------------------------
+# compression
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=MAX_EXAMPLES, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       n=st.integers(1, 700), block=st.sampled_from([32, 128, 256]),
+       scale=st.floats(1e-3, 1e3))
+def test_compression_roundtrip_any_shape(seed, n, block, scale):
+    from repro.distributed import compress_int8, decompress_int8
+    g = jax.random.normal(jax.random.PRNGKey(seed), (n,)) * scale
+    q, s, pad = compress_int8(g, block=block)
+    back = decompress_int8(q, s, pad, g.shape)
+    assert back.shape == g.shape
+    per_block_bound = np.repeat(np.asarray(s) / 2, block)[:n]
+    assert (np.abs(np.asarray(back - g)) <= per_block_bound + 1e-9).all()
+
+
+# ---------------------------------------------------------------------------
+# spike function / LIF
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=MAX_EXAMPLES, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_spikes_binary_and_monotone_in_drive(seed):
+    """Spike counts are non-decreasing in input drive (LIF monotonicity)."""
+    from repro.core.snn import LIFConfig, lif_over_time
+    x = jax.random.uniform(jax.random.PRNGKey(seed), (12, 8), minval=0.0,
+                           maxval=1.0)
+    s1 = lif_over_time(x, LIFConfig())
+    s2 = lif_over_time(x * 2.0, LIFConfig())
+    assert set(np.unique(np.asarray(s1))) <= {0.0, 1.0}
+    assert float(jnp.sum(s2)) >= float(jnp.sum(s1))
+
+
+# ---------------------------------------------------------------------------
+# elastic planner
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=50, deadline=None)
+@given(chips=st.integers(1, 512),
+       tp=st.sampled_from([1, 2, 4, 8, 16]),
+       batch=st.sampled_from([32, 256, 1024]))
+def test_elastic_plan_invariants(chips, tp, batch):
+    from repro.ft import plan_remesh
+    plan = plan_remesh(chips, tp=tp, global_batch=batch)
+    data, model = plan.mesh_shape
+    assert data * model <= chips              # never oversubscribe
+    assert model >= 1 and data >= 1
+    assert plan.dropped_chips >= 0
+    # effective batch is restored: accum * data ≥ batch
+    assert plan.grad_accum * data >= min(batch, data) \
+        or batch % data == 0
+
+
+# ---------------------------------------------------------------------------
+# checkpoint round-trip with random trees
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       depth=st.integers(1, 3))
+def test_checkpoint_roundtrip_random_trees(tmp_path_factory, seed, depth):
+    from repro.checkpoint import load_checkpoint, save_checkpoint
+    rng = np.random.default_rng(seed)
+    tmp = tmp_path_factory.mktemp(f"ck{seed}")
+
+    def build(d):
+        if d == 0:
+            return rng.normal(size=rng.integers(1, 5, size=2)).astype(
+                rng.choice([np.float32, np.float64]))
+        return {f"k{i}": build(d - 1) for i in range(rng.integers(1, 3))}
+
+    tree = {"root": build(depth)}
+    save_checkpoint(tmp, 1, tree)
+    got, _ = load_checkpoint(tmp)
+
+    flat_a = jax.tree.leaves(tree)
+    flat_b = jax.tree.leaves(got)
+    assert len(flat_a) == len(flat_b)
+    for a, b in zip(flat_a, flat_b):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# SSD numerical invariants
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), chunk=st.sampled_from([8, 16, 32]))
+def test_ssd_chunk_size_invariance(seed, chunk):
+    """The chunked algorithm's result is independent of chunk size."""
+    from repro.nn.ssm import ssd_chunked
+    k = jax.random.PRNGKey(seed)
+    ks = jax.random.split(k, 5)
+    b, s, h, p, g, n = 1, 32, 2, 8, 1, 4
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    B = jax.random.normal(ks[3], (b, s, g, n))
+    C = jax.random.normal(ks[4], (b, s, g, n))
+    y1, st1 = ssd_chunked(x, dt, A, B, C, chunk=chunk)
+    y2, st2 = ssd_chunked(x, dt, A, B, C, chunk=s)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=2e-3, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(st1), np.asarray(st2),
+                               rtol=2e-3, atol=2e-4)

@@ -1,0 +1,276 @@
+"""Sharding rules, optimizers, nn layer micro-tests, roofline HLO parser."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs import get_config, smoke_variant
+from repro.configs.base import SHAPES
+
+
+# ---------------------------------------------------------------------------
+# sharding rules
+# ---------------------------------------------------------------------------
+
+
+def _fake_mesh(shape, axes):
+    """Abstract mesh (no devices needed) for spec-resolution tests."""
+    devs = np.array(jax.devices() * int(np.prod(shape)))[:int(np.prod(shape))]
+    return Mesh(devs.reshape(shape), axes)
+
+
+class TestShardingRules:
+    def test_param_specs_cover_tree(self):
+        from repro.models import lm
+        from repro.sharding import rules
+        cfg = get_config("internlm2-1.8b")
+        shapes = jax.eval_shape(lambda k: lm.init_params(k, cfg),
+                                jax.random.PRNGKey(0))
+        mesh = _fake_mesh((2, 2), ("data", "model"))
+        specs = rules.param_pspecs(shapes, cfg, mesh)
+        flat_shapes = jax.tree.leaves(
+            shapes, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+        flat_specs = jax.tree.leaves(
+            specs, is_leaf=lambda x: isinstance(x, P))
+        assert len(flat_shapes) == len(flat_specs)
+
+    def test_divisibility_fallback_replicates(self):
+        """A dim that does not divide falls back to None, never errors."""
+        from repro.sharding.rules import _resolve
+        mesh = _fake_mesh((2, 3), ("data", "model"))
+        spec = _resolve(("model", None), mesh, False, (7, 4))
+        assert spec == P(None, None)
+        spec2 = _resolve(("model", None), mesh, False, (9, 4))
+        assert spec2 == P("model", None)
+
+    def test_attention_weights_tp_sharded(self):
+        from repro.models import lm
+        from repro.sharding import rules
+        from repro.utils import tree_paths
+        cfg = get_config("qwen3-32b")
+        shapes = jax.eval_shape(lambda k: lm.init_params(k, cfg),
+                                jax.random.PRNGKey(0))
+        mesh = _fake_mesh((2, 16), ("data", "model"))
+        specs = rules.param_pspecs(shapes, cfg, mesh)
+        flat = dict(tree_paths(specs))
+        wq = flat["blocks/attn/wq"]
+        assert "model" in jax.tree.leaves(tuple(wq))
+        # norms replicate
+        assert flat["final_norm"] == P()
+
+    def test_moe_ep_vs_tp_mode(self):
+        from repro.sharding.rules import _moe_mode
+        assert _moe_mode(get_config("granite-moe-1b-a400m")) == "EP"  # 32 % 16
+        assert _moe_mode(get_config("grok-1-314b")) == "TP"           # 8 < 16
+
+    def test_batch_specs_all_shapes(self):
+        from repro.sharding import rules
+        cfg = get_config("internlm2-1.8b")
+        mesh = _fake_mesh((4, 2), ("data", "model"))
+        for shape in SHAPES.values():
+            specs = rules.input_pspecs(cfg, shape, mesh)
+            assert "tokens" in specs and "labels" in specs
+
+    def test_zero1_shards_moments(self):
+        from repro.models import lm
+        from repro.sharding import rules
+        from repro.utils import tree_paths
+        cfg = get_config("internlm2-1.8b")   # tp mode, zero1 on
+        shapes = jax.eval_shape(lambda k: lm.init_params(k, cfg),
+                                jax.random.PRNGKey(0))
+        mesh = _fake_mesh((4, 4), ("data", "model"))
+        pspecs = rules.param_pspecs(shapes, cfg, mesh)
+        zspecs = rules.zero1_pspecs(pspecs, shapes, mesh, cfg)
+        flat_p = dict(tree_paths(pspecs))
+        flat_z = dict(tree_paths(zspecs))
+        # at least the big matmul moments must pick up a "data" axis
+        n_data = sum(1 for k, v in flat_z.items()
+                     if "data" in jax.tree.leaves(tuple(v)))
+        assert n_data > len(flat_z) // 2
+
+
+# ---------------------------------------------------------------------------
+# optimizers
+# ---------------------------------------------------------------------------
+
+
+class TestOptim:
+    def test_adamw_matches_reference_impl(self):
+        """One AdamW step against a hand-computed update."""
+        from repro.optim import adamw
+        from repro.optim.optimizers import apply_updates
+        lr, b1, b2, eps, wd = 0.1, 0.9, 0.999, 1e-8, 0.01
+        opt = adamw(lr, b1, b2, eps, wd)
+        p = {"w": jnp.array([1.0, -2.0])}
+        g = {"w": jnp.array([0.5, 0.3])}
+        st = opt.init(p)
+        up, st = opt.update(g, st, p)
+        m = (1 - b1) * np.array([0.5, 0.3])
+        v = (1 - b2) * np.array([0.5, 0.3]) ** 2
+        mhat = m / (1 - b1)
+        vhat = v / (1 - b2)
+        want = -lr * (mhat / (np.sqrt(vhat) + eps) + wd * np.array([1.0, -2.0]))
+        np.testing.assert_allclose(np.asarray(up["w"]), want, rtol=1e-5)
+        new_p = apply_updates(p, up)
+        np.testing.assert_allclose(np.asarray(new_p["w"]),
+                                   np.array([1.0, -2.0]) + want, rtol=1e-5)
+
+    def test_clip_by_global_norm(self):
+        from repro.optim import clip_by_global_norm
+        g = {"a": jnp.array([3.0]), "b": jnp.array([4.0])}
+        clipped, norm = clip_by_global_norm(g, 1.0)
+        assert abs(float(norm) - 5.0) < 1e-5
+        total = math.sqrt(sum(float(jnp.sum(x ** 2))
+                              for x in jax.tree.leaves(clipped)))
+        assert abs(total - 1.0) < 1e-4
+
+    def test_schedules(self):
+        from repro.optim.optimizers import warmup_cosine
+        s = warmup_cosine(1.0, warmup_steps=10, total_steps=110)
+        assert float(s(jnp.asarray(0))) == 0.0
+        assert abs(float(s(jnp.asarray(10))) - 1.0) < 1e-6
+        assert float(s(jnp.asarray(110))) <= 0.2
+
+    def test_adamw_converges_quadratic(self):
+        from repro.optim import adamw
+        from repro.optim.optimizers import apply_updates
+        opt = adamw(0.1, weight_decay=0.0)
+        p = {"w": jnp.array([5.0])}
+        st = opt.init(p)
+        for _ in range(200):
+            g = jax.grad(lambda q: jnp.sum((q["w"] - 2.0) ** 2))(p)
+            up, st = opt.update(g, st, p)
+            p = apply_updates(p, up)
+        assert abs(float(p["w"][0]) - 2.0) < 0.05
+
+
+# ---------------------------------------------------------------------------
+# nn layers micro
+# ---------------------------------------------------------------------------
+
+
+class TestLayers:
+    def test_rope_rotation_property(self):
+        """RoPE: relative dot products depend only on position delta."""
+        from repro.nn.layers import apply_rope
+        d = 32
+        x = jax.random.normal(jax.random.PRNGKey(0), (1, 1, 1, d))
+        y = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, d))
+        def dot_at(p_q, p_k):
+            q = apply_rope(x, jnp.array([[p_q]]), 10000.0)
+            k = apply_rope(y, jnp.array([[p_k]]), 10000.0)
+            return float(jnp.sum(q * k))
+        assert abs(dot_at(3, 1) - dot_at(10, 8)) < 1e-3
+        assert abs(dot_at(0, 0) - dot_at(7, 7)) < 1e-3
+
+    def test_attention_core_matches_naive(self):
+        from repro.kernels.flash_attention.ref import attention_ref
+        from repro.nn.layers import attention_core
+        B, S, H, KV, hd = 2, 24, 4, 2, 16
+        k = jax.random.PRNGKey(0)
+        q = jax.random.normal(k, (B, S, H, hd))
+        kk = jax.random.normal(jax.random.fold_in(k, 1), (B, S, KV, hd))
+        v = jax.random.normal(jax.random.fold_in(k, 2), (B, S, KV, hd))
+        out = attention_core(q, kk, v, causal=True, chunk=8)
+        # naive with GQA expansion
+        kk_e = jnp.repeat(kk, H // KV, axis=2)
+        v_e = jnp.repeat(v, H // KV, axis=2)
+        o_ref = attention_ref(
+            jnp.moveaxis(q, 2, 1).reshape(B * H, S, hd),
+            jnp.moveaxis(kk_e, 2, 1).reshape(B * H, S, hd),
+            jnp.moveaxis(v_e, 2, 1).reshape(B * H, S, hd), causal=True)
+        o_ref = jnp.moveaxis(o_ref.reshape(B, H, S, hd), 1, 2)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(o_ref),
+                                   rtol=2e-3, atol=2e-3)
+
+    def test_attention_nondivisible_kv_pads(self):
+        """Skv=10, chunk=8 → internal pad path (the llama-vision 1601 bug)."""
+        from repro.kernels.flash_attention.ref import attention_ref
+        from repro.nn.layers import attention_core
+        B, Sq, Skv, hd = 1, 4, 10, 8
+        k = jax.random.PRNGKey(0)
+        q = jax.random.normal(k, (B, Sq, 2, hd))
+        kk = jax.random.normal(jax.random.fold_in(k, 1), (B, Skv, 2, hd))
+        v = jax.random.normal(jax.random.fold_in(k, 2), (B, Skv, 2, hd))
+        out = attention_core(q, kk, v, causal=False, chunk=8)
+        o_ref = attention_ref(
+            jnp.moveaxis(q, 2, 1).reshape(2, Sq, hd),
+            jnp.moveaxis(kk, 2, 1).reshape(2, Skv, hd),
+            jnp.moveaxis(v, 2, 1).reshape(2, Skv, hd), causal=False)
+        o_ref = jnp.moveaxis(o_ref.reshape(B, 2, Sq, hd), 1, 2)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(o_ref),
+                                   rtol=2e-3, atol=2e-3)
+
+    def test_chunked_ce_matches_full(self):
+        from repro.nn.layers import (chunked_cross_entropy, embed_init,
+                                     softmax_cross_entropy, unembed_apply)
+        cfg = smoke_variant(get_config("internlm2-1.8b"))
+        p = embed_init(jax.random.PRNGKey(0), cfg)
+        h = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model))
+        labels = jax.random.randint(jax.random.PRNGKey(2), (2, 16), 0,
+                                    cfg.vocab_size)
+        full = softmax_cross_entropy(unembed_apply(p, h, cfg), labels).mean()
+        chunked = chunked_cross_entropy(p, h, labels, cfg, seq_chunk=4)
+        np.testing.assert_allclose(float(chunked), float(full), rtol=1e-5)
+
+    def test_rmsnorm_unit_scale(self):
+        from repro.nn.layers import rmsnorm
+        x = jax.random.normal(jax.random.PRNGKey(0), (4, 64)) * 10
+        y = rmsnorm(x, jnp.ones((64,)))
+        rms = jnp.sqrt(jnp.mean(y * y, axis=-1))
+        np.testing.assert_allclose(np.asarray(rms), 1.0, rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# roofline HLO parser
+# ---------------------------------------------------------------------------
+
+
+class TestRooflineParser:
+    def test_counts_scanned_loop_flops(self):
+        """A scan over L matmuls must count L× the FLOPs (the whole point
+        of the loop-aware parser vs cost_analysis)."""
+        from repro.roofline.hlo import analyze_hlo
+        L, n = 8, 32
+        w = jax.random.normal(jax.random.PRNGKey(0), (L, n, n))
+
+        def f(x, ws):
+            def body(h, wi):
+                return h @ wi, None
+            h, _ = jax.lax.scan(body, x, ws)
+            return h
+
+        hlo = jax.jit(f).lower(jnp.ones((n, n)), w).compile().as_text()
+        parsed = analyze_hlo(hlo)
+        want = 2 * n * n * n * L
+        assert parsed.flops >= want * 0.9, (parsed.flops, want)
+        assert parsed.flops <= want * 1.5
+
+    def test_collective_bytes_all_reduce(self):
+        from repro.roofline.hlo import analyze_hlo
+        hlo = """
+HloModule m
+ENTRY %main (p: f32[1024]) -> f32[1024] {
+  %p = f32[1024] parameter(0)
+  ROOT %ar = f32[1024] all-reduce(%p), replica_groups={{0,1}}, to_apply=%add
+}
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+"""
+        parsed = analyze_hlo(hlo)
+        assert parsed.collective_bytes == 1024 * 4
+
+    def test_roofline_terms_dominance(self):
+        from repro.roofline.model import roofline_terms
+        t = roofline_terms(flops=1e18, bytes_accessed=1e12,
+                           collective_bytes=1e10, chips=256)
+        assert t["dominant"] == "compute"
+        t2 = roofline_terms(flops=1e12, bytes_accessed=1e15,
+                            collective_bytes=1e10, chips=256)
+        assert t2["dominant"] == "memory"
