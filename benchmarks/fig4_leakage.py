@@ -12,50 +12,57 @@ import jax.numpy as jnp
 
 from repro.core import leakage
 from repro.core.leakage import CircuitConfig, LeakageConfig
-from repro.core.p2m_layer import P2MConfig, p2m_forward_scan, p2m_init
+from repro.core.p2m_layer import P2MConfig, p2m_forward_scan_stacked, \
+    p2m_forward_scan, p2m_init
 
 from benchmarks.common import emit, save_json
 
-CONFIGS = (CircuitConfig.BASIC, CircuitConfig.SWITCH, CircuitConfig.NULLIFIED)
-
 
 def retention_traces(t_ms: float = 10.0, n_points: int = 50) -> dict:
-    """Fig 4a: V(t) under no drive, starting from a stored value."""
+    """Fig 4a: V(t) under no drive, starting from a stored value.
+
+    Uses the shared engine API (leakage.retention_traces over
+    leakage.paper_circuits) — the circuit constants live in leakage.py only.
+    """
     key = jax.random.PRNGKey(0)
     w = jax.random.normal(key, (3, 3, 2, 8)) * 0.5
-    v0 = jnp.full((8,), 0.2)
+    v0 = 0.2
     ts = jnp.linspace(0.0, t_ms, n_points)
+    cfgs = leakage.paper_circuits()
+    traces = leakage.retention_traces(w, cfgs, ts, v0)     # [n_cfg, n_t, F]
     out = {"t_ms": ts.tolist()}
-    for c in CONFIGS:
-        p = leakage.kernel_leak_params(w, LeakageConfig(circuit=c))
-        vs = jax.vmap(lambda t: leakage.leak_step(v0, p, t))(ts)
-        out[c.value] = vs.tolist()
+    for c, vs in zip(cfgs, traces):
+        out[c.circuit.value] = vs.tolist()
         final_err = float(jnp.mean(jnp.abs(vs[-1] - v0)))
-        emit(f"fig4a/config_{c.value}", None,
+        emit(f"fig4a/config_{c.circuit.value}", None,
              f"dV_at_{t_ms}ms={final_err * 1e3:.2f}mV")
     return out
 
 
 def driven_error(t_grid=(1.0, 10.0, 100.0)) -> dict:
-    """Fig 4b-d: |V_pre − V_ideal| at the comparator for driven input."""
+    """Fig 4b-d: |V_pre − V_ideal| at the comparator for driven input.
+
+    One stacked scan covers all three circuits per T_INTG (the batched
+    engine path) instead of a python loop per config.
+    """
     out = {}
     key = jax.random.PRNGKey(1)
+    leak_cfgs = leakage.paper_circuits()
     for t_ms in t_grid:
+        cfg = P2MConfig(out_channels=8, n_sub=4, t_intg_ms=t_ms, mode="scan")
+        params = p2m_init(key, cfg)
+        ev = jax.random.poisson(jax.random.fold_in(key, 7), 0.3,
+                                (2, 2, 4, 12, 12, 2)).astype(jnp.float32)
+        _, v_all = p2m_forward_scan_stacked(params, ev, cfg, leak_cfgs)
+        cfg_i = P2MConfig(out_channels=8, n_sub=4, t_intg_ms=t_ms,
+                          mode="scan",
+                          leak=LeakageConfig(circuit=CircuitConfig.IDEAL))
+        _, v_i = p2m_forward_scan(params, ev, cfg_i)
         row = {}
-        for c in CONFIGS:
-            cfg = P2MConfig(out_channels=8, n_sub=4, t_intg_ms=t_ms,
-                            mode="scan", leak=LeakageConfig(circuit=c))
-            params = p2m_init(key, cfg)
-            ev = jax.random.poisson(jax.random.fold_in(key, 7), 0.3,
-                                    (2, 2, 4, 12, 12, 2)).astype(jnp.float32)
-            _, v = p2m_forward_scan(params, ev, cfg)
-            cfg_i = P2MConfig(out_channels=8, n_sub=4, t_intg_ms=t_ms,
-                              mode="scan",
-                              leak=LeakageConfig(circuit=CircuitConfig.IDEAL))
-            _, v_i = p2m_forward_scan(params, ev, cfg_i)
+        for c, v in zip(leak_cfgs, v_all):
             err_mv = float(jnp.mean(jnp.abs(v - v_i))) * 1e3
-            row[c.value] = err_mv
-            emit(f"fig4bcd/t{int(t_ms)}ms/config_{c.value}", None,
+            row[c.circuit.value] = err_mv
+            emit(f"fig4bcd/t{int(t_ms)}ms/config_{c.circuit.value}", None,
                  f"mean_err={err_mv:.2f}mV")
         out[f"t{int(t_ms)}ms"] = row
     return out

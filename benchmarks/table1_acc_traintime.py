@@ -9,7 +9,7 @@ from __future__ import annotations
 
 from dataclasses import replace
 
-from repro.core import codesign
+from repro.core import sweep as engine
 from repro.core.codesign import P2MModelConfig, SweepConfig
 from repro.core.leakage import CircuitConfig, LeakageConfig
 from repro.core.p2m_layer import P2MConfig
@@ -39,20 +39,22 @@ def _data(kind: str, hw: int):
 
 def run(fast: bool = False) -> dict:
     sweep = SweepConfig(
-        t_intg_grid_ms=GRID if not fast else (10.0, 1000.0),
         batch_size=4,
         pretrain_steps=30 if not fast else 4,
         finetune_steps=8 if not fast else 2,
         eval_batches=6 if not fast else 2,
         lr=2e-3)
+    grid = engine.SweepGrid(circuits=(CircuitConfig.NULLIFIED,),
+                            t_intg_grid_ms=GRID if not fast
+                            else (10.0, 1000.0))
     out = {}
     for kind in ("gesture", "nmnist"):
         hw = 24 if kind == "gesture" else 20
-        recs = codesign.run_sweep(_data(kind, hw), _model(
-            hw, 11 if kind == "gesture" else 10), sweep,
-            log=lambda *_: None)
-        out[kind] = recs
-        for r in recs:
+        result = engine.run_grid(_data(kind, hw),
+                                 _model(hw, 11 if kind == "gesture" else 10),
+                                 sweep, grid, log=lambda *_: None)
+        out[kind] = result.to_artifact()
+        for r in result.records:
             emit(f"table1/{kind}/t{int(r['t_intg_ms'])}ms",
                  r["train_time_per_step_s"] * 1e6,
                  f"acc={r['accuracy']:.3f};train_norm={r['train_time_norm']:.2f}")

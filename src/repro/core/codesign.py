@@ -10,7 +10,6 @@ Training protocol (paper §3):
 """
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass, field, replace
 from functools import partial
 from typing import Any
@@ -18,13 +17,12 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from repro.core import energy as energy_mod
 from repro.core import p2m_layer, snn
 from repro.core.leakage import CircuitConfig, LeakageConfig
 from repro.core.p2m_layer import P2MConfig
 from repro.core.snn import SpikingCNNConfig
 from repro.data import events as events_mod
-from repro.optim import adamw, clip_by_global_norm
+from repro.optim import clip_by_global_norm
 from repro.optim.optimizers import apply_updates
 
 Params = dict
@@ -135,109 +133,28 @@ def run_sweep(data_cfg: events_mod.EventStreamConfig,
               sweep: SweepConfig,
               circuit: CircuitConfig = CircuitConfig.NULLIFIED,
               log: Any = print) -> list[dict]:
-    """Run the co-design T_INTG sweep. Returns one record per grid point with
-    accuracy, wall-clock train time, bandwidth ratio, and backend energies.
+    """Run the co-design T_INTG sweep for ONE circuit config. Returns one
+    record per grid point with accuracy, wall-clock train time, bandwidth
+    ratio, and backend energies.
+
+    This is a single-circuit wrapper over the batched engine in
+    ``repro.core.sweep`` — the same vectorized path that sweeps all circuit
+    configs at once; here the stacked config axis just has length 1. The
+    normalization semantics are the engine's: bandwidth and per-step train
+    time are normalized to the longest-T point, and the energy improvement
+    is computed against a SINGLE conventional reference (the digital
+    backend always integrates at the accuracy-optimal long T — paper Fig 2
+    right: the P²M advantage grows with T_INTG).
     """
-    key = jax.random.PRNGKey(sweep.seed)
-    records = []
+    from repro.core import sweep as sweep_engine
 
-    # --- phase 1: pretrain once at the longest T_INTG (coarse == fine) -----
-    t_long = sweep.t_intg_grid_ms[-1]
-    pre_cfg = replace(
-        model_cfg,
-        p2m=replace(model_cfg.p2m, t_intg_ms=t_long, mode="curvefit",
-                    leak=replace(model_cfg.p2m.leak, circuit=CircuitConfig.IDEAL)))
-    params, state = model_init(key, pre_cfg)
-    opt = adamw(sweep.lr)
-    opt_state = opt.init(params)
-    step_fn = make_train_step(pre_cfg, opt, freeze_p2m=False)
-    for i in range(sweep.pretrain_steps):
-        key, kb = jax.random.split(key)
-        ev, labels = events_mod.sample_batch(kb, data_cfg, sweep.batch_size,
-                                             t_long, n_sub=pre_cfg.p2m.n_sub)
-        params, opt_state, state, m, _ = step_fn(params, opt_state, state, ev, labels)
-        if i % 10 == 0:
-            log(f"[pretrain] step {i} loss={float(m['loss']):.3f} "
-                f"acc={float(m['acc']):.3f}")
-    pre_params, pre_state = params, state
-
-    # --- phase 2: per-T_INTG constrain layer-1, freeze, finetune backbone --
-    for t_ms in sweep.t_intg_grid_ms:
-        cfg_t = replace(
-            model_cfg,
-            p2m=replace(model_cfg.p2m, t_intg_ms=t_ms, mode="curvefit",
-                        leak=replace(model_cfg.p2m.leak, circuit=circuit)))
-        params = jax.tree.map(jnp.copy, pre_params)
-        state = jax.tree.map(jnp.copy, pre_state)
-        opt_state = opt.init(params)
-        step_fn = make_train_step(cfg_t, opt, freeze_p2m=True)
-        # warmup step: exclude jit compile from the train-time measurement
-        # (the paper's training-time column is steady-state epochs)
-        key, kw = jax.random.split(key)
-        ev_w, lab_w = events_mod.sample_batch(kw, data_cfg, sweep.batch_size,
-                                              t_ms, n_sub=cfg_t.p2m.n_sub)
-        params, opt_state, state, m, _ = step_fn(params, opt_state, state,
-                                                 ev_w, lab_w)
-        jax.block_until_ready(m["loss"])
-        t0 = time.perf_counter()
-        for i in range(sweep.finetune_steps):
-            key, kb = jax.random.split(key)
-            ev, labels = events_mod.sample_batch(kb, data_cfg, sweep.batch_size,
-                                                 t_ms, n_sub=cfg_t.p2m.n_sub)
-            params, opt_state, state, m, _ = step_fn(
-                params, opt_state, state, ev, labels)
-        jax.block_until_ready(m["loss"])
-        train_s = time.perf_counter() - t0
-
-        # eval: accuracy + spike statistics for bandwidth/energy
-        eval_fn = make_eval_fn(cfg_t)
-        accs, l1_spikes, in_events, macs, aux_sum = [], 0.0, 0.0, 0.0, None
-        for _ in range(sweep.eval_batches):
-            key, kb = jax.random.split(key)
-            ev, labels = events_mod.sample_batch(kb, data_cfg, sweep.batch_size,
-                                                 t_ms, n_sub=cfg_t.p2m.n_sub)
-            m, aux = eval_fn(params, state, ev, labels)
-            accs.append(float(m["acc"]))
-            l1_spikes += float(aux["spikes/p2m"])
-            in_events += float(aux["events/in"])
-            macs += float(aux["macs/p2m"])
-            aux_f = {k: float(v) for k, v in aux.items()}
-            aux_sum = aux_f if aux_sum is None else {
-                k: aux_sum[k] + v for k, v in aux_f.items()}
-
-        bw = energy_mod.bandwidth_ratio(l1_spikes, in_events)
-        e_conv = energy_mod.backend_energy_conventional(aux_sum, macs)
-        e_p2m = energy_mod.backend_energy_p2m(aux_sum, l1_spikes, macs)
-        e_sensor = energy_mod.sensor_energy_p2m(macs)
-        rec = {
-            "sensor_energy_p2m_j": e_sensor,
-            "t_intg_ms": t_ms,
-            "circuit": circuit.value,
-            "accuracy": sum(accs) / len(accs),
-            "train_time_s": train_s,
-            "train_time_per_step_s": train_s / sweep.finetune_steps,
-            "bandwidth_ratio": bw,
-            "backend_energy_conventional_j": e_conv,
-            "backend_energy_p2m_j": e_p2m,
-            "layer1_spikes": l1_spikes,
-            "input_events": in_events,
-        }
-        log(f"[sweep t={t_ms}ms] acc={rec['accuracy']:.3f} "
-            f"bw={bw:.4f} train={train_s:.1f}s")
-        records.append(rec)
-
-    # normalize bandwidth + training time to the longest-T point (paper's 1x)
-    # and compute the energy improvement against a SINGLE conventional
-    # reference: the digital backend has no leakage constraint, so it always
-    # integrates at the accuracy-optimal long T — the energy advantage of
-    # P²M then *grows* with T_INTG (paper Fig 2 right: 2.4x→6.25x), because
-    # the short-T P²M points pay more analog windows + spike transmissions.
-    base = records[-1]
-    e_conv_ref = base["backend_energy_conventional_j"]
-    for r in records:
-        r["bandwidth_norm"] = r["bandwidth_ratio"] / max(base["bandwidth_ratio"], 1e-12)
-        r["train_time_norm"] = (r["train_time_per_step_s"] /
-                                max(base["train_time_per_step_s"], 1e-12))
-        r["energy_improvement"] = e_conv_ref / max(r["backend_energy_p2m_j"],
-                                                   1e-30)
-    return records
+    mcfg = replace(model_cfg,
+                   p2m=replace(model_cfg.p2m,
+                               leak=replace(model_cfg.p2m.leak,
+                                            circuit=circuit)))
+    grid = sweep_engine.SweepGrid(
+        circuits=(circuit,),
+        t_intg_grid_ms=tuple(sweep.t_intg_grid_ms),
+        null_mismatch=(mcfg.p2m.leak.null_mismatch,))
+    result = sweep_engine.run_grid(data_cfg, mcfg, sweep, grid, log=log)
+    return result.records

@@ -26,7 +26,8 @@ visibly at 1–10 ms, (c) holds at 10 ms and degrades by 100 ms.
 from __future__ import annotations
 
 import enum
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
+from typing import Sequence
 
 import jax
 import jax.numpy as jnp
@@ -61,10 +62,16 @@ class LeakParams:
     """Per-kernel leak linearization: dV/dt = -(V - v_inf)/tau.
 
     ``v_inf`` is expressed in *swing* coordinates (0 = precharge level), and
-    both fields broadcast against a trailing filter axis.
+    both fields broadcast against a trailing filter axis. Registered as a
+    pytree so the batched sweep paths can ``vmap`` over a stacked leading
+    circuit-config axis (see :func:`stacked_leak_params`).
     """
     v_inf: jax.Array     # asymptotic swing per filter
     tau_ms: jax.Array    # time constant per filter (ms)
+
+
+jax.tree_util.register_dataclass(
+    LeakParams, data_fields=["v_inf", "tau_ms"], meta_fields=[])
 
 
 def kernel_leak_params(w: jax.Array, cfg: LeakageConfig) -> LeakParams:
@@ -100,8 +107,39 @@ def kernel_leak_params(w: jax.Array, cfg: LeakageConfig) -> LeakParams:
     return LeakParams(v_inf=v_inf, tau_ms=tau)
 
 
+def stacked_leak_params(w: jax.Array, cfgs: Sequence[LeakageConfig]
+                        ) -> LeakParams:
+    """Leak linearizations for several circuit configs, stacked on axis 0.
+
+    Returns ``LeakParams`` whose fields have shape ``[n_cfg, ...filters]`` —
+    the leading axis is the circuit-config axis that the batched sweep
+    engine (core/sweep.py) and the multi-config Pallas kernel grid iterate
+    over. ``leak_step``/``decay_factor``/``retention_error`` all broadcast
+    against it unchanged.
+    """
+    per = [kernel_leak_params(w, c) for c in cfgs]
+    return LeakParams(v_inf=jnp.stack([p.v_inf for p in per]),
+                      tau_ms=jnp.stack([p.tau_ms for p in per]))
+
+
+def paper_circuits() -> tuple[LeakageConfig, ...]:
+    """The paper's three MAC circuit configs (Fig 3a/3b/3c) with the
+    defaults used throughout the repo — the single home for these
+    constants (benchmarks and examples must not rebuild them ad hoc)."""
+    return (LeakageConfig(circuit=CircuitConfig.BASIC),
+            LeakageConfig(circuit=CircuitConfig.SWITCH),
+            LeakageConfig(circuit=CircuitConfig.NULLIFIED))
+
+
+def with_mismatch(cfg: LeakageConfig, mismatch: float) -> LeakageConfig:
+    """A copy of ``cfg`` with the nullifier mismatch overridden."""
+    return replace(cfg, null_mismatch=mismatch)
+
+
 def decay_factor(tau_ms: jax.Array, dt_ms: float | jax.Array) -> jax.Array:
-    """exp(-dt/tau), safe at tau = inf."""
+    """exp(-dt/tau), safe at tau = inf. Vectorizes elementwise, so stacked
+    ``[n_cfg, F]`` time constants from :func:`stacked_leak_params` work
+    unchanged."""
     return jnp.where(jnp.isinf(tau_ms), 1.0, jnp.exp(-dt_ms / jnp.maximum(tau_ms, 1e-9)))
 
 
@@ -114,3 +152,28 @@ def leak_step(v: jax.Array, params: LeakParams, dt_ms: float | jax.Array) -> jax
 def retention_error(params: LeakParams, v0: jax.Array, t_ms: float) -> jax.Array:
     """|V(t) - V(0)| with no input drive — the Fig 4a experiment."""
     return jnp.abs(leak_step(v0, params, t_ms) - v0)
+
+
+def retention_traces(w: jax.Array, cfgs: Sequence[LeakageConfig],
+                     ts_ms: jax.Array, v0: float | jax.Array = 0.2
+                     ) -> jax.Array:
+    """Undriven voltage traces V(t) for each circuit config (Fig 4a).
+
+    Returns ``[n_cfg, n_t, F]`` voltages starting from swing ``v0``.
+    """
+    lk = stacked_leak_params(w, cfgs)
+    v0 = jnp.broadcast_to(jnp.asarray(v0, jnp.float32), lk.v_inf.shape)
+
+    def at_t(t):
+        return leak_step(v0, lk, t)              # [n_cfg, F]
+
+    return jnp.moveaxis(jax.vmap(at_t)(jnp.asarray(ts_ms)), 0, 1)
+
+
+def retention_surface(w: jax.Array, cfgs: Sequence[LeakageConfig],
+                      t_grid_ms: Sequence[float], v0: float = 0.2
+                      ) -> jax.Array:
+    """Mean retention error |V(t)-V(0)| per (config, T_INTG) — the
+    ``[n_cfg, n_t]`` surface the sweep artifact reports."""
+    traces = retention_traces(w, cfgs, jnp.asarray(list(t_grid_ms)), v0)
+    return jnp.mean(jnp.abs(traces - v0), axis=-1)

@@ -84,18 +84,15 @@ def effective_weights(params: Params, cfg: P2MConfig) -> jax.Array:
     return analog.quantize_weights(params["w"], cfg.analog)
 
 
-def p2m_forward_scan(params: Params, events: jax.Array, cfg: P2MConfig
-                     ) -> tuple[jax.Array, jax.Array]:
-    """Exact event-driven integration (hardware simulator).
+def _forward_scan_lk(params: Params, events: jax.Array, cfg: P2MConfig,
+                     w_q: jax.Array, lk: leakage.LeakParams) -> jax.Array:
+    """Scan-mode voltage integration for one explicit leak linearization.
 
-    events: [B, T_out, n_sub, H, W, C_in] event counts per sub-slot.
-    Returns (spikes [B, T_out, H', W', C_out], v_pre [same]) where v_pre is
-    the pre-comparator voltage at the end of each integration window.
+    Shared body for the single-config path (lk from ``cfg.leak``) and the
+    stacked multi-circuit path (vmapped over a leading config axis of lk).
+    Returns v_pre [B, T_out, H', W', C_out].
     """
     B, T_out, n_sub = events.shape[:3]
-    w_q = effective_weights(params, cfg)
-    lk = leakage.kernel_leak_params(w_q, cfg.leak)
-    pv = {"gain": params["pv_gain"], "pv": None, "offset": params["pv_offset"]}
 
     def window(ev_win):  # ev_win: [n_sub, B, H, W, C_in]
         h_out = ev_win.shape[2] // cfg.stride
@@ -119,7 +116,38 @@ def p2m_forward_scan(params: Params, events: jax.Array, cfg: P2MConfig
     # [B, T_out, n_sub, H, W, C] → [T_out, n_sub, B, H, W, C]
     ev = jnp.moveaxis(events, (1, 2), (0, 1))
     v_pre = lax.map(window, ev)                      # [T_out, B, H', W', C_out]
-    v_pre = jnp.moveaxis(v_pre, 0, 1)                # [B, T_out, ...]
+    return jnp.moveaxis(v_pre, 0, 1)                 # [B, T_out, ...]
+
+
+def p2m_forward_scan(params: Params, events: jax.Array, cfg: P2MConfig
+                     ) -> tuple[jax.Array, jax.Array]:
+    """Exact event-driven integration (hardware simulator).
+
+    events: [B, T_out, n_sub, H, W, C_in] event counts per sub-slot.
+    Returns (spikes [B, T_out, H', W', C_out], v_pre [same]) where v_pre is
+    the pre-comparator voltage at the end of each integration window.
+    """
+    w_q = effective_weights(params, cfg)
+    lk = leakage.kernel_leak_params(w_q, cfg.leak)
+    v_pre = _forward_scan_lk(params, events, cfg, w_q, lk)
+    spikes = spike_fn(v_pre - cfg.v_threshold)
+    return spikes, v_pre
+
+
+def p2m_forward_scan_stacked(params: Params, events: jax.Array,
+                             cfg: P2MConfig,
+                             leak_cfgs: tuple[LeakageConfig, ...]
+                             ) -> tuple[jax.Array, jax.Array]:
+    """Scan-mode integration under several circuit configs at once.
+
+    Returns (spikes, v_pre), both [n_cfg, B, T_out, H', W', C_out]. The
+    quantized weights / conv are config-independent; only the leak
+    linearization varies, so the vmap re-runs just the voltage recursion.
+    """
+    w_q = effective_weights(params, cfg)
+    lk = leakage.stacked_leak_params(w_q, leak_cfgs)      # [n_cfg, F]
+    v_pre = jax.vmap(
+        lambda l: _forward_scan_lk(params, events, cfg, w_q, l))(lk)
     spikes = spike_fn(v_pre - cfg.v_threshold)
     return spikes, v_pre
 
@@ -134,29 +162,44 @@ def p2m_forward_curvefit(params: Params, events: jax.Array, cfg: P2MConfig
     weighted sum through the fitted non-linearity (paper §2: curve-fitting
     function accounting for non-linearity, non-ideality, process variation).
     """
+    spikes, v_pre = p2m_forward_curvefit_stacked(params, events, cfg,
+                                                 (cfg.leak,))
+    return spikes[0], v_pre[0]
+
+
+def p2m_forward_curvefit_stacked(params: Params, events: jax.Array,
+                                 cfg: P2MConfig,
+                                 leak_cfgs: tuple[LeakageConfig, ...]
+                                 ) -> tuple[jax.Array, jax.Array]:
+    """Curve-fit model under a stacked circuit-config axis.
+
+    The per-sub-slot ideal conv is config-independent and computed ONCE;
+    each config then reduces it with its own [n_sub, C_out] decay weights —
+    so sweeping n_cfg circuits costs one conv plus n_cfg cheap einsums.
+    Returns (spikes, v_pre), both [n_cfg, B, T_out, H', W', C_out].
+    """
     B, T_out, n_sub = events.shape[:3]
     w_q = effective_weights(params, cfg)
-    lk = leakage.kernel_leak_params(w_q, cfg.leak)
-    a = leakage.decay_factor(lk.tau_ms, cfg.dt_ms)            # [C_out]
+    lk = leakage.stacked_leak_params(w_q, leak_cfgs)          # [n_cfg, C_out]
+    a = leakage.decay_factor(lk.tau_ms, cfg.dt_ms)            # [n_cfg, C_out]
     # decay weight for sub-slot k (0-indexed; readout after slot n_sub-1)
     k = jnp.arange(n_sub)
-    decay_w = a[None, :] ** (n_sub - 1 - k)[:, None]          # [n_sub, C_out]
+    decay_w = a[:, None, :] ** (n_sub - 1 - k)[None, :, None]  # [n_cfg,n_sub,C]
     # bias toward v_inf accumulates too: (1-a^(n-k)) v_inf summed — the
     # homogeneous part of the ODE between events
-    drift = jnp.sum((1.0 - decay_w), axis=0) * lk.v_inf / n_sub
+    drift = jnp.sum((1.0 - decay_w), axis=1) * lk.v_inf / n_sub  # [n_cfg, C]
 
-    ev_flat = events.reshape((B * T_out, n_sub) + events.shape[3:])
-    # conv each sub-slot then weight: do conv once on the sum trick —
-    # conv is linear, so conv(Σ_k decay_k · ev_k) ≠ Σ_k decay_k conv(ev_k)
-    # only because decay depends on C_out; apply conv per-subslot via einsum:
-    # cheaper: conv(ev_k) for all k by folding n_sub into batch.
-    tb = ev_flat.reshape((B * T_out * n_sub,) + events.shape[3:])
+    # conv each sub-slot then weight: conv is linear, but decay depends on
+    # C_out, so fold n_sub into batch, conv once, and einsum per config.
+    tb = events.reshape((B * T_out * n_sub,) + events.shape[3:])
     ideal = _conv(tb, w_q, cfg.stride) * cfg.analog.dv_unit
     ideal = ideal.reshape((B * T_out, n_sub) + ideal.shape[1:])
-    x = jnp.einsum("bk...c,kc->b...c", ideal, decay_w) + drift
+    x = jnp.einsum("bk...c,gkc->gb...c", ideal, decay_w)
+    x = x + drift.reshape((len(leak_cfgs),) + (1,) * (x.ndim - 2)
+                          + drift.shape[-1:])
     pv = {"gain": params["pv_gain"], "offset": params["pv_offset"]}
     v_pre = analog.transfer_curve(x, cfg.analog, pv)
-    v_pre = v_pre.reshape((B, T_out) + v_pre.shape[1:])
+    v_pre = v_pre.reshape((len(leak_cfgs), B, T_out) + v_pre.shape[2:])
     spikes = spike_fn(v_pre - cfg.v_threshold)
     return spikes, v_pre
 
@@ -171,6 +214,26 @@ def p2m_apply(params: Params, events: jax.Array, cfg: P2MConfig,
     if cfg.mode == "kernel":
         from repro.kernels.p2m_conv import ops as p2m_ops
         return p2m_ops.p2m_conv(params, events, cfg)
+    raise ValueError(f"unknown mode {cfg.mode}")
+
+
+def p2m_apply_stacked(params: Params, events: jax.Array, cfg: P2MConfig,
+                      leak_cfgs: tuple[LeakageConfig, ...]
+                      ) -> tuple[jax.Array, jax.Array]:
+    """Batched dispatch on cfg.mode over a circuit-config axis.
+
+    events: [B, T_out, n_sub, H, W, C_in] → (spikes, v_pre), both
+    [n_cfg, B, T_out, H', W', C_out]. ``leak_cfgs`` overrides ``cfg.leak``;
+    mode "kernel" runs the multi-config Pallas grid, "scan"/"curvefit" the
+    vectorized XLA paths.
+    """
+    if cfg.mode == "scan":
+        return p2m_forward_scan_stacked(params, events, cfg, leak_cfgs)
+    if cfg.mode == "curvefit":
+        return p2m_forward_curvefit_stacked(params, events, cfg, leak_cfgs)
+    if cfg.mode == "kernel":
+        from repro.kernels.p2m_conv import ops as p2m_ops
+        return p2m_ops.p2m_conv_multi(params, events, cfg, leak_cfgs)
     raise ValueError(f"unknown mode {cfg.mode}")
 
 

@@ -1,0 +1,412 @@
+"""Batched co-design sweep engine (paper Fig 2 / Fig 4 / Table 1).
+
+The paper's central contribution is the trade-off analysis across the three
+analog MAC circuit configs (basic / isolation-switch / nullified) and the
+integration time T_INTG. This module evaluates the FULL grid
+
+    CircuitConfig × T_INTG × null_mismatch
+
+in ONE process: the circuit/mismatch axis is vectorized — a stacked leading
+config axis runs through the leak linearization (leakage.stacked_leak_params),
+the P²M forward paths (p2m_layer.p2m_apply_stacked / the multi-config Pallas
+kernel grid), and a vmapped backbone finetune+eval — so each T_INTG point is
+one jitted compile covering every circuit config, instead of the historical
+one-subprocess-per-cell sweep. T_INTG remains a python loop because it
+changes tensor shapes (T_out = duration / T_INTG).
+
+Protocol per grid point (mirrors codesign.py, paper §3):
+  phase 1  pretrain the whole net once at the longest T_INTG, no circuit
+           constraints (shared across ALL grid points);
+  phase 2  per T_INTG: constrain layer 1 under every circuit config at once
+           (frozen), finetune all backbones in parallel via vmap, then
+           batch-evaluate accuracy / bandwidth / energy; retention-error
+           surfaces come from the closed-form leak ODE.
+
+``codesign.run_sweep`` is a thin single-circuit wrapper over this engine.
+"""
+from __future__ import annotations
+
+import math
+import time
+from dataclasses import dataclass, replace
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import energy as energy_mod
+from repro.core import leakage, p2m_layer, snn
+from repro.core.leakage import CircuitConfig, LeakageConfig
+from repro.data import events as events_mod
+from repro.optim import adamw, clip_by_global_norm
+from repro.optim.optimizers import apply_updates
+
+Params = dict
+
+SCHEMA = "p2m-codesign-sweep/v1"
+
+
+# ---------------------------------------------------------------------------
+# the grid
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class SweepGrid:
+    """The co-design grid. ``null_mismatch`` expands only the NULLIFIED
+    circuit (configs (a)/(b) have no nullifier, so mismatch variants would
+    be duplicates)."""
+    circuits: tuple[CircuitConfig, ...] = (
+        CircuitConfig.BASIC, CircuitConfig.SWITCH, CircuitConfig.NULLIFIED)
+    t_intg_grid_ms: tuple[float, ...] = (1.0, 10.0, 100.0, 1000.0)
+    null_mismatch: tuple[float, ...] = (0.06,)
+
+
+def paper_grid() -> SweepGrid:
+    """All three circuits × the paper's T_INTG grid."""
+    return SweepGrid()
+
+
+def fast_grid() -> SweepGrid:
+    return SweepGrid(t_intg_grid_ms=(10.0, 1000.0))
+
+
+def expand_leak_configs(grid: SweepGrid, base: LeakageConfig
+                        ) -> tuple[LeakageConfig, ...]:
+    """Flatten (circuits × mismatch) into the stacked config axis."""
+    out = []
+    for c in grid.circuits:
+        if c == CircuitConfig.NULLIFIED:
+            for m in grid.null_mismatch:
+                out.append(replace(base, circuit=c, null_mismatch=m))
+        else:
+            out.append(replace(base, circuit=c))
+    return tuple(out)
+
+
+def config_label(lc: LeakageConfig) -> str:
+    if lc.circuit == CircuitConfig.NULLIFIED:
+        return f"{lc.circuit.value}@m={lc.null_mismatch:g}"
+    return lc.circuit.value
+
+
+# ---------------------------------------------------------------------------
+# batched layer-1 → backbone plumbing
+# ---------------------------------------------------------------------------
+
+def _stack_tree(tree, n: int):
+    return jax.tree.map(lambda x: jnp.stack([x] * n), tree)
+
+
+def _layer1_coarse(p2m_params: Params, events: jax.Array, model_cfg,
+                   leak_cfgs: tuple[LeakageConfig, ...]
+                   ) -> tuple[jax.Array, dict]:
+    """P²M layer under every circuit config + pool + coarsen.
+
+    events [B, T, n_sub, H, W, Cin] → coarse [n_cfg, B, Tc, H/2, W/2, F]
+    plus the per-config spike statistics the energy model needs.
+    """
+    cfg = model_cfg.p2m
+    spikes, _ = p2m_layer.p2m_apply_stacked(p2m_params, events, cfg,
+                                            leak_cfgs)
+    G, B, T = spikes.shape[:3]
+    tb = spikes.reshape((G * B * T,) + spikes.shape[3:])
+    tb = snn.max_pool(tb)
+    spikes_p = tb.reshape((G, B, T) + tb.shape[1:])
+    group = model_cfg.coarsen_group()
+    coarse = p2m_layer.coarsen_spikes(
+        spikes_p.reshape((G * B, T) + spikes_p.shape[3:]), group)
+    coarse = coarse.reshape((G, B, T // group) + coarse.shape[2:])
+    k = cfg.kernel_size
+    # spike + MAC counts on the post-pool map, matching the historical
+    # codesign.model_apply accounting (the 2x pool happens in-pixel, so the
+    # pooled spikes are what leaves the sensor) — single-circuit engine
+    # runs must reproduce its records
+    out_elems = float(B * T) * float(math.prod(spikes_p.shape[3:]))
+    l1 = {
+        "spikes/p2m": lax.stop_gradient(
+            jnp.sum(spikes_p, axis=tuple(range(1, spikes_p.ndim)))),  # [G]
+        "events/in": lax.stop_gradient(jnp.sum(events)),           # scalar
+        "macs/p2m": jnp.asarray(out_elems * k * k * cfg.in_channels,
+                                jnp.float32),                      # scalar
+    }
+    return coarse, l1
+
+
+def make_batched_finetune_step(model_cfg, leak_cfgs: tuple[LeakageConfig, ...],
+                               opt) -> Callable:
+    """One jitted step that finetunes n_cfg frozen-layer-1 backbones at once.
+
+    Layer 1 is frozen in phase 2 (paper §3), so its stacked forward runs
+    once outside the gradient; the backbone update is vmapped over the
+    config axis of (params, opt_state, state, coarse spikes).
+    """
+    bb_cfg = model_cfg.backbone
+
+    def bb_loss(bb_params, state, coarse, labels):
+        logits, new_state, aux = snn.spiking_cnn_apply(
+            bb_params, state, coarse, bb_cfg, train=True)
+        loss = snn.cross_entropy(logits, labels)
+        return loss, (new_state, aux, logits)
+
+    @jax.jit
+    def step(p2m_params, bb_params_s, opt_state_s, state_s, events, labels):
+        coarse_s, l1 = _layer1_coarse(p2m_params, events, model_cfg,
+                                      leak_cfgs)
+        coarse_s = lax.stop_gradient(coarse_s)
+
+        def per_cfg(bb_p, o_s, st, coarse):
+            (loss, (new_st, aux, logits)), grads = jax.value_and_grad(
+                bb_loss, has_aux=True)(bb_p, st, coarse, labels)
+            grads, gnorm = clip_by_global_norm(grads, 1.0)
+            updates, o_s = opt.update(grads, o_s, bb_p)
+            bb_p = apply_updates(bb_p, updates)
+            metrics = {"loss": loss, "gnorm": gnorm,
+                       "acc": snn.accuracy(logits, labels)}
+            return bb_p, o_s, new_st, metrics
+
+        bb_params_s, opt_state_s, state_s, metrics = jax.vmap(per_cfg)(
+            bb_params_s, opt_state_s, state_s, coarse_s)
+        return bb_params_s, opt_state_s, state_s, metrics, l1
+
+    return step
+
+
+def make_batched_eval(model_cfg, leak_cfgs: tuple[LeakageConfig, ...]
+                      ) -> Callable:
+    """Jitted batched eval: per-config accuracy/loss + backbone aux + the
+    layer-1 spike statistics feeding bandwidth/energy."""
+    bb_cfg = model_cfg.backbone
+
+    @jax.jit
+    def ev(p2m_params, bb_params_s, state_s, events, labels):
+        coarse_s, l1 = _layer1_coarse(p2m_params, events, model_cfg,
+                                      leak_cfgs)
+
+        def per_cfg(bb_p, st, coarse):
+            logits, _, aux = snn.spiking_cnn_apply(
+                bb_p, st, coarse, bb_cfg, train=False)
+            return {"acc": snn.accuracy(logits, labels),
+                    "loss": snn.cross_entropy(logits, labels)}, aux
+
+        metrics, aux = jax.vmap(per_cfg)(bb_params_s, state_s, coarse_s)
+        return metrics, aux, l1
+
+    return ev
+
+
+# ---------------------------------------------------------------------------
+# phase 1 (shared pretrain)
+# ---------------------------------------------------------------------------
+
+def pretrain_backbone(key: jax.Array, data_cfg, model_cfg, sweep,
+                      log: Any = print) -> tuple[Params, dict, jax.Array]:
+    """Phase-1 pretrain at the longest T_INTG with an IDEAL (no-leak)
+    circuit — shared by every grid point."""
+    from repro.core import codesign
+
+    t_long = max(sweep.t_intg_grid_ms)
+    pre_cfg = replace(
+        model_cfg,
+        p2m=replace(model_cfg.p2m, t_intg_ms=t_long, mode="curvefit",
+                    leak=replace(model_cfg.p2m.leak,
+                                 circuit=CircuitConfig.IDEAL)))
+    params, state = codesign.model_init(key, pre_cfg)
+    opt = adamw(sweep.lr)
+    opt_state = opt.init(params)
+    step_fn = codesign.make_train_step(pre_cfg, opt, freeze_p2m=False)
+    for i in range(sweep.pretrain_steps):
+        key, kb = jax.random.split(key)
+        ev, labels = events_mod.sample_batch(kb, data_cfg, sweep.batch_size,
+                                             t_long, n_sub=pre_cfg.p2m.n_sub)
+        params, opt_state, state, m, _ = step_fn(params, opt_state, state,
+                                                 ev, labels)
+        if i % 10 == 0:
+            log(f"[pretrain] step {i} loss={float(m['loss']):.3f} "
+                f"acc={float(m['acc']):.3f}")
+    return params, state, key
+
+
+# ---------------------------------------------------------------------------
+# the grid run
+# ---------------------------------------------------------------------------
+
+@dataclass
+class GridResult:
+    """Everything one sweep produced: flat records (one per
+    (circuit-config, T_INTG) cell), the retention surface, and grid meta."""
+    records: list[dict]
+    retention: dict
+    labels: tuple[str, ...]
+    grid: SweepGrid
+
+    def to_artifact(self, extra_meta: dict | None = None) -> dict:
+        return {
+            "schema": SCHEMA,
+            "grid": {
+                "circuits": [c.value for c in self.grid.circuits],
+                "t_intg_grid_ms": list(self.grid.t_intg_grid_ms),
+                "null_mismatch": list(self.grid.null_mismatch),
+                "labels": list(self.labels),
+            },
+            "retention": self.retention,
+            "records": self.records,
+            **(extra_meta or {}),
+        }
+
+
+def _normalize(records: list[dict]) -> None:
+    """Per config label, normalize bandwidth + per-step train time to the
+    longest-T point and compute the energy improvement against that
+    config's single conventional reference (paper Fig 2 right — the digital
+    backend always integrates at the accuracy-optimal long T)."""
+    by_label: dict[str, list[dict]] = {}
+    for r in records:
+        by_label.setdefault(r["label"], []).append(r)
+    for rs in by_label.values():
+        base = max(rs, key=lambda r: r["t_intg_ms"])
+        e_conv_ref = base["backend_energy_conventional_j"]
+        for r in rs:
+            r["bandwidth_norm"] = (r["bandwidth_ratio"] /
+                                   max(base["bandwidth_ratio"], 1e-12))
+            r["train_time_norm"] = (r["train_time_per_step_s"] /
+                                    max(base["train_time_per_step_s"], 1e-12))
+            r["energy_improvement"] = e_conv_ref / max(
+                r["backend_energy_p2m_j"], 1e-30)
+
+
+def run_grid(data_cfg: events_mod.EventStreamConfig, model_cfg,
+             sweep, grid: SweepGrid, log: Any = print) -> GridResult:
+    """Run the batched co-design sweep. ``model_cfg`` is a
+    codesign.P2MModelConfig, ``sweep`` a codesign.SweepConfig (its
+    ``t_intg_grid_ms`` is superseded by ``grid.t_intg_grid_ms``)."""
+    leak_cfgs = expand_leak_configs(grid, model_cfg.p2m.leak)
+    labels = tuple(config_label(lc) for lc in leak_cfgs)
+    G = len(leak_cfgs)
+    t_grid = grid.t_intg_grid_ms
+    key = jax.random.PRNGKey(sweep.seed)
+
+    sweep = replace(sweep, t_intg_grid_ms=t_grid)
+    pre_params, pre_state, key = pretrain_backbone(
+        key, data_cfg, model_cfg, sweep, log)
+
+    # retention surface from the closed-form leak ODE (Fig 4a): the
+    # pretrained layer-1 kernel decides config (a)'s drift direction/rate.
+    from repro.core import analog as analog_mod
+    w_q = analog_mod.quantize_weights(pre_params["p2m"]["w"],
+                                      model_cfg.p2m.analog)
+    surface = leakage.retention_surface(w_q, leak_cfgs, t_grid)   # [G, n_t]
+    retention = {
+        "t_grid_ms": list(t_grid),
+        "v0": 0.2,
+        "mean_abs_error_v": {lab: [float(x) for x in row]
+                             for lab, row in zip(labels, surface)},
+    }
+
+    opt = adamw(sweep.lr)
+    records: list[dict] = []
+    for ti, t_ms in enumerate(t_grid):
+        cfg_t = replace(
+            model_cfg,
+            p2m=replace(model_cfg.p2m, t_intg_ms=t_ms, mode="curvefit"))
+        p2m_params = {k: jnp.copy(v) for k, v in pre_params["p2m"].items()}
+        bb_params_s = _stack_tree(pre_params["backbone"], G)
+        state_s = _stack_tree(pre_state, G)
+        opt_state_s = jax.vmap(opt.init)(bb_params_s)
+        step_fn = make_batched_finetune_step(cfg_t, leak_cfgs, opt)
+        # warmup step: exclude jit compile from the train-time measurement
+        # (the paper's training-time column is steady-state epochs)
+        key, kw = jax.random.split(key)
+        ev_w, lab_w = events_mod.sample_batch(kw, data_cfg, sweep.batch_size,
+                                              t_ms, n_sub=cfg_t.p2m.n_sub)
+        bb_params_s, opt_state_s, state_s, m, _ = step_fn(
+            p2m_params, bb_params_s, opt_state_s, state_s, ev_w, lab_w)
+        jax.block_until_ready(m["loss"])
+        t0 = time.perf_counter()
+        for _ in range(sweep.finetune_steps):
+            key, kb = jax.random.split(key)
+            ev, lab = events_mod.sample_batch(kb, data_cfg, sweep.batch_size,
+                                              t_ms, n_sub=cfg_t.p2m.n_sub)
+            bb_params_s, opt_state_s, state_s, m, _ = step_fn(
+                p2m_params, bb_params_s, opt_state_s, state_s, ev, lab)
+        jax.block_until_ready(m["loss"])
+        train_s = time.perf_counter() - t0
+
+        # batched eval: accuracy + spike statistics for bandwidth/energy
+        eval_fn = make_batched_eval(cfg_t, leak_cfgs)
+        accs = [[] for _ in range(G)]
+        l1_spikes = [0.0] * G
+        in_events = 0.0
+        macs = 0.0
+        aux_sum: list[dict | None] = [None] * G
+        for _ in range(sweep.eval_batches):
+            key, kb = jax.random.split(key)
+            ev, lab = events_mod.sample_batch(kb, data_cfg, sweep.batch_size,
+                                              t_ms, n_sub=cfg_t.p2m.n_sub)
+            metrics, aux, l1 = eval_fn(p2m_params, bb_params_s, state_s,
+                                       ev, lab)
+            in_events += float(l1["events/in"])
+            macs += float(l1["macs/p2m"])
+            for g in range(G):
+                accs[g].append(float(metrics["acc"][g]))
+                l1_spikes[g] += float(l1["spikes/p2m"][g])
+                aux_g = {k: float(v[g]) for k, v in aux.items()}
+                aux_sum[g] = aux_g if aux_sum[g] is None else {
+                    k: aux_sum[g][k] + v for k, v in aux_g.items()}
+
+        for g, (lc, lab_g) in enumerate(zip(leak_cfgs, labels)):
+            bw = energy_mod.bandwidth_ratio(l1_spikes[g], in_events)
+            e_conv = energy_mod.backend_energy_conventional(aux_sum[g], macs)
+            e_p2m = energy_mod.backend_energy_p2m(aux_sum[g], l1_spikes[g],
+                                                  macs)
+            rec = {
+                "label": lab_g,
+                "circuit": lc.circuit.value,
+                "null_mismatch": lc.null_mismatch,
+                "t_intg_ms": t_ms,
+                "accuracy": sum(accs[g]) / len(accs[g]),
+                "train_time_s": train_s,
+                "train_time_per_step_s": train_s / sweep.finetune_steps,
+                "bandwidth_ratio": bw,
+                "backend_energy_conventional_j": e_conv,
+                "backend_energy_p2m_j": e_p2m,
+                "sensor_energy_p2m_j": energy_mod.sensor_energy_p2m(macs),
+                "layer1_spikes": l1_spikes[g],
+                "input_events": in_events,
+                "retention_err_v": float(surface[g, ti]),
+            }
+            records.append(rec)
+            log(f"[sweep t={t_ms}ms cfg={lab_g}] acc={rec['accuracy']:.3f} "
+                f"bw={bw:.4f} ret={rec['retention_err_v'] * 1e3:.2f}mV "
+                f"train={train_s:.1f}s")
+
+    _normalize(records)
+    return GridResult(records=records, retention=retention, labels=labels,
+                      grid=grid)
+
+
+# ---------------------------------------------------------------------------
+# canonical paper-scale setup (shared by launch/sweep.py and examples)
+# ---------------------------------------------------------------------------
+
+def paper_setup(fast: bool = False, hw: int = 16):
+    """Small-but-real defaults reproducing the paper's directional claims
+    on CPU in minutes: synthetic DVS-gesture-like stream + the P²M model."""
+    from repro.core.codesign import P2MModelConfig, SweepConfig
+    from repro.core.p2m_layer import P2MConfig
+    from repro.core.snn import SpikingCNNConfig
+
+    model = P2MModelConfig(
+        p2m=P2MConfig(out_channels=8, n_sub=2),
+        backbone=SpikingCNNConfig(channels=(8, 16, 16, 16),
+                                  input_hw=(hw, hw), fc_hidden=64,
+                                  n_classes=11, first_layer_external=True),
+        coarse_window_ms=1000.0)
+    data = replace(events_mod.dvs_gesture_like(hw), duration_ms=2000.0)
+    sweep_cfg = SweepConfig(
+        batch_size=2 if fast else 4,
+        pretrain_steps=4 if fast else 30,
+        finetune_steps=2 if fast else 6,
+        eval_batches=2 if fast else 4)
+    grid = fast_grid() if fast else paper_grid()
+    return data, model, sweep_cfg, grid

@@ -2,6 +2,11 @@
 
 ``p2m_conv(params, events, cfg)`` is a drop-in for
 ``repro.core.p2m_layer.p2m_forward_scan`` (mode="kernel").
+
+``p2m_conv_multi(params, events, cfg, leak_cfgs)`` evaluates the SAME events
+under several circuit configs in one pallas_call — the kernel grid carries a
+leading config axis and the [n_cfg, F] leak tiles are indexed by it (see
+p2m_conv.py). This is the fused path the co-design sweep engine uses.
 """
 from __future__ import annotations
 
@@ -12,8 +17,10 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core import analog, leakage
-from repro.kernels.p2m_conv.p2m_conv import p2m_conv_pallas
-from repro.kernels.p2m_conv.ref import p2m_conv_ref
+from repro.kernels.p2m_conv.p2m_conv import (
+    p2m_conv_multi_pallas, p2m_conv_pallas,
+)
+from repro.kernels.p2m_conv.ref import p2m_conv_multi_ref, p2m_conv_ref
 
 
 def _extract_patches(frames: jax.Array, k: int, stride: int) -> jax.Array:
@@ -30,11 +37,20 @@ def _extract_patches(frames: jax.Array, k: int, stride: int) -> jax.Array:
     return patches.reshape(N, Ho * Wo, k * k * C), (Ho, Wo)
 
 
-def _prepare(params, events, cfg):
+def _prepare(params, events, cfg, leak_cfgs=None):
+    """Shared im2col + leak-linearization prep.
+
+    With ``leak_cfgs=None`` the leak tensors come out [F] (single config,
+    from ``cfg.leak``); with a tuple of LeakageConfigs they come out
+    [n_cfg, F] (the kernel's circuit grid axis).
+    """
     B, T, n_sub, H, W, Cin = events.shape
     k = cfg.kernel_size
     w_q = analog.quantize_weights(params["w"], cfg.analog)   # [k,k,Cin,F]
-    lk = leakage.kernel_leak_params(w_q, cfg.leak)
+    if leak_cfgs is None:
+        lk = leakage.kernel_leak_params(w_q, cfg.leak)
+    else:
+        lk = leakage.stacked_leak_params(w_q, leak_cfgs)
     decay = leakage.decay_factor(lk.tau_ms, cfg.dt_ms)
     frames = events.reshape(B * T * n_sub, H, W, Cin)
     patches, (Ho, Wo) = _extract_patches(frames, k, cfg.stride)
@@ -68,4 +84,30 @@ def p2m_conv(params: dict, events: jax.Array, cfg, use_ref: bool = False
     def back(x):
         x = x.reshape(T, B, Ho, Wo, cfg.out_channels)
         return jnp.moveaxis(x, 0, 1)
+    return back(spikes), back(vpre)
+
+
+@partial(jax.jit, static_argnames=("cfg", "leak_cfgs", "use_ref"))
+def p2m_conv_multi(params: dict, events: jax.Array, cfg,
+                   leak_cfgs: tuple, use_ref: bool = False
+                   ) -> tuple[jax.Array, jax.Array]:
+    """Batched multi-circuit path: one fused kernel launch for all configs.
+
+    events [B, T, n_sub, H, W, Cin] → (spikes, v_pre), both
+    [n_cfg, B, T, H', W', F]. ``leak_cfgs`` is a (hashable) tuple of
+    LeakageConfig — the circuit axis of the sweep grid.
+    """
+    patches, w2, v_inf, decay, params, consts, dims = _prepare(
+        params, events, cfg, leak_cfgs=leak_cfgs)
+    B, T, Ho, Wo = dims
+    fn = p2m_conv_multi_ref if use_ref else p2m_conv_multi_pallas
+    spikes, vpre = fn(patches, w2, v_inf, decay, params["pv_gain"],
+                      params["pv_offset"], **consts)
+    spikes = spikes[:, :, :B * Ho * Wo]   # crop tile padding
+    vpre = vpre[:, :, :B * Ho * Wo]
+
+    def back(x):
+        n_cfg = x.shape[0]
+        x = x.reshape(n_cfg, T, B, Ho, Wo, cfg.out_channels)
+        return jnp.moveaxis(x, 1, 2)      # [n_cfg, B, T, H', W', F]
     return back(spikes), back(vpre)

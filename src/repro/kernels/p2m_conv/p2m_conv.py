@@ -12,13 +12,19 @@ per sub-slot, then the threshold comparator; only binary spikes leave the
 ([T·n_sub, P, F] tensors), which is what the pure-XLA path does.
 
 Layout: im2col patches [T_out, n_sub, P, K] (P = B·H'·W' sites, K = receptive
-field), weights [K, F]. Grid = (T_out, P tiles); the n_sub loop runs inside
-the kernel with the voltage tile resident.
+field), weights [K, F]. The grid carries a **circuit-config axis** in front:
+grid = (n_cfg, T_out, P tiles), with the per-config leak linearization
+``(v_inf, decay)`` stored as [n_cfg, F] tensors indexed by the config grid
+dimension. Patches and weights are config-independent, so the same event
+tile is revisited once per config with only a new [1, F] leak tile loaded —
+this is what lets the co-design sweep engine (core/sweep.py) evaluate all
+three MAC circuit configs (and nullifier-mismatch variants) in ONE
+pallas_call instead of one compile per circuit. The n_sub loop runs inside
+the kernel with the voltage tile VMEM-resident per config.
 """
 from __future__ import annotations
 
 import functools
-import math
 
 import jax
 import jax.numpy as jnp
@@ -33,7 +39,7 @@ def _p2m_kernel(patches_ref, w_ref, vinf_ref, decay_ref, pvg_ref, pvo_ref,
     n_sub = patches_ref.shape[1]
     bp = patches_ref.shape[2]
     F = w_ref.shape[1]
-    vinf = vinf_ref[0, :]                      # [F]
+    vinf = vinf_ref[0, :]                      # [F] — this grid step's config
     decay = decay_ref[0, :]
     pvg = pvg_ref[0, :]
     pvo = pvo_ref[0, :]
@@ -54,26 +60,33 @@ def _p2m_kernel(patches_ref, w_ref, vinf_ref, decay_ref, pvg_ref, pvo_ref,
     v0 = jnp.zeros((bp, F), jnp.float32)
     v = lax.fori_loop(0, n_sub, sub_step, v0)
     v = v + pvo
-    vpre_ref[0, :, :] = v
-    spikes_ref[0, :, :] = (v > theta).astype(spikes_ref.dtype)
+    vpre_ref[0, 0, :, :] = v
+    spikes_ref[0, 0, :, :] = (v > theta).astype(spikes_ref.dtype)
 
 
-def p2m_conv_pallas(patches: jax.Array, w: jax.Array, v_inf: jax.Array,
-                    decay: jax.Array, pv_gain: jax.Array, pv_offset: jax.Array,
-                    *, dv_unit: float, half_swing: float, v_lo: float,
-                    v_hi: float, theta: float, nonlinear: bool = True,
-                    block_p: int = 256, interpret: bool = True
-                    ) -> tuple[jax.Array, jax.Array]:
-    """patches: [T_out, n_sub, P, K] f32; w: [K, F]. Returns (spikes, v_pre)
-    both [T_out, P, F] f32."""
+def p2m_conv_multi_pallas(patches: jax.Array, w: jax.Array, v_inf: jax.Array,
+                          decay: jax.Array, pv_gain: jax.Array,
+                          pv_offset: jax.Array, *, dv_unit: float,
+                          half_swing: float, v_lo: float, v_hi: float,
+                          theta: float, nonlinear: bool = True,
+                          block_p: int = 256, interpret: bool = True
+                          ) -> tuple[jax.Array, jax.Array]:
+    """Multi-circuit-config P²M conv.
+
+    patches: [T_out, n_sub, P, K] f32; w: [K, F];
+    v_inf/decay: [n_cfg, F] per-config leak linearizations (the circuit
+    grid axis). Returns (spikes, v_pre), both [n_cfg, T_out, P, F] f32.
+    """
     T, n_sub, P, K = patches.shape
     F = w.shape[1]
+    n_cfg = v_inf.shape[0]
+    assert decay.shape == (n_cfg, F), (decay.shape, (n_cfg, F))
     block_p = min(block_p, P)
     if P % block_p != 0:
         pad = block_p - P % block_p
         patches = jnp.pad(patches, ((0, 0), (0, 0), (0, pad), (0, 0)))
         P = patches.shape[2]
-    grid = (T, P // block_p)
+    grid = (n_cfg, T, P // block_p)
 
     kernel = functools.partial(
         _p2m_kernel, dv_unit=dv_unit, half_swing=half_swing, v_lo=v_lo,
@@ -83,22 +96,40 @@ def p2m_conv_pallas(patches: jax.Array, w: jax.Array, v_inf: jax.Array,
         kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, n_sub, block_p, K), lambda t, p: (t, 0, p, 0)),
-            pl.BlockSpec((K, F), lambda t, p: (0, 0)),
-            pl.BlockSpec((1, F), lambda t, p: (0, 0)),
-            pl.BlockSpec((1, F), lambda t, p: (0, 0)),
-            pl.BlockSpec((1, F), lambda t, p: (0, 0)),
-            pl.BlockSpec((1, F), lambda t, p: (0, 0)),
+            pl.BlockSpec((1, n_sub, block_p, K), lambda c, t, p: (t, 0, p, 0)),
+            pl.BlockSpec((K, F), lambda c, t, p: (0, 0)),
+            pl.BlockSpec((1, F), lambda c, t, p: (c, 0)),
+            pl.BlockSpec((1, F), lambda c, t, p: (c, 0)),
+            pl.BlockSpec((1, F), lambda c, t, p: (0, 0)),
+            pl.BlockSpec((1, F), lambda c, t, p: (0, 0)),
         ],
         out_specs=[
-            pl.BlockSpec((1, block_p, F), lambda t, p: (t, p, 0)),
-            pl.BlockSpec((1, block_p, F), lambda t, p: (t, p, 0)),
+            pl.BlockSpec((1, 1, block_p, F), lambda c, t, p: (c, t, p, 0)),
+            pl.BlockSpec((1, 1, block_p, F), lambda c, t, p: (c, t, p, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((T, P, F), jnp.float32),
-            jax.ShapeDtypeStruct((T, P, F), jnp.float32),
+            jax.ShapeDtypeStruct((n_cfg, T, P, F), jnp.float32),
+            jax.ShapeDtypeStruct((n_cfg, T, P, F), jnp.float32),
         ],
         interpret=interpret,
-    )(patches, w, v_inf[None, :], decay[None, :], pv_gain[None, :],
-      pv_offset[None, :])
+    )(patches, w, v_inf, decay, pv_gain[None, :], pv_offset[None, :])
     return spikes, vpre
+
+
+def p2m_conv_pallas(patches: jax.Array, w: jax.Array, v_inf: jax.Array,
+                    decay: jax.Array, pv_gain: jax.Array, pv_offset: jax.Array,
+                    *, dv_unit: float, half_swing: float, v_lo: float,
+                    v_hi: float, theta: float, nonlinear: bool = True,
+                    block_p: int = 256, interpret: bool = True
+                    ) -> tuple[jax.Array, jax.Array]:
+    """Single-config wrapper over the multi-config kernel.
+
+    patches: [T_out, n_sub, P, K] f32; w: [K, F]; v_inf/decay: [F].
+    Returns (spikes, v_pre) both [T_out, P, F] f32.
+    """
+    spikes, vpre = p2m_conv_multi_pallas(
+        patches, w, v_inf[None, :], decay[None, :], pv_gain, pv_offset,
+        dv_unit=dv_unit, half_swing=half_swing, v_lo=v_lo, v_hi=v_hi,
+        theta=theta, nonlinear=nonlinear, block_p=block_p,
+        interpret=interpret)
+    return spikes[0], vpre[0]

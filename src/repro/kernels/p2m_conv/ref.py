@@ -31,3 +31,16 @@ def p2m_conv_ref(patches: jax.Array, w: jax.Array, v_inf: jax.Array,
     v_pre = jax.vmap(window)(patches)
     spikes = (v_pre > theta).astype(jnp.float32)
     return spikes, v_pre
+
+
+def p2m_conv_multi_ref(patches: jax.Array, w: jax.Array, v_inf: jax.Array,
+                       decay: jax.Array, pv_gain: jax.Array,
+                       pv_offset: jax.Array, **consts
+                       ) -> tuple[jax.Array, jax.Array]:
+    """Multi-config oracle: vmap the single-config ref over the leading
+    circuit axis of (v_inf, decay) [n_cfg, F] → (spikes, v_pre)
+    [n_cfg, T, P, F]."""
+    def one(vi, de):
+        return p2m_conv_ref(patches, w, vi, de, pv_gain, pv_offset, **consts)
+
+    return jax.vmap(one)(v_inf, decay)

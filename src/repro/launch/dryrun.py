@@ -79,6 +79,10 @@ def run_cell(arch: str, shape_name: str, pods: int, save_hlo: bool = False) -> d
 
         mem = compiled.memory_analysis()
         cost = compiled.cost_analysis() or {}
+        # jaxlib < 0.4.x returned [{...}] (one dict per program); newer
+        # versions return the dict directly — normalize to a dict
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0] if cost else {}
 
         # per-device argument bytes, analytic: CPU-backend memory_analysis
         # reports GLOBAL logical buffers for entry args; divide each leaf by

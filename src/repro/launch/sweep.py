@@ -1,8 +1,21 @@
-"""Dry-run sweep driver: one subprocess per (arch × shape × pods) cell so XLA
-state never accumulates across the 60+ compiles. Resumable: cells with an
-existing 'ok'/'skipped' JSON are not re-run unless --force.
+"""Sweep launcher.
 
-  PYTHONPATH=src python -m repro.launch.sweep --pods 1 2
+Default mode — the batched CO-DESIGN sweep (paper Fig 2/4 + Table 1): one
+in-process, vmap-batched run over CircuitConfig × T_INTG × null_mismatch
+via repro.core.sweep, emitting ONE structured JSON artifact
+(schema "p2m-codesign-sweep/v1", see docs/sweep.md):
+
+  PYTHONPATH=src python -m repro.launch.sweep --grid paper
+  PYTHONPATH=src python -m repro.launch.sweep --grid fast
+  PYTHONPATH=src python -m repro.launch.sweep --grid paper \\
+      --circuits a c --t-intg 1 10 100 1000 --mismatch 0.02 0.06
+
+Legacy mode — the dry-run cell sweep (one subprocess per arch × shape ×
+pods cell so XLA state never accumulates across the 60+ compiles;
+resumable — cells with an existing 'ok'/'skipped' JSON are not re-run
+unless --force):
+
+  PYTHONPATH=src python -m repro.launch.sweep --dryrun-cells --pods 1 2
 """
 from __future__ import annotations
 
@@ -15,16 +28,73 @@ import time
 from pathlib import Path
 
 
-def main() -> int:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--pods", type=int, nargs="+", default=[1, 2])
-    ap.add_argument("--archs", type=str, nargs="+", default=None)
-    ap.add_argument("--shapes", type=str, nargs="+", default=None)
-    ap.add_argument("--out", type=str, default="artifacts/dryrun")
-    ap.add_argument("--force", action="store_true")
-    ap.add_argument("--timeout", type=int, default=2400)
-    args = ap.parse_args()
+# ---------------------------------------------------------------------------
+# co-design grid sweep (default) — built on repro.core.sweep
+# ---------------------------------------------------------------------------
 
+def run_codesign_grid(args) -> int:
+    sys.path.insert(0, "src")
+    from dataclasses import replace
+
+    from repro.core import sweep as engine
+    from repro.core.leakage import CircuitConfig
+
+    fast = args.grid == "fast"
+    data, model, sweep_cfg, grid = engine.paper_setup(fast=fast, hw=args.hw)
+    if args.circuits:
+        grid = replace(grid, circuits=tuple(
+            CircuitConfig(c) for c in args.circuits))
+    if args.t_intg:
+        grid = replace(grid, t_intg_grid_ms=tuple(sorted(args.t_intg)))
+    if args.mismatch:
+        grid = replace(grid, null_mismatch=tuple(args.mismatch))
+        if CircuitConfig.NULLIFIED not in grid.circuits:
+            print("note: --mismatch only affects circuit (c), which is not "
+                  "in this grid — values ignored", file=sys.stderr)
+
+    for t in grid.t_intg_grid_ms:
+        g = model.coarse_window_ms / t
+        if abs(g - round(g)) > 1e-6:
+            print(f"error: --t-intg {t:g} must divide the backbone coarse "
+                  f"window ({model.coarse_window_ms:g} ms)", file=sys.stderr)
+            return 2
+
+    t0 = time.time()
+    result = engine.run_grid(data, model, sweep_cfg, grid)
+    wall_s = time.time() - t0
+
+    out = Path(args.out)
+    out.mkdir(parents=True, exist_ok=True)
+    path = out / f"codesign_grid_{args.grid}.json"
+    artifact = result.to_artifact(extra_meta={
+        "wall_s": wall_s,
+        "data": {"name": data.name, "hw": data.height,
+                 "duration_ms": data.duration_ms},
+        "sweep": {"batch_size": sweep_cfg.batch_size,
+                  "pretrain_steps": sweep_cfg.pretrain_steps,
+                  "finetune_steps": sweep_cfg.finetune_steps,
+                  "eval_batches": sweep_cfg.eval_batches},
+    })
+    path.write_text(json.dumps(artifact, indent=2, default=float))
+
+    print(f"\n=== co-design grid sweep ({len(result.labels)} circuit cfgs "
+          f"× {len(grid.t_intg_grid_ms)} T_INTG, {wall_s:.0f}s) ===")
+    print(f"{'config':>10} {'T_INTG':>8} {'acc':>6} {'bw':>7} "
+          f"{'energy':>8} {'ret_mV':>8}")
+    for r in result.records:
+        print(f"{r['label']:>10} {r['t_intg_ms']:6.0f}ms "
+              f"{r['accuracy']:6.3f} {r['bandwidth_norm']:6.2f}x "
+              f"{r['energy_improvement']:7.2f}x "
+              f"{r['retention_err_v'] * 1e3:8.2f}")
+    print(f"artifact: {path}")
+    return 0
+
+
+# ---------------------------------------------------------------------------
+# legacy dry-run cell sweep (subprocess per cell)
+# ---------------------------------------------------------------------------
+
+def run_dryrun_cells(args) -> int:
     sys.path.insert(0, "src")
     from repro.configs import SHAPES, list_archs
 
@@ -76,6 +146,45 @@ def main() -> int:
               flush=True)
     print(f"sweep done: {n_err} errors, {time.time()-t0:.0f}s", flush=True)
     return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--dryrun-cells", action="store_true",
+                    help="legacy arch×shape×pods dry-run sweep "
+                         "(subprocess per cell)")
+    # co-design grid options
+    ap.add_argument("--grid", type=str, default="paper",
+                    choices=["paper", "fast"],
+                    help="co-design grid preset (default: paper = 3 "
+                         "circuits × 4 T_INTG)")
+    ap.add_argument("--circuits", type=str, nargs="+", default=None,
+                    choices=["a", "b", "c"], help="override circuit configs")
+    ap.add_argument("--t-intg", type=float, nargs="+", default=None,
+                    help="override T_INTG grid (ms)")
+    ap.add_argument("--mismatch", type=float, nargs="+", default=None,
+                    help="nullifier mismatch values for circuit (c)")
+    ap.add_argument("--hw", type=int, default=16,
+                    help="synthetic stream resolution")
+    # legacy dry-run options
+    ap.add_argument("--pods", type=int, nargs="+", default=None)
+    ap.add_argument("--archs", type=str, nargs="+", default=None)
+    ap.add_argument("--shapes", type=str, nargs="+", default=None)
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--timeout", type=int, default=2400)
+    ap.add_argument("--out", type=str, default=None)
+    args = ap.parse_args()
+
+    if args.dryrun_cells:
+        args.pods = args.pods or [1, 2]
+        args.out = args.out or "artifacts/dryrun"
+        return run_dryrun_cells(args)
+    if args.pods or args.archs or args.shapes or args.force:
+        print("error: --pods/--archs/--shapes/--force belong to the legacy "
+              "cell sweep — pass --dryrun-cells to run it", file=sys.stderr)
+        return 2
+    args.out = args.out or "artifacts/sweep"
+    return run_codesign_grid(args)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,177 @@
+"""Batched multi-circuit sweep engine: kernel/scan/curvefit parity across
+the stacked circuit-config axis, retention monotonicity (paper Fig 4), and
+the end-to-end grid artifact."""
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import leakage, p2m_layer
+from repro.core import sweep as engine
+from repro.core.leakage import CircuitConfig, LeakageConfig
+from repro.core.p2m_layer import P2MConfig, p2m_init
+
+CIRCUITS = (CircuitConfig.BASIC, CircuitConfig.SWITCH,
+            CircuitConfig.NULLIFIED)
+
+
+def _setup(n_sub=3, t_intg=10.0):
+    cfg = P2MConfig(out_channels=6, t_intg_ms=t_intg, n_sub=n_sub)
+    params = p2m_init(jax.random.PRNGKey(0), cfg)
+    ev = jax.random.poisson(jax.random.PRNGKey(1), 0.4,
+                            (2, 2, n_sub, 12, 12, 2)).astype(jnp.float32)
+    leak_cfgs = tuple(LeakageConfig(circuit=c) for c in CIRCUITS)
+    return cfg, params, ev, leak_cfgs
+
+
+class TestStackedParity:
+    """The batched multi-circuit paths must reproduce the per-config
+    single-circuit paths bit-for-bit (up to float tolerance) — the engine
+    may never change the physics, only batch it."""
+
+    def test_kernel_matches_per_config_scan(self):
+        cfg, params, ev, leak_cfgs = _setup()
+        cfg_k = dataclasses.replace(cfg, mode="kernel")
+        s_m, v_m = p2m_layer.p2m_apply_stacked(params, ev, cfg_k, leak_cfgs)
+        assert v_m.shape[0] == len(leak_cfgs)
+        for i, lc in enumerate(leak_cfgs):
+            cfg_i = dataclasses.replace(cfg, mode="scan", leak=lc)
+            s_i, v_i = p2m_layer.p2m_apply(params, ev, cfg_i)
+            np.testing.assert_allclose(np.asarray(v_m[i]), np.asarray(v_i),
+                                       rtol=1e-5, atol=1e-6,
+                                       err_msg=f"circuit {lc.circuit.value}")
+            np.testing.assert_array_equal(np.asarray(s_m[i]),
+                                          np.asarray(s_i))
+
+    def test_scan_stacked_matches_per_config_scan(self):
+        cfg, params, ev, leak_cfgs = _setup()
+        cfg_s = dataclasses.replace(cfg, mode="scan")
+        _, v_m = p2m_layer.p2m_apply_stacked(params, ev, cfg_s, leak_cfgs)
+        for i, lc in enumerate(leak_cfgs):
+            cfg_i = dataclasses.replace(cfg_s, leak=lc)
+            _, v_i = p2m_layer.p2m_apply(params, ev, cfg_i)
+            np.testing.assert_allclose(np.asarray(v_m[i]), np.asarray(v_i),
+                                       rtol=1e-6, atol=1e-7,
+                                       err_msg=f"circuit {lc.circuit.value}")
+
+    def test_curvefit_stacked_matches_per_config_curvefit(self):
+        cfg, params, ev, leak_cfgs = _setup()
+        _, v_m = p2m_layer.p2m_forward_curvefit_stacked(params, ev, cfg,
+                                                        leak_cfgs)
+        for i, lc in enumerate(leak_cfgs):
+            cfg_i = dataclasses.replace(cfg, mode="curvefit", leak=lc)
+            _, v_i = p2m_layer.p2m_apply(params, ev, cfg_i)
+            np.testing.assert_allclose(np.asarray(v_m[i]), np.asarray(v_i),
+                                       rtol=1e-5, atol=1e-6,
+                                       err_msg=f"circuit {lc.circuit.value}")
+
+    def test_multi_kernel_matches_multi_ref(self):
+        from repro.kernels.p2m_conv import ops
+        cfg, params, ev, leak_cfgs = _setup()
+        s_k, v_k = ops.p2m_conv_multi(params, ev, cfg, leak_cfgs)
+        s_r, v_r = ops.p2m_conv_multi(params, ev, cfg, leak_cfgs,
+                                      use_ref=True)
+        np.testing.assert_allclose(np.asarray(v_k), np.asarray(v_r),
+                                   rtol=1e-5, atol=1e-6)
+        np.testing.assert_array_equal(np.asarray(s_k), np.asarray(s_r))
+
+    def test_mismatch_axis_orders_nullified_retention(self):
+        """Smaller nullifier mismatch → longer tau → less drift."""
+        w = jax.random.normal(jax.random.PRNGKey(2), (3, 3, 2, 8))
+        cfgs = tuple(leakage.with_mismatch(
+            LeakageConfig(circuit=CircuitConfig.NULLIFIED), m)
+            for m in (0.01, 0.06, 0.2))
+        surf = np.asarray(leakage.retention_surface(w, cfgs, (10.0,)))
+        assert surf[0, 0] < surf[1, 0] < surf[2, 0]
+
+
+class TestRetentionSurface:
+    def test_shape(self):
+        w = jax.random.normal(jax.random.PRNGKey(0), (3, 3, 2, 8))
+        cfgs = leakage.paper_circuits()
+        surf = leakage.retention_surface(w, cfgs, (1.0, 10.0, 100.0))
+        assert surf.shape == (3, 3)
+
+    @pytest.mark.parametrize("circuit", [CircuitConfig.BASIC,
+                                         CircuitConfig.SWITCH])
+    def test_retention_error_grows_with_t_intg(self, circuit):
+        """Fig 4: for the leaky circuits (a) and (b) the retention error is
+        strictly increasing in T_INTG."""
+        w = jax.random.normal(jax.random.PRNGKey(0), (3, 3, 2, 8))
+        surf = np.asarray(leakage.retention_surface(
+            w, (LeakageConfig(circuit=circuit),), (1.0, 3.0, 10.0, 30.0)))[0]
+        assert np.all(np.diff(surf) > 0), surf
+
+
+class TestGridExpansion:
+    def test_mismatch_only_expands_nullified(self):
+        grid = engine.SweepGrid(null_mismatch=(0.02, 0.06))
+        cfgs = engine.expand_leak_configs(grid, LeakageConfig())
+        labels = [engine.config_label(c) for c in cfgs]
+        assert labels == ["a", "b", "c@m=0.02", "c@m=0.06"]
+
+    def test_single_circuit(self):
+        grid = engine.SweepGrid(circuits=(CircuitConfig.SWITCH,))
+        cfgs = engine.expand_leak_configs(grid, LeakageConfig())
+        assert len(cfgs) == 1 and cfgs[0].circuit == CircuitConfig.SWITCH
+
+
+@pytest.fixture(scope="module")
+def grid_result():
+    from repro.core.codesign import P2MModelConfig, SweepConfig
+    from repro.core.snn import SpikingCNNConfig
+    from repro.data import events as ev_mod
+
+    model = P2MModelConfig(
+        p2m=P2MConfig(out_channels=8, n_sub=2, t_intg_ms=120.0),
+        backbone=SpikingCNNConfig(channels=(8, 8, 8, 8), input_hw=(16, 16),
+                                  fc_hidden=16, n_classes=5,
+                                  first_layer_external=True),
+        coarse_window_ms=120.0)
+    data = ev_mod.EventStreamConfig(name="gesture", height=16, width=16,
+                                    n_classes=5, duration_ms=240.0)
+    sweep_cfg = SweepConfig(batch_size=2, pretrain_steps=2, finetune_steps=1,
+                            eval_batches=1)
+    grid = engine.SweepGrid(t_intg_grid_ms=(30.0, 120.0))
+    return engine.run_grid(data, model, sweep_cfg, grid,
+                           log=lambda *_: None)
+
+
+class TestGridRun:
+    def test_one_record_per_cell(self, grid_result):
+        assert len(grid_result.records) == 3 * 2   # 3 circuits × 2 T
+        cells = {(r["label"], r["t_intg_ms"]) for r in grid_result.records}
+        assert len(cells) == 6
+
+    def test_record_keys(self, grid_result):
+        for r in grid_result.records:
+            for k in ("label", "circuit", "null_mismatch", "t_intg_ms",
+                      "accuracy", "train_time_s", "bandwidth_norm",
+                      "backend_energy_p2m_j", "energy_improvement",
+                      "retention_err_v", "train_time_norm"):
+                assert k in r, k
+
+    def test_normalization_per_config(self, grid_result):
+        """Every circuit config's longest-T point is its own 1x reference."""
+        for lab in grid_result.labels:
+            rs = [r for r in grid_result.records if r["label"] == lab]
+            base = max(rs, key=lambda r: r["t_intg_ms"])
+            assert abs(base["bandwidth_norm"] - 1.0) < 1e-6
+            assert abs(base["train_time_norm"] - 1.0) < 1e-6
+
+    def test_artifact_schema_and_json(self, grid_result):
+        art = grid_result.to_artifact()
+        assert art["schema"] == engine.SCHEMA
+        assert art["grid"]["labels"] == list(grid_result.labels)
+        assert set(art["retention"]["mean_abs_error_v"]) == set(
+            grid_result.labels)
+        json.dumps(art)   # must be serializable as-is
+
+    def test_retention_ordering_in_records(self, grid_result):
+        """Config (c) retains better than (b) better than (a) at 30 ms."""
+        at_t = {r["label"]: r["retention_err_v"]
+                for r in grid_result.records if r["t_intg_ms"] == 30.0}
+        assert at_t["c@m=0.06"] < at_t["b"] < at_t["a"]
