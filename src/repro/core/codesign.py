@@ -7,6 +7,11 @@ Training protocol (paper §3):
   phase 2  impose the P²M constraints on layer 1 at the target (short)
            T_INTG, freeze layer 1, and finetune layers ≥ 2 on the coarse
            grid fed by layer-1 spike counts.
+
+The batched engine in ``repro.core.sweep`` additionally offers an
+*unfrozen* phase 2 (``protocol="unfrozen"``) where layer 1 trains jointly
+with the backbone through the differentiable curvefit forward — see
+``run_sweep``'s ``protocol`` argument.
 """
 from __future__ import annotations
 
@@ -132,10 +137,15 @@ def run_sweep(data_cfg: events_mod.EventStreamConfig,
               model_cfg: P2MModelConfig,
               sweep: SweepConfig,
               circuit: CircuitConfig = CircuitConfig.NULLIFIED,
-              log: Any = print) -> list[dict]:
+              log: Any = print,
+              protocol: str = "frozen") -> list[dict]:
     """Run the co-design T_INTG sweep for ONE circuit config. Returns one
     record per grid point with accuracy, wall-clock train time, bandwidth
     ratio, and backend energies.
+
+    ``protocol`` picks the phase-2 variant: ``"frozen"`` (paper §3, layer 1
+    fixed after phase 1) or ``"unfrozen"`` (layer 1 trains jointly with the
+    backbone through the differentiable curvefit forward).
 
     This is a single-circuit wrapper over the batched engine in
     ``repro.core.sweep`` — the same vectorized path that sweeps all circuit
@@ -156,5 +166,6 @@ def run_sweep(data_cfg: events_mod.EventStreamConfig,
         circuits=(circuit,),
         t_intg_grid_ms=tuple(sweep.t_intg_grid_ms),
         null_mismatch=(mcfg.p2m.leak.null_mismatch,))
-    result = sweep_engine.run_grid(data_cfg, mcfg, sweep, grid, log=log)
+    result = sweep_engine.run_grid(data_cfg, mcfg, sweep, grid, log=log,
+                                   protocol=protocol)
     return result.records

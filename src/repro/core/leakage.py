@@ -74,37 +74,91 @@ jax.tree_util.register_dataclass(
     LeakParams, data_fields=["v_inf", "tau_ms"], meta_fields=[])
 
 
-def kernel_leak_params(w: jax.Array, cfg: LeakageConfig) -> LeakParams:
-    """Compute per-filter leak linearization from kernel weights.
+@dataclass(frozen=True)
+class LeakCoeffs:
+    """Numeric (branch-free) encoding of one :class:`LeakageConfig`.
 
-    ``w`` has shape [..., n_filters]; reduction runs over all leading axes
-    (the receptive field / input channels of each filter).
+    The python branch on ``cfg.circuit`` in :func:`leak_coeffs` is folded
+    into these scalars once, so :func:`leak_params_from_coeffs` is a single
+    jnp expression — differentiable w.r.t. the kernel weights and
+    ``vmap``-able over a stacked config axis. This is what lets the
+    unfrozen phase-2 protocol re-linearize each circuit's leak from its
+    *current* layer-1 weights inside a jitted, vmapped train step.
+    """
+    is_basic: jax.Array      # 1.0 for config (a): kernel-dependent leak
+    vdd: jax.Array
+    v_precharge: jax.Array
+    tau0_a_ms: jax.Array
+    w_eps: jax.Array
+    tau_const: jax.Array     # tau for the weight-independent circuits
+    v_inf_const: jax.Array   # v_inf for the weight-independent circuits
+
+
+jax.tree_util.register_dataclass(
+    LeakCoeffs,
+    data_fields=["is_basic", "vdd", "v_precharge", "tau0_a_ms", "w_eps",
+                 "tau_const", "v_inf_const"],
+    meta_fields=[])
+
+
+def leak_coeffs(cfg: LeakageConfig) -> LeakCoeffs:
+    """Fold one config's circuit branch into numeric coefficients."""
+    if cfg.circuit == CircuitConfig.BASIC:
+        is_basic, tau_const, v_inf_const = 1.0, jnp.inf, 0.0
+    elif cfg.circuit == CircuitConfig.SWITCH:
+        # weight-independent subthreshold leak toward GND
+        is_basic, tau_const, v_inf_const = 0.0, cfg.tau_b_ms, -cfg.v_precharge
+    elif cfg.circuit == CircuitConfig.NULLIFIED:
+        # residual = (b) leak scaled by mismatch → tau lengthens by 1/mismatch
+        is_basic = 0.0
+        tau_const = cfg.tau_b_ms / max(cfg.null_mismatch, 1e-6)
+        v_inf_const = -cfg.v_precharge
+    elif cfg.circuit == CircuitConfig.IDEAL:
+        is_basic, tau_const, v_inf_const = 0.0, jnp.inf, 0.0
+    else:  # pragma: no cover
+        raise ValueError(cfg.circuit)
+    f32 = lambda x: jnp.asarray(x, jnp.float32)  # noqa: E731
+    return LeakCoeffs(is_basic=f32(is_basic), vdd=f32(cfg.vdd),
+                      v_precharge=f32(cfg.v_precharge),
+                      tau0_a_ms=f32(cfg.tau0_a_ms), w_eps=f32(cfg.w_eps),
+                      tau_const=f32(tau_const), v_inf_const=f32(v_inf_const))
+
+
+def stacked_leak_coeffs(cfgs: Sequence[LeakageConfig]) -> LeakCoeffs:
+    """Coefficients for several configs, stacked on a leading [n_cfg] axis."""
+    per = [leak_coeffs(c) for c in cfgs]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *per)
+
+
+def leak_params_from_coeffs(w: jax.Array, co: LeakCoeffs) -> LeakParams:
+    """Branch-free leak linearization from kernel weights.
+
+    ``w`` has shape [..., n_filters]; reduction runs over all leading axes.
+    Differentiable w.r.t. ``w`` (config (a)'s v_inf/tau depend on the
+    kernel; the other circuits contribute zero weight gradient through the
+    ``where`` selects) and vmap-able over a stacked config axis of ``co``.
     """
     reduce_axes = tuple(range(w.ndim - 1))
     pos = jnp.sum(jnp.maximum(w, 0.0), axis=reduce_axes)
     neg = jnp.sum(jnp.maximum(-w, 0.0), axis=reduce_axes)
     mean_abs = jnp.mean(jnp.abs(w), axis=reduce_axes)
 
-    half = cfg.vdd / 2.0
-    if cfg.circuit == CircuitConfig.BASIC:
-        # kernel-dependent direction: pFETs pull to VDD, nFETs to GND
-        v_inf_abs = cfg.vdd * pos / (pos + neg + cfg.w_eps)
-        v_inf = v_inf_abs - cfg.v_precharge
-        tau = cfg.tau0_a_ms / jnp.maximum(mean_abs, cfg.w_eps)
-    elif cfg.circuit == CircuitConfig.SWITCH:
-        # weight-independent subthreshold leak toward GND
-        v_inf = jnp.full_like(pos, -cfg.v_precharge)
-        tau = jnp.full_like(pos, cfg.tau_b_ms)
-    elif cfg.circuit == CircuitConfig.NULLIFIED:
-        # residual = (b) leak scaled by mismatch → tau lengthens by 1/mismatch
-        v_inf = jnp.full_like(pos, -cfg.v_precharge)
-        tau = jnp.full_like(pos, cfg.tau_b_ms / max(cfg.null_mismatch, 1e-6))
-    elif cfg.circuit == CircuitConfig.IDEAL:
-        v_inf = jnp.zeros_like(pos)
-        tau = jnp.full_like(pos, jnp.inf)
-    else:  # pragma: no cover
-        raise ValueError(cfg.circuit)
+    basic = co.is_basic > 0.5
+    # config (a): kernel-dependent direction — pFETs pull to VDD, nFETs to GND
+    v_inf_basic = co.vdd * pos / (pos + neg + co.w_eps) - co.v_precharge
+    tau_basic = co.tau0_a_ms / jnp.maximum(mean_abs, co.w_eps)
+    v_inf = jnp.where(basic, v_inf_basic, co.v_inf_const)
+    tau = jnp.where(basic, tau_basic, co.tau_const)
     return LeakParams(v_inf=v_inf, tau_ms=tau)
+
+
+def kernel_leak_params(w: jax.Array, cfg: LeakageConfig) -> LeakParams:
+    """Compute per-filter leak linearization from kernel weights.
+
+    ``w`` has shape [..., n_filters]; reduction runs over all leading axes
+    (the receptive field / input channels of each filter).
+    """
+    return leak_params_from_coeffs(w, leak_coeffs(cfg))
 
 
 def stacked_leak_params(w: jax.Array, cfgs: Sequence[LeakageConfig]
@@ -120,6 +174,20 @@ def stacked_leak_params(w: jax.Array, cfgs: Sequence[LeakageConfig]
     per = [kernel_leak_params(w, c) for c in cfgs]
     return LeakParams(v_inf=jnp.stack([p.v_inf for p in per]),
                       tau_ms=jnp.stack([p.tau_ms for p in per]))
+
+
+def grouped_leak_params(w_s: jax.Array, cfgs: Sequence[LeakageConfig]
+                        ) -> LeakParams:
+    """Leak linearizations for PER-CONFIG kernel weights.
+
+    ``w_s`` has a leading ``[n_cfg]`` axis — one kernel per circuit config,
+    the unfrozen phase-2 state where each config learns its own layer-1
+    weights. Returns stacked ``LeakParams`` like :func:`stacked_leak_params`
+    but with config ``i`` linearized around ``w_s[i]``. Differentiable
+    w.r.t. ``w_s``.
+    """
+    assert w_s.shape[0] == len(cfgs), (w_s.shape, len(cfgs))
+    return jax.vmap(leak_params_from_coeffs)(w_s, stacked_leak_coeffs(cfgs))
 
 
 def paper_circuits() -> tuple[LeakageConfig, ...]:

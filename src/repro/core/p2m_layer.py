@@ -152,6 +152,75 @@ def p2m_forward_scan_stacked(params: Params, events: jax.Array,
     return spikes, v_pre
 
 
+def _curvefit_from_lk(params: Params, events: jax.Array, cfg: P2MConfig,
+                      w_q: jax.Array, lk: leakage.LeakParams) -> jax.Array:
+    """Single-config curve-fit body for one explicit leak linearization.
+
+    ``lk`` fields are per-filter ``[C_out]``. Returns v_pre
+    [B, T_out, H', W', C_out]. Fully differentiable w.r.t. ``w_q`` and the
+    leak params — the seam the unfrozen phase-2 protocol trains through.
+    """
+    B, T_out, n_sub = events.shape[:3]
+    a = leakage.decay_factor(lk.tau_ms, cfg.dt_ms)             # [C_out]
+    k = jnp.arange(n_sub)
+    decay_w = a[None, :] ** (n_sub - 1 - k)[:, None]           # [n_sub, C]
+    drift = jnp.sum(1.0 - decay_w, axis=0) * lk.v_inf / n_sub  # [C]
+
+    tb = events.reshape((B * T_out * n_sub,) + events.shape[3:])
+    ideal = _conv(tb, w_q, cfg.stride) * cfg.analog.dv_unit
+    ideal = ideal.reshape((B * T_out, n_sub) + ideal.shape[1:])
+    x = jnp.einsum("bk...c,kc->b...c", ideal, decay_w) + drift
+    pv = {"gain": params["pv_gain"], "offset": params["pv_offset"]}
+    v_pre = analog.transfer_curve(x, cfg.analog, pv)
+    return v_pre.reshape((B, T_out) + v_pre.shape[1:])
+
+
+def p2m_forward_curvefit_coeffs(params: Params, events: jax.Array,
+                                cfg: P2MConfig, coeffs: leakage.LeakCoeffs
+                                ) -> tuple[jax.Array, jax.Array]:
+    """Single-config curve-fit forward, re-linearizing the leak from the
+    *current* (quantized) weights via branch-free coefficients.
+
+    Unlike :func:`p2m_forward_curvefit` (which takes ``cfg.leak`` and
+    branches on the circuit in python), the circuit here is encoded in
+    ``coeffs``, so this function vmaps over a stacked config axis and is
+    differentiable w.r.t. ``params`` end-to-end, including the
+    kernel-dependent leak of circuit (a).
+    """
+    w_q = effective_weights(params, cfg)
+    lk = leakage.leak_params_from_coeffs(w_q, coeffs)
+    v_pre = _curvefit_from_lk(params, events, cfg, w_q, lk)
+    spikes = spike_fn(v_pre - cfg.v_threshold)
+    return spikes, v_pre
+
+
+def p2m_forward_curvefit_grouped(params_s: Params, events: jax.Array,
+                                 cfg: P2MConfig,
+                                 leak_cfgs: tuple[LeakageConfig, ...]
+                                 ) -> tuple[jax.Array, jax.Array]:
+    """Curve-fit forward with PER-CONFIG layer-1 params (unfrozen phase 2).
+
+    Every leaf of ``params_s`` carries a leading ``[n_cfg]`` axis — one
+    learned copy per circuit config. Returns (spikes, v_pre), both
+    [n_cfg, B, T_out, H', W', C_out]. Each config's leak linearization is
+    recomputed from its own weights, so ``jax.grad`` through this function
+    gives each config an independent layer-1 gradient (surrogate gradient
+    through the spike nonlinearity, straight-through through the weight
+    quantizer).
+    """
+    coeffs = leakage.stacked_leak_coeffs(leak_cfgs)
+    return jax.vmap(
+        lambda p, co: p2m_forward_curvefit_coeffs(p, events, cfg, co)
+    )(params_s, coeffs)
+
+
+def stack_p2m_params(params: Params, n_cfg: int) -> Params:
+    """Replicate layer-1 params onto a leading [n_cfg] config axis — the
+    starting point of the unfrozen phase-2 finetune (every circuit config
+    starts from the shared phase-1 pretrained kernel)."""
+    return jax.tree.map(lambda x: jnp.stack([x] * n_cfg), params)
+
+
 def p2m_forward_curvefit(params: Params, events: jax.Array, cfg: P2MConfig
                          ) -> tuple[jax.Array, jax.Array]:
     """The paper's trainable model: leak-weighted linear conv → curve fit.
@@ -173,33 +242,17 @@ def p2m_forward_curvefit_stacked(params: Params, events: jax.Array,
                                  ) -> tuple[jax.Array, jax.Array]:
     """Curve-fit model under a stacked circuit-config axis.
 
-    The per-sub-slot ideal conv is config-independent and computed ONCE;
-    each config then reduces it with its own [n_sub, C_out] decay weights —
-    so sweeping n_cfg circuits costs one conv plus n_cfg cheap einsums.
+    The vmap runs :func:`_curvefit_from_lk` over the leak params only —
+    the per-sub-slot ideal conv does not depend on the mapped axis, so it
+    stays unbatched (computed ONCE) and each config reduces it with its
+    own [n_sub, C_out] decay weights: sweeping n_cfg circuits costs one
+    conv plus n_cfg cheap einsums.
     Returns (spikes, v_pre), both [n_cfg, B, T_out, H', W', C_out].
     """
-    B, T_out, n_sub = events.shape[:3]
     w_q = effective_weights(params, cfg)
     lk = leakage.stacked_leak_params(w_q, leak_cfgs)          # [n_cfg, C_out]
-    a = leakage.decay_factor(lk.tau_ms, cfg.dt_ms)            # [n_cfg, C_out]
-    # decay weight for sub-slot k (0-indexed; readout after slot n_sub-1)
-    k = jnp.arange(n_sub)
-    decay_w = a[:, None, :] ** (n_sub - 1 - k)[None, :, None]  # [n_cfg,n_sub,C]
-    # bias toward v_inf accumulates too: (1-a^(n-k)) v_inf summed — the
-    # homogeneous part of the ODE between events
-    drift = jnp.sum((1.0 - decay_w), axis=1) * lk.v_inf / n_sub  # [n_cfg, C]
-
-    # conv each sub-slot then weight: conv is linear, but decay depends on
-    # C_out, so fold n_sub into batch, conv once, and einsum per config.
-    tb = events.reshape((B * T_out * n_sub,) + events.shape[3:])
-    ideal = _conv(tb, w_q, cfg.stride) * cfg.analog.dv_unit
-    ideal = ideal.reshape((B * T_out, n_sub) + ideal.shape[1:])
-    x = jnp.einsum("bk...c,gkc->gb...c", ideal, decay_w)
-    x = x + drift.reshape((len(leak_cfgs),) + (1,) * (x.ndim - 2)
-                          + drift.shape[-1:])
-    pv = {"gain": params["pv_gain"], "offset": params["pv_offset"]}
-    v_pre = analog.transfer_curve(x, cfg.analog, pv)
-    v_pre = v_pre.reshape((len(leak_cfgs), B, T_out) + v_pre.shape[2:])
+    v_pre = jax.vmap(
+        lambda l: _curvefit_from_lk(params, events, cfg, w_q, l))(lk)
     spikes = spike_fn(v_pre - cfg.v_threshold)
     return spikes, v_pre
 

@@ -17,11 +17,26 @@ changes tensor shapes (T_out = duration / T_INTG).
 Protocol per grid point (mirrors codesign.py, paper §3):
   phase 1  pretrain the whole net once at the longest T_INTG, no circuit
            constraints (shared across ALL grid points);
-  phase 2  per T_INTG: constrain layer 1 under every circuit config at once
-           (frozen), finetune all backbones in parallel via vmap, then
-           batch-evaluate accuracy / bandwidth / energy; retention-error
-           surfaces come from the closed-form leak ODE.
+  phase 2  per T_INTG: constrain layer 1 under every circuit config at once,
+           finetune in parallel via vmap, then batch-evaluate accuracy /
+           bandwidth / energy; retention-error surfaces come from the
+           closed-form leak ODE.
 
+Phase 2 comes in TWO protocols:
+
+  ``protocol="frozen"``    the paper's protocol — layer 1 is frozen, only
+                           the n_cfg backbones train (vmapped);
+  ``protocol="unfrozen"``  each circuit config additionally learns its OWN
+                           layer-1 weights: the layer-1 params gain a
+                           stacked [n_cfg] axis and the jitted step
+                           differentiates through the curvefit forward
+                           (surrogate spike gradient, straight-through
+                           quantizer), re-linearizing each config's leak
+                           from its current weights every step.
+
+``run_protocols`` runs both off one shared pretrain and
+``protocols_artifact`` merges them into one ``p2m-codesign-sweep/v2``
+artifact so the co-design optimum can be compared across protocols.
 ``codesign.run_sweep`` is a thin single-circuit wrapper over this engine.
 """
 from __future__ import annotations
@@ -35,6 +50,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core import analog as analog_mod
 from repro.core import energy as energy_mod
 from repro.core import leakage, p2m_layer, snn
 from repro.core.leakage import CircuitConfig, LeakageConfig
@@ -45,6 +61,20 @@ from repro.optim.optimizers import apply_updates
 Params = dict
 
 SCHEMA = "p2m-codesign-sweep/v1"
+SCHEMA_V2 = "p2m-codesign-sweep/v2"
+PROTOCOLS = ("frozen", "unfrozen")
+RETENTION_V0 = 0.2     # probe swing (V) for the Fig 4a retention surfaces
+
+
+def resolve_protocols(arg: str) -> tuple[str, ...]:
+    """CLI protocol argument → protocol tuple ("both" expands to all)."""
+    return PROTOCOLS if arg == "both" else (arg,)
+
+
+def _check_protocol(protocol: str) -> None:
+    if protocol not in PROTOCOLS:
+        raise ValueError(f"unknown protocol {protocol!r} "
+                         f"(expected one of {PROTOCOLS})")
 
 
 # ---------------------------------------------------------------------------
@@ -94,8 +124,8 @@ def config_label(lc: LeakageConfig) -> str:
 # batched layer-1 → backbone plumbing
 # ---------------------------------------------------------------------------
 
-def _stack_tree(tree, n: int):
-    return jax.tree.map(lambda x: jnp.stack([x] * n), tree)
+# one utility, one home: replicate a pytree onto a leading config axis
+_stack_tree = p2m_layer.stack_p2m_params
 
 
 def _layer1_coarse(p2m_params: Params, events: jax.Array, model_cfg,
@@ -133,66 +163,188 @@ def _layer1_coarse(p2m_params: Params, events: jax.Array, model_cfg,
     return coarse, l1
 
 
-def make_batched_finetune_step(model_cfg, leak_cfgs: tuple[LeakageConfig, ...],
-                               opt) -> Callable:
-    """One jitted step that finetunes n_cfg frozen-layer-1 backbones at once.
+def _layer1_coarse_one(p2m_params: Params, events: jax.Array, model_cfg,
+                       coeffs: leakage.LeakCoeffs
+                       ) -> tuple[jax.Array, dict]:
+    """Single-config differentiable P²M layer → pool → coarsen.
 
-    Layer 1 is frozen in phase 2 (paper §3), so its stacked forward runs
-    once outside the gradient; the backbone update is vmapped over the
-    config axis of (params, opt_state, state, coarse spikes).
+    The circuit enters only through numeric ``coeffs``, so this function is
+    vmap-able over a stacked config axis AND differentiable w.r.t. the
+    layer-1 params — the leak linearization is recomputed from the current
+    (quantized) weights on every call. Per-config mirror of
+    :func:`_layer1_coarse`; the spike/MAC accounting matches it so both
+    protocols feed identical bandwidth/energy bookkeeping.
     """
+    cfg = model_cfg.p2m
+    spikes, _ = p2m_layer.p2m_forward_curvefit_coeffs(p2m_params, events,
+                                                      cfg, coeffs)
+    B, T = spikes.shape[:2]
+    tb = spikes.reshape((B * T,) + spikes.shape[2:])
+    tb = snn.max_pool(tb)
+    spikes_p = tb.reshape((B, T) + tb.shape[1:])
+    coarse = p2m_layer.coarsen_spikes(spikes_p, model_cfg.coarsen_group())
+    k = cfg.kernel_size
+    out_elems = float(B * T) * float(math.prod(spikes_p.shape[2:]))
+    l1 = {
+        "spikes/p2m": lax.stop_gradient(jnp.sum(spikes_p)),        # scalar
+        "events/in": lax.stop_gradient(jnp.sum(events)),           # scalar
+        "macs/p2m": jnp.asarray(out_elems * k * k * cfg.in_channels,
+                                jnp.float32),                      # scalar
+    }
+    return coarse, l1
+
+
+def _merge_grouped_l1(l1_s: dict) -> dict:
+    """vmapped per-config l1 stats → the frozen-path contract:
+    per-config spikes [G], config-independent events/MACs as scalars."""
+    return {"spikes/p2m": l1_s["spikes/p2m"],
+            "events/in": l1_s["events/in"][0],
+            "macs/p2m": l1_s["macs/p2m"][0]}
+
+
+def make_batched_finetune_step(model_cfg, leak_cfgs: tuple[LeakageConfig, ...],
+                               opt, protocol: str = "frozen") -> Callable:
+    """One jitted phase-2 step over all n_cfg circuit configs at once.
+
+    Unified signature for both protocols::
+
+        p2m_ps, bb_params_s, opt_state_s, state_s, metrics, l1 = step(
+            p2m_ps, bb_params_s, opt_state_s, state_s, events, labels)
+
+    ``protocol="frozen"`` (paper §3): ``p2m_ps`` is the SHARED layer-1
+    params, returned untouched — its stacked forward runs once outside the
+    gradient and only the backbones update (vmapped). ``opt_state_s`` is
+    the backbone-only optimizer state.
+
+    ``protocol="unfrozen"``: ``p2m_ps`` carries a leading [n_cfg] axis and
+    the update is a JOINT vmapped step on ``{"p2m", "backbone"}`` — each
+    config differentiates through its own curvefit layer-1 forward
+    (surrogate spike gradient, straight-through quantizer), re-linearizing
+    its leak from the current weights inside the jitted step.
+    ``opt_state_s`` is the joint optimizer state.
+    """
+    _check_protocol(protocol)
+    if protocol == "unfrozen" and model_cfg.p2m.mode != "curvefit":
+        raise ValueError(
+            f"unfrozen protocol requires p2m.mode='curvefit' (the "
+            f"differentiable forward), got {model_cfg.p2m.mode!r}")
     bb_cfg = model_cfg.backbone
 
-    def bb_loss(bb_params, state, coarse, labels):
+    if protocol == "frozen":
+        def bb_loss(bb_params, state, coarse, labels):
+            logits, new_state, aux = snn.spiking_cnn_apply(
+                bb_params, state, coarse, bb_cfg, train=True)
+            loss = snn.cross_entropy(logits, labels)
+            return loss, (new_state, aux, logits)
+
+        @jax.jit
+        def step(p2m_params, bb_params_s, opt_state_s, state_s, events,
+                 labels):
+            coarse_s, l1 = _layer1_coarse(p2m_params, events, model_cfg,
+                                          leak_cfgs)
+            coarse_s = lax.stop_gradient(coarse_s)
+
+            def per_cfg(bb_p, o_s, st, coarse):
+                (loss, (new_st, aux, logits)), grads = jax.value_and_grad(
+                    bb_loss, has_aux=True)(bb_p, st, coarse, labels)
+                grads, gnorm = clip_by_global_norm(grads, 1.0)
+                updates, o_s = opt.update(grads, o_s, bb_p)
+                bb_p = apply_updates(bb_p, updates)
+                metrics = {"loss": loss, "gnorm": gnorm,
+                           "acc": snn.accuracy(logits, labels)}
+                return bb_p, o_s, new_st, metrics
+
+            bb_params_s, opt_state_s, state_s, metrics = jax.vmap(per_cfg)(
+                bb_params_s, opt_state_s, state_s, coarse_s)
+            return (p2m_params, bb_params_s, opt_state_s, state_s, metrics,
+                    l1)
+
+        return step
+
+    coeffs_s = leakage.stacked_leak_coeffs(leak_cfgs)
+
+    def joint_loss(joint, state, events, labels, coeffs):
+        coarse, l1 = _layer1_coarse_one(joint["p2m"], events, model_cfg,
+                                        coeffs)
         logits, new_state, aux = snn.spiking_cnn_apply(
-            bb_params, state, coarse, bb_cfg, train=True)
+            joint["backbone"], state, coarse, bb_cfg, train=True)
         loss = snn.cross_entropy(logits, labels)
-        return loss, (new_state, aux, logits)
+        return loss, (new_state, aux, logits, l1)
 
     @jax.jit
-    def step(p2m_params, bb_params_s, opt_state_s, state_s, events, labels):
-        coarse_s, l1 = _layer1_coarse(p2m_params, events, model_cfg,
-                                      leak_cfgs)
-        coarse_s = lax.stop_gradient(coarse_s)
-
-        def per_cfg(bb_p, o_s, st, coarse):
-            (loss, (new_st, aux, logits)), grads = jax.value_and_grad(
-                bb_loss, has_aux=True)(bb_p, st, coarse, labels)
+    def step(p2m_params_s, bb_params_s, opt_state_s, state_s, events,
+             labels):
+        def per_cfg(p2m_p, bb_p, o_s, st, coeffs):
+            joint = {"p2m": p2m_p, "backbone": bb_p}
+            (loss, (new_st, aux, logits, l1)), grads = jax.value_and_grad(
+                joint_loss, has_aux=True)(joint, st, events, labels, coeffs)
             grads, gnorm = clip_by_global_norm(grads, 1.0)
-            updates, o_s = opt.update(grads, o_s, bb_p)
-            bb_p = apply_updates(bb_p, updates)
+            updates, o_s = opt.update(grads, o_s, joint)
+            joint = apply_updates(joint, updates)
             metrics = {"loss": loss, "gnorm": gnorm,
                        "acc": snn.accuracy(logits, labels)}
-            return bb_p, o_s, new_st, metrics
+            return joint["p2m"], joint["backbone"], o_s, new_st, metrics, l1
 
-        bb_params_s, opt_state_s, state_s, metrics = jax.vmap(per_cfg)(
-            bb_params_s, opt_state_s, state_s, coarse_s)
-        return bb_params_s, opt_state_s, state_s, metrics, l1
+        (p2m_params_s, bb_params_s, opt_state_s, state_s, metrics,
+         l1_s) = jax.vmap(per_cfg)(p2m_params_s, bb_params_s, opt_state_s,
+                                   state_s, coeffs_s)
+        return (p2m_params_s, bb_params_s, opt_state_s, state_s, metrics,
+                _merge_grouped_l1(l1_s))
 
     return step
 
 
-def make_batched_eval(model_cfg, leak_cfgs: tuple[LeakageConfig, ...]
-                      ) -> Callable:
+def make_batched_eval(model_cfg, leak_cfgs: tuple[LeakageConfig, ...],
+                      protocol: str = "frozen") -> Callable:
     """Jitted batched eval: per-config accuracy/loss + backbone aux + the
-    layer-1 spike statistics feeding bandwidth/energy."""
+    layer-1 spike statistics feeding bandwidth/energy.
+
+    With ``protocol="unfrozen"`` the first argument carries per-config
+    layer-1 params (leading [n_cfg] axis) and the whole forward is vmapped;
+    the returned (metrics, aux, l1) contract is identical either way.
+    """
+    _check_protocol(protocol)
+    if protocol == "unfrozen" and model_cfg.p2m.mode != "curvefit":
+        raise ValueError(
+            f"unfrozen protocol requires p2m.mode='curvefit' (the "
+            f"differentiable forward), got {model_cfg.p2m.mode!r}")
     bb_cfg = model_cfg.backbone
 
-    @jax.jit
-    def ev(p2m_params, bb_params_s, state_s, events, labels):
-        coarse_s, l1 = _layer1_coarse(p2m_params, events, model_cfg,
-                                      leak_cfgs)
+    if protocol == "frozen":
+        @jax.jit
+        def ev(p2m_params, bb_params_s, state_s, events, labels):
+            coarse_s, l1 = _layer1_coarse(p2m_params, events, model_cfg,
+                                          leak_cfgs)
 
-        def per_cfg(bb_p, st, coarse):
+            def per_cfg(bb_p, st, coarse):
+                logits, _, aux = snn.spiking_cnn_apply(
+                    bb_p, st, coarse, bb_cfg, train=False)
+                return {"acc": snn.accuracy(logits, labels),
+                        "loss": snn.cross_entropy(logits, labels)}, aux
+
+            metrics, aux = jax.vmap(per_cfg)(bb_params_s, state_s, coarse_s)
+            return metrics, aux, l1
+
+        return ev
+
+    coeffs_s = leakage.stacked_leak_coeffs(leak_cfgs)
+
+    @jax.jit
+    def ev(p2m_params_s, bb_params_s, state_s, events, labels):
+        def per_cfg(p2m_p, bb_p, st, coeffs):
+            coarse, l1 = _layer1_coarse_one(p2m_p, events, model_cfg,
+                                            coeffs)
             logits, _, aux = snn.spiking_cnn_apply(
                 bb_p, st, coarse, bb_cfg, train=False)
             return {"acc": snn.accuracy(logits, labels),
-                    "loss": snn.cross_entropy(logits, labels)}, aux
+                    "loss": snn.cross_entropy(logits, labels)}, aux, l1
 
-        metrics, aux = jax.vmap(per_cfg)(bb_params_s, state_s, coarse_s)
-        return metrics, aux, l1
+        metrics, aux, l1_s = jax.vmap(per_cfg)(p2m_params_s, bb_params_s,
+                                               state_s, coeffs_s)
+        return metrics, aux, _merge_grouped_l1(l1_s)
 
     return ev
+
 
 
 # ---------------------------------------------------------------------------
@@ -239,10 +391,12 @@ class GridResult:
     retention: dict
     labels: tuple[str, ...]
     grid: SweepGrid
+    protocol: str = "frozen"
 
     def to_artifact(self, extra_meta: dict | None = None) -> dict:
         return {
             "schema": SCHEMA,
+            "protocol": self.protocol,
             "grid": {
                 "circuits": [c.value for c in self.grid.circuits],
                 "t_intg_grid_ms": list(self.grid.t_intg_grid_ms),
@@ -276,29 +430,43 @@ def _normalize(records: list[dict]) -> None:
 
 
 def run_grid(data_cfg: events_mod.EventStreamConfig, model_cfg,
-             sweep, grid: SweepGrid, log: Any = print) -> GridResult:
+             sweep, grid: SweepGrid, log: Any = print, *,
+             protocol: str = "frozen",
+             pretrained: tuple | None = None) -> GridResult:
     """Run the batched co-design sweep. ``model_cfg`` is a
     codesign.P2MModelConfig, ``sweep`` a codesign.SweepConfig (its
-    ``t_intg_grid_ms`` is superseded by ``grid.t_intg_grid_ms``)."""
+    ``t_intg_grid_ms`` is superseded by ``grid.t_intg_grid_ms``).
+
+    ``protocol`` selects the phase-2 variant: ``"frozen"`` (paper §3 —
+    layer 1 fixed, backbones finetune) or ``"unfrozen"`` (each circuit
+    config jointly learns its own layer-1 weights + backbone). The phase-1
+    pretrain and the batch/eval key streams are identical across protocols
+    for a given seed, so records are directly comparable. ``pretrained``
+    optionally injects a shared ``(params, state, key)`` phase-1 result
+    (see :func:`run_protocols`)."""
+    _check_protocol(protocol)
     leak_cfgs = expand_leak_configs(grid, model_cfg.p2m.leak)
     labels = tuple(config_label(lc) for lc in leak_cfgs)
     G = len(leak_cfgs)
     t_grid = grid.t_intg_grid_ms
-    key = jax.random.PRNGKey(sweep.seed)
 
     sweep = replace(sweep, t_intg_grid_ms=t_grid)
-    pre_params, pre_state, key = pretrain_backbone(
-        key, data_cfg, model_cfg, sweep, log)
+    if pretrained is None:
+        key = jax.random.PRNGKey(sweep.seed)
+        pre_params, pre_state, key = pretrain_backbone(
+            key, data_cfg, model_cfg, sweep, log)
+    else:
+        pre_params, pre_state, key = pretrained
 
     # retention surface from the closed-form leak ODE (Fig 4a): the
     # pretrained layer-1 kernel decides config (a)'s drift direction/rate.
-    from repro.core import analog as analog_mod
     w_q = analog_mod.quantize_weights(pre_params["p2m"]["w"],
                                       model_cfg.p2m.analog)
-    surface = leakage.retention_surface(w_q, leak_cfgs, t_grid)   # [G, n_t]
+    surface = leakage.retention_surface(w_q, leak_cfgs, t_grid,
+                                        v0=RETENTION_V0)          # [G, n_t]
     retention = {
         "t_grid_ms": list(t_grid),
-        "v0": 0.2,
+        "v0": RETENTION_V0,
         "mean_abs_error_v": {lab: [float(x) for x in row]
                              for lab, row in zip(labels, surface)},
     }
@@ -309,31 +477,52 @@ def run_grid(data_cfg: events_mod.EventStreamConfig, model_cfg,
         cfg_t = replace(
             model_cfg,
             p2m=replace(model_cfg.p2m, t_intg_ms=t_ms, mode="curvefit"))
-        p2m_params = {k: jnp.copy(v) for k, v in pre_params["p2m"].items()}
-        bb_params_s = _stack_tree(pre_params["backbone"], G)
+        if protocol == "unfrozen":
+            # layer 1 gains a stacked [n_cfg] axis: every circuit config
+            # starts from the shared pretrain and learns its own copy,
+            # jointly with its backbone (shared optimizer state tree).
+            p2m_ps = p2m_layer.stack_p2m_params(pre_params["p2m"], G)
+            bb_params_s = _stack_tree(pre_params["backbone"], G)
+            opt_state_s = jax.vmap(opt.init)(
+                {"p2m": p2m_ps, "backbone": bb_params_s})
+        else:
+            p2m_ps = {k: jnp.copy(v) for k, v in pre_params["p2m"].items()}
+            bb_params_s = _stack_tree(pre_params["backbone"], G)
+            opt_state_s = jax.vmap(opt.init)(bb_params_s)
         state_s = _stack_tree(pre_state, G)
-        opt_state_s = jax.vmap(opt.init)(bb_params_s)
-        step_fn = make_batched_finetune_step(cfg_t, leak_cfgs, opt)
+        step_fn = make_batched_finetune_step(cfg_t, leak_cfgs, opt,
+                                             protocol=protocol)
         # warmup step: exclude jit compile from the train-time measurement
         # (the paper's training-time column is steady-state epochs)
         key, kw = jax.random.split(key)
         ev_w, lab_w = events_mod.sample_batch(kw, data_cfg, sweep.batch_size,
                                               t_ms, n_sub=cfg_t.p2m.n_sub)
-        bb_params_s, opt_state_s, state_s, m, _ = step_fn(
-            p2m_params, bb_params_s, opt_state_s, state_s, ev_w, lab_w)
+        p2m_ps, bb_params_s, opt_state_s, state_s, m, _ = step_fn(
+            p2m_ps, bb_params_s, opt_state_s, state_s, ev_w, lab_w)
         jax.block_until_ready(m["loss"])
         t0 = time.perf_counter()
         for _ in range(sweep.finetune_steps):
             key, kb = jax.random.split(key)
             ev, lab = events_mod.sample_batch(kb, data_cfg, sweep.batch_size,
                                               t_ms, n_sub=cfg_t.p2m.n_sub)
-            bb_params_s, opt_state_s, state_s, m, _ = step_fn(
-                p2m_params, bb_params_s, opt_state_s, state_s, ev, lab)
+            p2m_ps, bb_params_s, opt_state_s, state_s, m, _ = step_fn(
+                p2m_ps, bb_params_s, opt_state_s, state_s, ev, lab)
         jax.block_until_ready(m["loss"])
         train_s = time.perf_counter() - t0
 
+        if protocol == "unfrozen":
+            # re-linearize each config's leak around its LEARNED kernel:
+            # the co-design point of the unfrozen protocol is that circuit
+            # (a)'s drift direction/rate is now a trained quantity.
+            w_q_s = analog_mod.quantize_weights(p2m_ps["w"],
+                                                cfg_t.p2m.analog)
+            lk_s = leakage.grouped_leak_params(w_q_s, leak_cfgs)
+            ret_t = jnp.mean(
+                leakage.retention_error(lk_s, RETENTION_V0, t_ms),
+                axis=-1)                                           # [G]
+
         # batched eval: accuracy + spike statistics for bandwidth/energy
-        eval_fn = make_batched_eval(cfg_t, leak_cfgs)
+        eval_fn = make_batched_eval(cfg_t, leak_cfgs, protocol=protocol)
         accs = [[] for _ in range(G)]
         l1_spikes = [0.0] * G
         in_events = 0.0
@@ -343,7 +532,7 @@ def run_grid(data_cfg: events_mod.EventStreamConfig, model_cfg,
             key, kb = jax.random.split(key)
             ev, lab = events_mod.sample_batch(kb, data_cfg, sweep.batch_size,
                                               t_ms, n_sub=cfg_t.p2m.n_sub)
-            metrics, aux, l1 = eval_fn(p2m_params, bb_params_s, state_s,
+            metrics, aux, l1 = eval_fn(p2m_ps, bb_params_s, state_s,
                                        ev, lab)
             in_events += float(l1["events/in"])
             macs += float(l1["macs/p2m"])
@@ -359,10 +548,13 @@ def run_grid(data_cfg: events_mod.EventStreamConfig, model_cfg,
             e_conv = energy_mod.backend_energy_conventional(aux_sum[g], macs)
             e_p2m = energy_mod.backend_energy_p2m(aux_sum[g], l1_spikes[g],
                                                   macs)
+            ret_g = (float(ret_t[g]) if protocol == "unfrozen"
+                     else float(surface[g, ti]))
             rec = {
                 "label": lab_g,
                 "circuit": lc.circuit.value,
                 "null_mismatch": lc.null_mismatch,
+                "protocol": protocol,
                 "t_intg_ms": t_ms,
                 "accuracy": sum(accs[g]) / len(accs[g]),
                 "train_time_s": train_s,
@@ -373,16 +565,50 @@ def run_grid(data_cfg: events_mod.EventStreamConfig, model_cfg,
                 "sensor_energy_p2m_j": energy_mod.sensor_energy_p2m(macs),
                 "layer1_spikes": l1_spikes[g],
                 "input_events": in_events,
-                "retention_err_v": float(surface[g, ti]),
+                "retention_err_v": ret_g,
             }
             records.append(rec)
-            log(f"[sweep t={t_ms}ms cfg={lab_g}] acc={rec['accuracy']:.3f} "
-                f"bw={bw:.4f} ret={rec['retention_err_v'] * 1e3:.2f}mV "
+            log(f"[sweep {protocol} t={t_ms}ms cfg={lab_g}] "
+                f"acc={rec['accuracy']:.3f} bw={bw:.4f} "
+                f"ret={rec['retention_err_v'] * 1e3:.2f}mV "
                 f"train={train_s:.1f}s")
 
     _normalize(records)
     return GridResult(records=records, retention=retention, labels=labels,
-                      grid=grid)
+                      grid=grid, protocol=protocol)
+
+
+def run_protocols(data_cfg: events_mod.EventStreamConfig, model_cfg,
+                  sweep, grid: SweepGrid,
+                  protocols: tuple[str, ...] = PROTOCOLS,
+                  log: Any = print) -> dict[str, GridResult]:
+    """Run the grid under several phase-2 protocols off ONE shared phase-1
+    pretrain. The post-pretrain PRNG key is reused for every protocol, so
+    each one sees identical finetune/eval batches — accuracy differences
+    between records are the protocol, not the data."""
+    for p in protocols:
+        _check_protocol(p)
+    sweep = replace(sweep, t_intg_grid_ms=grid.t_intg_grid_ms)
+    key = jax.random.PRNGKey(sweep.seed)
+    pretrained = pretrain_backbone(key, data_cfg, model_cfg, sweep, log)
+    return {p: run_grid(data_cfg, model_cfg, sweep, grid, log=log,
+                        protocol=p, pretrained=pretrained)
+            for p in protocols}
+
+
+def protocols_artifact(results: dict[str, GridResult],
+                       extra_meta: dict | None = None) -> dict:
+    """Merge per-protocol grid results into ONE ``p2m-codesign-sweep/v2``
+    artifact: same grid/retention metadata, records concatenated across
+    protocols (each record carries its ``"protocol"`` field)."""
+    first = next(iter(results.values()))
+    art = first.to_artifact()
+    del art["protocol"]
+    return {**art,
+            "schema": SCHEMA_V2,
+            "protocols": list(results),
+            "records": [r for res in results.values() for r in res.records],
+            **(extra_meta or {})}
 
 
 # ---------------------------------------------------------------------------

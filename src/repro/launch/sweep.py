@@ -3,10 +3,14 @@
 Default mode — the batched CO-DESIGN sweep (paper Fig 2/4 + Table 1): one
 in-process, vmap-batched run over CircuitConfig × T_INTG × null_mismatch
 via repro.core.sweep, emitting ONE structured JSON artifact
-(schema "p2m-codesign-sweep/v1", see docs/sweep.md):
+(schema "p2m-codesign-sweep/v2", see docs/sweep.md). --protocol picks the
+phase-2 finetune protocol(s): "frozen" (paper §3 — layer 1 fixed),
+"unfrozen" (each circuit config learns its own layer-1 weights), or
+"both" (default: one shared pretrain, records for both protocols in one
+artifact so the co-design optimum can be compared):
 
   PYTHONPATH=src python -m repro.launch.sweep --grid paper
-  PYTHONPATH=src python -m repro.launch.sweep --grid fast
+  PYTHONPATH=src python -m repro.launch.sweep --grid fast --protocol frozen
   PYTHONPATH=src python -m repro.launch.sweep --grid paper \\
       --circuits a c --t-intg 1 10 100 1000 --mismatch 0.02 0.06
 
@@ -59,14 +63,17 @@ def run_codesign_grid(args) -> int:
                   f"window ({model.coarse_window_ms:g} ms)", file=sys.stderr)
             return 2
 
+    protocols = engine.resolve_protocols(args.protocol)
+
     t0 = time.time()
-    result = engine.run_grid(data, model, sweep_cfg, grid)
+    results = engine.run_protocols(data, model, sweep_cfg, grid,
+                                   protocols=protocols)
     wall_s = time.time() - t0
 
     out = Path(args.out)
     out.mkdir(parents=True, exist_ok=True)
     path = out / f"codesign_grid_{args.grid}.json"
-    artifact = result.to_artifact(extra_meta={
+    artifact = engine.protocols_artifact(results, extra_meta={
         "wall_s": wall_s,
         "data": {"name": data.name, "hw": data.height,
                  "duration_ms": data.duration_ms},
@@ -77,15 +84,18 @@ def run_codesign_grid(args) -> int:
     })
     path.write_text(json.dumps(artifact, indent=2, default=float))
 
-    print(f"\n=== co-design grid sweep ({len(result.labels)} circuit cfgs "
-          f"× {len(grid.t_intg_grid_ms)} T_INTG, {wall_s:.0f}s) ===")
-    print(f"{'config':>10} {'T_INTG':>8} {'acc':>6} {'bw':>7} "
-          f"{'energy':>8} {'ret_mV':>8}")
-    for r in result.records:
-        print(f"{r['label']:>10} {r['t_intg_ms']:6.0f}ms "
-              f"{r['accuracy']:6.3f} {r['bandwidth_norm']:6.2f}x "
-              f"{r['energy_improvement']:7.2f}x "
-              f"{r['retention_err_v'] * 1e3:8.2f}")
+    first = next(iter(results.values()))
+    print(f"\n=== co-design grid sweep ({len(first.labels)} circuit cfgs "
+          f"× {len(grid.t_intg_grid_ms)} T_INTG × "
+          f"{'/'.join(protocols)}, {wall_s:.0f}s) ===")
+    print(f"{'protocol':>9} {'config':>10} {'T_INTG':>8} {'acc':>6} "
+          f"{'bw':>7} {'energy':>8} {'ret_mV':>8}")
+    for proto, result in results.items():
+        for r in result.records:
+            print(f"{proto:>9} {r['label']:>10} {r['t_intg_ms']:6.0f}ms "
+                  f"{r['accuracy']:6.3f} {r['bandwidth_norm']:6.2f}x "
+                  f"{r['energy_improvement']:7.2f}x "
+                  f"{r['retention_err_v'] * 1e3:8.2f}")
     print(f"artifact: {path}")
     return 0
 
@@ -164,6 +174,11 @@ def main() -> int:
                     help="override T_INTG grid (ms)")
     ap.add_argument("--mismatch", type=float, nargs="+", default=None,
                     help="nullifier mismatch values for circuit (c)")
+    ap.add_argument("--protocol", type=str, default="both",
+                    choices=["frozen", "unfrozen", "both"],
+                    help="phase-2 finetune protocol(s): frozen layer 1 "
+                         "(paper §3), unfrozen joint layer-1+backbone "
+                         "training, or both off one shared pretrain")
     ap.add_argument("--hw", type=int, default=16,
                     help="synthetic stream resolution")
     # legacy dry-run options

@@ -89,6 +89,53 @@ class TestTrainingProtocol:
         np.testing.assert_array_equal(np.asarray(params["p2m"]["w"]), w0)
         assert not np.array_equal(np.asarray(params["backbone"]["fc1"]["w"]), b0)
 
+    def test_protocol_pair_frozen_static_unfrozen_moves(self):
+        """The batched engine's protocol pair on the SAME batch: the frozen
+        step returns layer 1 bitwise untouched; the unfrozen step
+        measurably moves every circuit config's own layer-1 copy, and the
+        copies diverge from each other (each config learns under its own
+        leak model)."""
+        from repro.core import p2m_layer
+        from repro.core import sweep as engine
+        from repro.optim import adamw
+        model, data, _ = _mini()
+        mcfg = replace(model, p2m=replace(model.p2m, mode="curvefit"))
+        leak_cfgs = engine.expand_leak_configs(engine.SweepGrid(),
+                                               mcfg.p2m.leak)
+        G = len(leak_cfgs)
+        key = jax.random.PRNGKey(0)
+        params, state = codesign.model_init(key, mcfg)
+        bb_s = engine._stack_tree(params["backbone"], G)
+        state_s = engine._stack_tree(state, G)
+        ev, labels = ev_mod.sample_batch(key, data, 2, mcfg.p2m.t_intg_ms,
+                                         n_sub=mcfg.p2m.n_sub)
+        opt = adamw(1e-2)
+
+        step_f = engine.make_batched_finetune_step(mcfg, leak_cfgs, opt,
+                                                   protocol="frozen")
+        p2m_out, bb_out, *_ = step_f(params["p2m"], bb_s,
+                                     jax.vmap(opt.init)(bb_s), state_s,
+                                     ev, labels)
+        np.testing.assert_array_equal(np.asarray(p2m_out["w"]),
+                                      np.asarray(params["p2m"]["w"]))
+        assert not np.array_equal(np.asarray(bb_out["fc1"]["w"]),
+                                  np.asarray(bb_s["fc1"]["w"]))
+
+        p2m_s = p2m_layer.stack_p2m_params(params["p2m"], G)
+        step_u = engine.make_batched_finetune_step(mcfg, leak_cfgs, opt,
+                                                   protocol="unfrozen")
+        opt_u = jax.vmap(opt.init)({"p2m": p2m_s, "backbone": bb_s})
+        p2m_s_out, *_ = step_u(p2m_s, bb_s, opt_u, state_s, ev, labels)
+        w_new = np.asarray(p2m_s_out["w"])
+        w_old = np.asarray(p2m_s["w"])
+        for g in range(G):
+            assert np.max(np.abs(w_new[g] - w_old[g])) > 1e-6, \
+                f"unfrozen step left config {leak_cfgs[g].circuit.value} " \
+                f"layer-1 static"
+        for g in range(1, G):
+            assert np.max(np.abs(w_new[g] - w_new[0])) > 1e-7, \
+                "configs did not diverge"
+
     def test_full_model_gradients_finite(self):
         model, data, _ = _mini()
         key = jax.random.PRNGKey(1)

@@ -36,6 +36,55 @@ def test_leak_semigroup_property(seed, dt1, dt2, circuit):
 
 
 @settings(max_examples=MAX_EXAMPLES, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       mismatch=st.floats(0.0, 0.5),
+       circuit=st.sampled_from(["a", "b", "c"]))
+def test_leak_params_finite_and_differentiable(seed, mismatch, circuit):
+    """The (differentiable) leak linearization must stay finite — values
+    AND gradients w.r.t. the kernel weights — for any weights and any
+    nullifier mismatch in [0, 0.5]. This is the seam the unfrozen phase-2
+    protocol trains through."""
+    from repro.core import leakage
+    from repro.core.leakage import CircuitConfig, LeakageConfig
+    cfg = LeakageConfig(circuit=CircuitConfig(circuit),
+                        null_mismatch=mismatch)
+    w = jax.random.normal(jax.random.PRNGKey(seed), (3, 3, 2, 4)) * 0.7
+    p = leakage.kernel_leak_params(w, cfg)
+    assert np.isfinite(np.asarray(p.v_inf)).all()
+    assert np.isfinite(np.asarray(p.tau_ms)).all()
+    assert (np.asarray(p.tau_ms) > 0).all()
+
+    def f(w):
+        lk = leakage.kernel_leak_params(w, cfg)
+        # exp(-1/tau) keeps the readout finite for any tau in (0, inf]
+        return jnp.sum(lk.v_inf) + jnp.sum(
+            jnp.exp(-1.0 / jnp.maximum(lk.tau_ms, 1e-9)))
+
+    g = jax.grad(f)(w)
+    assert np.isfinite(np.asarray(g)).all()
+
+
+@settings(max_examples=MAX_EXAMPLES, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       mismatch=st.floats(0.0, 0.5),
+       circuit=st.sampled_from(["a", "b", "c"]),
+       ts=st.lists(st.floats(0.01, 2000.0), min_size=3, max_size=6))
+def test_retention_error_monotone_in_t(seed, mismatch, circuit, ts):
+    """|V(t) − V(0)| with no drive is non-decreasing in t for every
+    circuit and mismatch — the Fig 4a surface can only get worse with a
+    longer integration time."""
+    from repro.core import leakage
+    from repro.core.leakage import CircuitConfig, LeakageConfig
+    cfg = LeakageConfig(circuit=CircuitConfig(circuit),
+                        null_mismatch=mismatch)
+    w = jax.random.normal(jax.random.PRNGKey(seed), (3, 3, 2, 4))
+    p = leakage.kernel_leak_params(w, cfg)
+    errs = [float(jnp.mean(leakage.retention_error(p, 0.2, t)))
+            for t in sorted(ts)]
+    assert all(b >= a - 1e-9 for a, b in zip(errs, errs[1:])), errs
+
+
+@settings(max_examples=MAX_EXAMPLES, deadline=None)
 @given(seed=st.integers(0, 2**31 - 1), dt=st.floats(0.01, 1000.0))
 def test_leak_contraction_toward_vinf(seed, dt):
     """|V(t) − V_inf| never grows — the ODE is a contraction."""
