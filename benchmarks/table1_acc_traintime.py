@@ -38,11 +38,18 @@ def _data(kind: str, hw: int):
 
 
 def run(fast: bool = False,
-        protocols: tuple[str, ...] = ("frozen",)) -> dict:
+        protocols: tuple[str, ...] = ("frozen",),
+        devices: int | None = None) -> dict:
     """``protocols`` extends the table across phase-2 protocols (shared
     pretrain per dataset). The default stays the paper's frozen protocol
     so the benchmark series remains comparable; pass
-    ``("frozen", "unfrozen")`` to add the joint layer-1+backbone rows."""
+    ``("frozen", "unfrozen")`` to add the joint layer-1+backbone rows.
+    ``devices`` shards the stacked variant axis over a cfg mesh
+    (core/sweep_exec.py) — records are identical, only the wall-clock
+    `table1/*` timing series moves, which is exactly what a mesh-scaling
+    bench wants to read."""
+    from repro.core.sweep_exec import make_executor
+
     sweep = SweepConfig(
         batch_size=4,
         pretrain_steps=30 if not fast else 4,
@@ -52,12 +59,14 @@ def run(fast: bool = False,
     grid = engine.SweepGrid(circuits=(CircuitConfig.NULLIFIED,),
                             t_intg_grid_ms=GRID if not fast
                             else (10.0, 1000.0))
+    executor = make_executor(devices)
     out = {}
     for kind in ("gesture", "nmnist"):
         hw = 24 if kind == "gesture" else 20
         results = engine.run_protocols(
             _data(kind, hw), _model(hw, 11 if kind == "gesture" else 10),
-            sweep, grid, protocols=protocols, log=lambda *_: None)
+            sweep, grid, protocols=protocols, log=lambda *_: None,
+            executor=executor)
         out[kind] = engine.protocols_artifact(results)
         for proto, result in results.items():
             # frozen keys stay protocol-less so the metric series is

@@ -3,20 +3,26 @@ batched sweep engine: one in-process run covers every circuit config at
 every T_INTG and prints the trade-off table per config.
 
     PYTHONPATH=src python examples/codesign_sweep.py [--fast] [--circuit c] \\
-        [--protocol frozen|unfrozen|both]
+        [--protocol frozen|unfrozen|both] [--axes sigma v-threshold] \\
+        [--devices N]
 
 ``--circuit all`` (default) sweeps configs (a), (b) and (c) in one batched
-compile per T_INTG — the engine stacks the circuit axis through the leak
-model, the P²M layer, and a vmapped finetune. ``--protocol both`` runs the
-paper's frozen phase 2 AND the unfrozen variant (each config learns its
-own layer-1 weights) off one shared pretrain, so the tables compare the
-co-design optimum across protocols.
+compile per T_INTG — the engine stacks the variant axis through the leak
+model, the P²M layer, and the batched finetune. ``--axes`` widens the grid
+with any registered variant axis (core/variant_grid.py) at its default
+value grid; ``--devices N`` shards the stacked axis over a device mesh
+(on CPU: XLA_FLAGS=--xla_force_host_platform_device_count=N).
+``--protocol both`` runs the paper's frozen phase 2 AND the unfrozen
+variant (each config learns its own layer-1 weights) off one shared
+pretrain, so the tables compare the co-design optimum across protocols.
 """
 import argparse
 from dataclasses import replace
 
 from repro.core import sweep as engine
+from repro.core import variant_grid
 from repro.core.leakage import CircuitConfig
+from repro.core.sweep_exec import make_executor
 
 
 def main():
@@ -26,6 +32,12 @@ def main():
                     choices=["a", "b", "c", "all"])
     ap.add_argument("--protocol", type=str, default="frozen",
                     choices=["frozen", "unfrozen", "both"])
+    ap.add_argument("--axes", type=str, nargs="+", default=None,
+                    choices=[a.cli for a in variant_grid.AXES],
+                    help="widen the grid with registry axes at their "
+                         "default value grids")
+    ap.add_argument("--devices", type=int, default=None,
+                    help="shard the stacked variant axis over N devices")
     ap.add_argument("--hw", type=int, default=16)
     args = ap.parse_args()
 
@@ -33,13 +45,22 @@ def main():
                                                       hw=args.hw)
     if args.circuit != "all":
         grid = replace(grid, circuits=(CircuitConfig(args.circuit),))
+    for name in args.axes or []:
+        ax = variant_grid.axis(name)
+        grid = replace(grid, **{ax.name: ax.cli_defaults})
     results = engine.run_protocols(
         data, model, sweep_cfg, grid,
-        protocols=engine.resolve_protocols(args.protocol))
+        protocols=engine.resolve_protocols(args.protocol),
+        executor=make_executor(args.devices))
     for proto, result in results.items():
-        for lab in result.labels:
-            recs = [r for r in result.records if r["label"] == lab]
-            print(f"\n=== co-design sweep, circuit config ({lab}), "
+        # one table per (label, n_sub) series — the normalization unit
+        series = sorted({(r["label"], r["n_sub"]) for r in result.records})
+        multi_nsub = len({ns for _, ns in series}) > 1
+        for lab, ns in series:
+            recs = [r for r in result.records
+                    if r["label"] == lab and r["n_sub"] == ns]
+            tag = f", n_sub={ns}" if multi_nsub else ""
+            print(f"\n=== co-design sweep, circuit config ({lab}){tag}, "
                   f"{proto} phase 2 ===")
             print(f"{'T_INTG':>8} {'accuracy':>9} {'train_time':>11} "
                   f"{'bandwidth':>10} {'energy_impr':>12} {'retention':>10}")

@@ -16,14 +16,13 @@ with the backbone through the differentiable curvefit forward — see
 from __future__ import annotations
 
 from dataclasses import dataclass, field, replace
-from functools import partial
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import p2m_layer, snn
-from repro.core.leakage import CircuitConfig, LeakageConfig
+from repro.core.leakage import CircuitConfig
 from repro.core.p2m_layer import P2MConfig
 from repro.core.snn import SpikingCNNConfig
 from repro.data import events as events_mod
@@ -130,6 +129,10 @@ class SweepConfig:
     finetune_steps: int = 15
     eval_batches: int = 4
     lr: float = 2e-3
+    # layer-1 LR for the unfrozen joint update (sweep.joint_optimizer):
+    # the in-pixel kernel usually wants a gentler step than the backbone.
+    # None → use ``lr`` (exactly the single-optimizer joint update).
+    lr_p2m: float | None = None
     seed: int = 0
 
 
@@ -138,7 +141,8 @@ def run_sweep(data_cfg: events_mod.EventStreamConfig,
               sweep: SweepConfig,
               circuit: CircuitConfig = CircuitConfig.NULLIFIED,
               log: Any = print,
-              protocol: str = "frozen") -> list[dict]:
+              protocol: str = "frozen",
+              devices: int | None = None) -> list[dict]:
     """Run the co-design T_INTG sweep for ONE circuit config. Returns one
     record per grid point with accuracy, wall-clock train time, bandwidth
     ratio, and backend energies.
@@ -155,8 +159,14 @@ def run_sweep(data_cfg: events_mod.EventStreamConfig,
     is computed against a SINGLE conventional reference (the digital
     backend always integrates at the accuracy-optimal long T — paper Fig 2
     right: the P²M advantage grows with T_INTG).
+
+    ``devices`` shards the stacked config axis over a 1-D device mesh
+    (core/sweep_exec.py) — with a single circuit the axis has length 1, so
+    this only matters when the caller expands mismatch/threshold/sigma
+    variants through the model config.
     """
     from repro.core import sweep as sweep_engine
+    from repro.core.sweep_exec import make_executor
 
     mcfg = replace(model_cfg,
                    p2m=replace(model_cfg.p2m,
@@ -167,5 +177,6 @@ def run_sweep(data_cfg: events_mod.EventStreamConfig,
         t_intg_grid_ms=tuple(sweep.t_intg_grid_ms),
         null_mismatch=(mcfg.p2m.leak.null_mismatch,))
     result = sweep_engine.run_grid(data_cfg, mcfg, sweep, grid, log=log,
-                                   protocol=protocol)
+                                   protocol=protocol,
+                                   executor=make_executor(devices))
     return result.records

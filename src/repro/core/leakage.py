@@ -26,11 +26,19 @@ visibly at 1–10 ms, (c) holds at 10 ms and degrades by 100 ms.
 from __future__ import annotations
 
 import enum
+import functools
 from dataclasses import dataclass, replace
 from typing import Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+# default comparator threshold on the swing (V) — the single source for
+# P2MConfig.v_threshold and per-variant overrides (LeakageConfig.v_threshold)
+DEFAULT_V_THRESHOLD = 0.015
+# seed of the frozen per-filter process-variation draw behind the sigma axis
+_TAU_SIGMA_SEED = 0x5159
 
 
 class CircuitConfig(enum.Enum):
@@ -55,6 +63,14 @@ class LeakageConfig:
     # config (c): nullifier cancels (b)-style leak up to mismatch
     null_mismatch: float = 0.06     # 6% residual current mismatch
     w_eps: float = 1e-3
+    # --- sweepable variant axes (core/variant_grid.py) -------------------
+    # comparator threshold override for THIS variant; None falls back to
+    # the model-level P2MConfig.v_threshold (the pre-variant-grid behavior)
+    v_threshold: float | None = None
+    # process-variation sigma on the leak time constants: each filter's tau
+    # is scaled by exp(sigma * z_f) with a frozen per-filter draw z_f —
+    # sigma = 0 reproduces the unperturbed linearization exactly
+    sigma: float = 0.0
 
 
 @dataclass(frozen=True)
@@ -92,16 +108,27 @@ class LeakCoeffs:
     w_eps: jax.Array
     tau_const: jax.Array     # tau for the weight-independent circuits
     v_inf_const: jax.Array   # v_inf for the weight-independent circuits
+    v_threshold: jax.Array   # comparator threshold of THIS variant (V)
+    sigma: jax.Array         # process-variation sigma on the leak taus
 
 
 jax.tree_util.register_dataclass(
     LeakCoeffs,
     data_fields=["is_basic", "vdd", "v_precharge", "tau0_a_ms", "w_eps",
-                 "tau_const", "v_inf_const"],
+                 "tau_const", "v_inf_const", "v_threshold", "sigma"],
     meta_fields=[])
 
 
-def leak_coeffs(cfg: LeakageConfig) -> LeakCoeffs:
+def resolve_v_threshold(cfg: LeakageConfig,
+                        default: float = DEFAULT_V_THRESHOLD) -> float:
+    """Per-variant comparator threshold: the LeakageConfig override when
+    set, else the model-level default (P2MConfig.v_threshold)."""
+    return default if cfg.v_threshold is None else cfg.v_threshold
+
+
+def leak_coeffs(cfg: LeakageConfig,
+                default_v_threshold: float = DEFAULT_V_THRESHOLD
+                ) -> LeakCoeffs:
     """Fold one config's circuit branch into numeric coefficients."""
     if cfg.circuit == CircuitConfig.BASIC:
         is_basic, tau_const, v_inf_const = 1.0, jnp.inf, 0.0
@@ -121,13 +148,30 @@ def leak_coeffs(cfg: LeakageConfig) -> LeakCoeffs:
     return LeakCoeffs(is_basic=f32(is_basic), vdd=f32(cfg.vdd),
                       v_precharge=f32(cfg.v_precharge),
                       tau0_a_ms=f32(cfg.tau0_a_ms), w_eps=f32(cfg.w_eps),
-                      tau_const=f32(tau_const), v_inf_const=f32(v_inf_const))
+                      tau_const=f32(tau_const), v_inf_const=f32(v_inf_const),
+                      v_threshold=f32(resolve_v_threshold(
+                          cfg, default_v_threshold)),
+                      sigma=f32(cfg.sigma))
 
 
-def stacked_leak_coeffs(cfgs: Sequence[LeakageConfig]) -> LeakCoeffs:
+def stacked_leak_coeffs(cfgs: Sequence[LeakageConfig],
+                        default_v_threshold: float = DEFAULT_V_THRESHOLD
+                        ) -> LeakCoeffs:
     """Coefficients for several configs, stacked on a leading [n_cfg] axis."""
-    per = [leak_coeffs(c) for c in cfgs]
+    per = [leak_coeffs(c, default_v_threshold) for c in cfgs]
     return jax.tree.map(lambda *xs: jnp.stack(xs), *per)
+
+
+@functools.lru_cache(maxsize=None)
+def _tau_sigma_units(n_filters: int) -> np.ndarray:
+    """Frozen per-filter standard-normal draw behind the process-variation
+    sigma axis. A fixed seed keeps every variant (and every grid run)
+    perturbing the same "die": sigma scales a shared variation pattern, so
+    sigma = 0 is exactly the unperturbed circuit and two variants differing
+    only in sigma see proportional tau shifts. Drawn with numpy (not
+    jax.random) so the constant is safe to build inside a jit trace."""
+    z = np.random.default_rng(_TAU_SIGMA_SEED).standard_normal(n_filters)
+    return np.asarray(z, np.float32)
 
 
 def leak_params_from_coeffs(w: jax.Array, co: LeakCoeffs) -> LeakParams:
@@ -137,6 +181,9 @@ def leak_params_from_coeffs(w: jax.Array, co: LeakCoeffs) -> LeakParams:
     Differentiable w.r.t. ``w`` (config (a)'s v_inf/tau depend on the
     kernel; the other circuits contribute zero weight gradient through the
     ``where`` selects) and vmap-able over a stacked config axis of ``co``.
+    Process variation (``co.sigma``) scales each filter's tau by
+    ``exp(sigma * z_f)`` with the frozen draw from :func:`_tau_sigma_units`
+    — log-normal tau spread, exact identity at sigma = 0.
     """
     reduce_axes = tuple(range(w.ndim - 1))
     pos = jnp.sum(jnp.maximum(w, 0.0), axis=reduce_axes)
@@ -149,6 +196,7 @@ def leak_params_from_coeffs(w: jax.Array, co: LeakCoeffs) -> LeakParams:
     tau_basic = co.tau0_a_ms / jnp.maximum(mean_abs, co.w_eps)
     v_inf = jnp.where(basic, v_inf_basic, co.v_inf_const)
     tau = jnp.where(basic, tau_basic, co.tau_const)
+    tau = tau * jnp.exp(co.sigma * _tau_sigma_units(w.shape[-1]))
     return LeakParams(v_inf=v_inf, tau_ms=tau)
 
 

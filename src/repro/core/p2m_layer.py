@@ -27,7 +27,6 @@ time ... from the second layer").
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -35,7 +34,7 @@ from jax import lax
 
 from repro.core import analog, leakage
 from repro.core.analog import AnalogConfig
-from repro.core.leakage import CircuitConfig, LeakageConfig
+from repro.core.leakage import LeakageConfig
 from repro.core.snn import spike_fn
 
 Params = dict
@@ -52,8 +51,10 @@ class P2MConfig:
     # comparator threshold on the swing (V). ~1.5 weighted events at
     # dv_unit=10mV: low enough that sub-10ms windows re-fire during event
     # bursts — the mechanism behind the paper's Fig-2 bandwidth trend
-    # (output spikes increase as T_INTG shrinks).
-    v_threshold: float = 0.015
+    # (output spikes increase as T_INTG shrinks). This is the model-level
+    # DEFAULT: a sweep variant overrides it per config via
+    # LeakageConfig.v_threshold (the stacked v_threshold axis).
+    v_threshold: float = leakage.DEFAULT_V_THRESHOLD
     analog: AnalogConfig = field(default_factory=AnalogConfig)
     leak: LeakageConfig = field(default_factory=LeakageConfig)
     mode: str = "curvefit"           # "curvefit" | "scan" | "kernel"
@@ -82,6 +83,20 @@ def _conv(x: jax.Array, w: jax.Array, stride: int) -> jax.Array:
 def effective_weights(params: Params, cfg: P2MConfig) -> jax.Array:
     """Quantized (transistor-geometry) weights, straight-through grads."""
     return analog.quantize_weights(params["w"], cfg.analog)
+
+
+def stacked_thetas(cfg: P2MConfig, leak_cfgs: tuple[LeakageConfig, ...],
+                   ndim: int) -> jax.Array:
+    """Per-variant comparator thresholds, shaped [n_cfg, 1, ..., 1] to
+    broadcast against an ``ndim``-dimensional stacked voltage tensor.
+
+    The threshold lives on the VARIANT axis now (the v_threshold sweep
+    axis): each LeakageConfig may override the model-level
+    ``cfg.v_threshold`` default.
+    """
+    th = jnp.asarray([leakage.resolve_v_threshold(lc, cfg.v_threshold)
+                      for lc in leak_cfgs], jnp.float32)
+    return th.reshape((len(leak_cfgs),) + (1,) * (ndim - 1))
 
 
 def _forward_scan_lk(params: Params, events: jax.Array, cfg: P2MConfig,
@@ -130,7 +145,8 @@ def p2m_forward_scan(params: Params, events: jax.Array, cfg: P2MConfig
     w_q = effective_weights(params, cfg)
     lk = leakage.kernel_leak_params(w_q, cfg.leak)
     v_pre = _forward_scan_lk(params, events, cfg, w_q, lk)
-    spikes = spike_fn(v_pre - cfg.v_threshold)
+    theta = leakage.resolve_v_threshold(cfg.leak, cfg.v_threshold)
+    spikes = spike_fn(v_pre - theta)
     return spikes, v_pre
 
 
@@ -148,8 +164,44 @@ def p2m_forward_scan_stacked(params: Params, events: jax.Array,
     lk = leakage.stacked_leak_params(w_q, leak_cfgs)      # [n_cfg, F]
     v_pre = jax.vmap(
         lambda l: _forward_scan_lk(params, events, cfg, w_q, l))(lk)
-    spikes = spike_fn(v_pre - cfg.v_threshold)
+    spikes = spike_fn(v_pre - stacked_thetas(cfg, leak_cfgs, v_pre.ndim))
     return spikes, v_pre
+
+
+def curvefit_ideal(events: jax.Array, cfg: P2MConfig, w_q: jax.Array
+                   ) -> jax.Array:
+    """The curve-fit model's per-sub-slot ideal conv — the expensive,
+    VARIANT-INDEPENDENT half of the forward.
+
+    events [B, T_out, n_sub, H, W, C_in] → ideal [B·T_out, n_sub, H', W',
+    C_out]. Split out so the sweep engine's frozen protocol can compute it
+    ONCE per step and reduce it per variant with
+    :func:`curvefit_reduce` (each variant only changes the [n_sub, C_out]
+    decay weights and the transfer-curve inputs).
+    """
+    B, T_out, n_sub = events.shape[:3]
+    tb = events.reshape((B * T_out * n_sub,) + events.shape[3:])
+    ideal = _conv(tb, w_q, cfg.stride) * cfg.analog.dv_unit
+    return ideal.reshape((B * T_out, n_sub) + ideal.shape[1:])
+
+
+def curvefit_reduce(params: Params, cfg: P2MConfig, ideal: jax.Array,
+                    lk: leakage.LeakParams, batch: int) -> jax.Array:
+    """The cheap, per-variant half of the curve-fit forward: leak-decay
+    weighting of the precomputed ideal conv + the fitted transfer curve.
+
+    ``ideal`` is :func:`curvefit_ideal`'s output; ``lk`` fields are
+    per-filter ``[C_out]``. Returns v_pre [B, T_out, H', W', C_out].
+    """
+    n_sub = ideal.shape[1]
+    a = leakage.decay_factor(lk.tau_ms, cfg.dt_ms)             # [C_out]
+    k = jnp.arange(n_sub)
+    decay_w = a[None, :] ** (n_sub - 1 - k)[:, None]           # [n_sub, C]
+    drift = jnp.sum(1.0 - decay_w, axis=0) * lk.v_inf / n_sub  # [C]
+    x = jnp.einsum("bk...c,kc->b...c", ideal, decay_w) + drift
+    pv = {"gain": params["pv_gain"], "offset": params["pv_offset"]}
+    v_pre = analog.transfer_curve(x, cfg.analog, pv)
+    return v_pre.reshape((batch, ideal.shape[0] // batch) + v_pre.shape[1:])
 
 
 def _curvefit_from_lk(params: Params, events: jax.Array, cfg: P2MConfig,
@@ -160,19 +212,8 @@ def _curvefit_from_lk(params: Params, events: jax.Array, cfg: P2MConfig,
     [B, T_out, H', W', C_out]. Fully differentiable w.r.t. ``w_q`` and the
     leak params — the seam the unfrozen phase-2 protocol trains through.
     """
-    B, T_out, n_sub = events.shape[:3]
-    a = leakage.decay_factor(lk.tau_ms, cfg.dt_ms)             # [C_out]
-    k = jnp.arange(n_sub)
-    decay_w = a[None, :] ** (n_sub - 1 - k)[:, None]           # [n_sub, C]
-    drift = jnp.sum(1.0 - decay_w, axis=0) * lk.v_inf / n_sub  # [C]
-
-    tb = events.reshape((B * T_out * n_sub,) + events.shape[3:])
-    ideal = _conv(tb, w_q, cfg.stride) * cfg.analog.dv_unit
-    ideal = ideal.reshape((B * T_out, n_sub) + ideal.shape[1:])
-    x = jnp.einsum("bk...c,kc->b...c", ideal, decay_w) + drift
-    pv = {"gain": params["pv_gain"], "offset": params["pv_offset"]}
-    v_pre = analog.transfer_curve(x, cfg.analog, pv)
-    return v_pre.reshape((B, T_out) + v_pre.shape[1:])
+    ideal = curvefit_ideal(events, cfg, w_q)
+    return curvefit_reduce(params, cfg, ideal, lk, events.shape[0])
 
 
 def p2m_forward_curvefit_coeffs(params: Params, events: jax.Array,
@@ -190,7 +231,7 @@ def p2m_forward_curvefit_coeffs(params: Params, events: jax.Array,
     w_q = effective_weights(params, cfg)
     lk = leakage.leak_params_from_coeffs(w_q, coeffs)
     v_pre = _curvefit_from_lk(params, events, cfg, w_q, lk)
-    spikes = spike_fn(v_pre - cfg.v_threshold)
+    spikes = spike_fn(v_pre - coeffs.v_threshold)
     return spikes, v_pre
 
 
@@ -208,7 +249,7 @@ def p2m_forward_curvefit_grouped(params_s: Params, events: jax.Array,
     through the spike nonlinearity, straight-through through the weight
     quantizer).
     """
-    coeffs = leakage.stacked_leak_coeffs(leak_cfgs)
+    coeffs = leakage.stacked_leak_coeffs(leak_cfgs, cfg.v_threshold)
     return jax.vmap(
         lambda p, co: p2m_forward_curvefit_coeffs(p, events, cfg, co)
     )(params_s, coeffs)
@@ -253,7 +294,7 @@ def p2m_forward_curvefit_stacked(params: Params, events: jax.Array,
     lk = leakage.stacked_leak_params(w_q, leak_cfgs)          # [n_cfg, C_out]
     v_pre = jax.vmap(
         lambda l: _curvefit_from_lk(params, events, cfg, w_q, l))(lk)
-    spikes = spike_fn(v_pre - cfg.v_threshold)
+    spikes = spike_fn(v_pre - stacked_thetas(cfg, leak_cfgs, v_pre.ndim))
     return spikes, v_pre
 
 

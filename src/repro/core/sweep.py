@@ -4,39 +4,53 @@ The paper's central contribution is the trade-off analysis across the three
 analog MAC circuit configs (basic / isolation-switch / nullified) and the
 integration time T_INTG. This module evaluates the FULL grid
 
-    CircuitConfig × T_INTG × null_mismatch
+    circuit-variant × T_INTG (× n_sub)
 
-in ONE process: the circuit/mismatch axis is vectorized — a stacked leading
-config axis runs through the leak linearization (leakage.stacked_leak_params),
-the P²M forward paths (p2m_layer.p2m_apply_stacked / the multi-config Pallas
-kernel grid), and a vmapped backbone finetune+eval — so each T_INTG point is
-one jitted compile covering every circuit config, instead of the historical
-one-subprocess-per-cell sweep. T_INTG remains a python loop because it
-changes tensor shapes (T_out = duration / T_INTG).
+in ONE process. The variant axis is *generalized* (core/variant_grid.py):
+a declarative axis registry expands any combination of ``circuit``,
+``null_mismatch``, ``v_threshold`` and process-variation ``sigma`` into a
+flat stacked variant list — a stacked leading config axis runs through the
+leak linearization (leakage.LeakCoeffs carries the per-variant threshold
+and sigma legs), the P²M forward paths, and the batched backbone
+finetune+eval — so each outer cell is one jitted compile covering every
+variant. Inside the jit the variant axis runs under ``lax.map`` (see
+:func:`_map_cfgs`: a width-invariant per-variant program is what makes
+sharded runs bit-identical). T_INTG and ``n_sub`` change tensor shapes,
+so they stay in the outer python loop.
+
+The stacked axis is also *mesh-shardable* (core/sweep_exec.py): pass a
+``SweepExecutor(devices=n)`` and the jitted finetune/eval steps run under
+``shard_map`` over a 1-D ``"cfg"`` mesh — one variant-shard per device,
+``n_cfg`` padded up to the device count and unpadded when the records are
+read back, record-for-record identical to the single-device run.
 
 Protocol per grid point (mirrors codesign.py, paper §3):
   phase 1  pretrain the whole net once at the longest T_INTG, no circuit
            constraints (shared across ALL grid points);
-  phase 2  per T_INTG: constrain layer 1 under every circuit config at once,
-           finetune in parallel via vmap, then batch-evaluate accuracy /
-           bandwidth / energy; retention-error surfaces come from the
-           closed-form leak ODE.
+  phase 2  per outer cell: constrain layer 1 under every variant at once,
+           finetune the stacked variant axis in one jitted step (sharded
+           over the mesh), then batch-evaluate accuracy / bandwidth /
+           energy; retention-error surfaces come from the closed-form
+           leak ODE.
 
 Phase 2 comes in TWO protocols:
 
   ``protocol="frozen"``    the paper's protocol — layer 1 is frozen, only
-                           the n_cfg backbones train (vmapped);
-  ``protocol="unfrozen"``  each circuit config additionally learns its OWN
+                           the n_cfg backbones train (mapped per variant);
+  ``protocol="unfrozen"``  each variant additionally learns its OWN
                            layer-1 weights: the layer-1 params gain a
                            stacked [n_cfg] axis and the jitted step
                            differentiates through the curvefit forward
                            (surrogate spike gradient, straight-through
-                           quantizer), re-linearizing each config's leak
-                           from its current weights every step.
+                           quantizer), re-linearizing each variant's leak
+                           from its current weights every step. Layer 1
+                           may train at its own LR (SweepConfig.lr_p2m)
+                           via :func:`joint_optimizer`.
 
 ``run_protocols`` runs both off one shared pretrain and
-``protocols_artifact`` merges them into one ``p2m-codesign-sweep/v2``
-artifact so the co-design optimum can be compared across protocols.
+``protocols_artifact`` merges them into one ``p2m-codesign-sweep/v3``
+artifact (per-record ``"variant"`` dict, see docs/sweep.md) so the
+co-design optimum can be compared across protocols.
 ``codesign.run_sweep`` is a thin single-circuit wrapper over this engine.
 """
 from __future__ import annotations
@@ -52,16 +66,18 @@ from jax import lax
 
 from repro.core import analog as analog_mod
 from repro.core import energy as energy_mod
-from repro.core import leakage, p2m_layer, snn
+from repro.core import leakage, p2m_layer, snn, variant_grid
 from repro.core.leakage import CircuitConfig, LeakageConfig
+from repro.core.sweep_exec import P_CFG, P_REP, SweepExecutor
 from repro.data import events as events_mod
 from repro.optim import adamw, clip_by_global_norm
-from repro.optim.optimizers import apply_updates
+from repro.optim.optimizers import Optimizer, apply_updates
 
 Params = dict
 
 SCHEMA = "p2m-codesign-sweep/v1"
 SCHEMA_V2 = "p2m-codesign-sweep/v2"
+SCHEMA_V3 = "p2m-codesign-sweep/v3"
 PROTOCOLS = ("frozen", "unfrozen")
 RETENTION_V0 = 0.2     # probe swing (V) for the Fig 4a retention surfaces
 
@@ -83,13 +99,23 @@ def _check_protocol(protocol: str) -> None:
 
 @dataclass(frozen=True)
 class SweepGrid:
-    """The co-design grid. ``null_mismatch`` expands only the NULLIFIED
-    circuit (configs (a)/(b) have no nullifier, so mismatch variants would
-    be duplicates)."""
+    """The co-design grid: circuits × every registered variant axis.
+
+    Each axis field holds the value tuple to sweep; an EMPTY tuple means
+    the axis is not swept (variants keep the base config's value). Axis
+    semantics live in the registry (core/variant_grid.py): ``null_mismatch``
+    expands only the NULLIFIED circuit (configs (a)/(b) have no nullifier,
+    so mismatch variants would be duplicates); ``v_threshold``/``sigma``
+    expand every circuit; ``n_sub`` is shape-changing and joins T_INTG in
+    the outer python loop instead of the stacked axis.
+    """
     circuits: tuple[CircuitConfig, ...] = (
         CircuitConfig.BASIC, CircuitConfig.SWITCH, CircuitConfig.NULLIFIED)
     t_intg_grid_ms: tuple[float, ...] = (1.0, 10.0, 100.0, 1000.0)
     null_mismatch: tuple[float, ...] = (0.06,)
+    v_threshold: tuple[float, ...] = ()
+    sigma: tuple[float, ...] = ()
+    n_sub: tuple[int, ...] = ()
 
 
 def paper_grid() -> SweepGrid:
@@ -103,21 +129,13 @@ def fast_grid() -> SweepGrid:
 
 def expand_leak_configs(grid: SweepGrid, base: LeakageConfig
                         ) -> tuple[LeakageConfig, ...]:
-    """Flatten (circuits × mismatch) into the stacked config axis."""
-    out = []
-    for c in grid.circuits:
-        if c == CircuitConfig.NULLIFIED:
-            for m in grid.null_mismatch:
-                out.append(replace(base, circuit=c, null_mismatch=m))
-        else:
-            out.append(replace(base, circuit=c))
-    return tuple(out)
+    """Flatten (circuits × active stacked axes) into the stacked config
+    axis — registry-driven, see :func:`variant_grid.expand_variants`."""
+    return variant_grid.expand_variants(grid, base)
 
 
 def config_label(lc: LeakageConfig) -> str:
-    if lc.circuit == CircuitConfig.NULLIFIED:
-        return f"{lc.circuit.value}@m={lc.null_mismatch:g}"
-    return lc.circuit.value
+    return variant_grid.variant_label(lc)
 
 
 # ---------------------------------------------------------------------------
@@ -128,6 +146,22 @@ def config_label(lc: LeakageConfig) -> str:
 _stack_tree = p2m_layer.stack_p2m_params
 
 
+def _map_cfgs(fn: Callable, *stacked):
+    """Run ``fn`` over the leading [n_cfg] axis of the stacked arguments
+    with ``lax.map`` (scan), not ``vmap``.
+
+    The per-variant program is then IDENTICAL at every execution width —
+    a single device mapping n_cfg variants and a mesh shard mapping
+    n_cfg/devices each run the same compiled body per variant, which is
+    what makes sharded and unsharded sweeps bit-for-bit identical (XLA
+    tiles width-batched conv gradients differently per width, so a vmapped
+    body would drift at ~1e-8/step between device counts). Cross-variant
+    parallelism comes from the cfg mesh; within a variant the batch/time/
+    spatial axes keep the hardware busy.
+    """
+    return lax.map(lambda args: fn(*args), stacked)
+
+
 def _layer1_coarse(p2m_params: Params, events: jax.Array, model_cfg,
                    leak_cfgs: tuple[LeakageConfig, ...]
                    ) -> tuple[jax.Array, dict]:
@@ -135,6 +169,12 @@ def _layer1_coarse(p2m_params: Params, events: jax.Array, model_cfg,
 
     events [B, T, n_sub, H, W, Cin] → coarse [n_cfg, B, Tc, H/2, W/2, F]
     plus the per-config spike statistics the energy model needs.
+
+    Mode-dispatching (scan/curvefit/kernel) stacked forward — the physics
+    validator path. The ENGINE's jitted steps use the coeffs-based
+    :func:`_layer1_coarse_one` under :func:`_map_cfgs` instead, which is
+    what lets the stacked axis shard over a device mesh (the per-variant numerics travel
+    as arrays, not as a python tuple baked into the trace).
     """
     cfg = model_cfg.p2m
     spikes, _ = p2m_layer.p2m_apply_stacked(p2m_params, events, cfg,
@@ -168,16 +208,25 @@ def _layer1_coarse_one(p2m_params: Params, events: jax.Array, model_cfg,
                        ) -> tuple[jax.Array, dict]:
     """Single-config differentiable P²M layer → pool → coarsen.
 
-    The circuit enters only through numeric ``coeffs``, so this function is
-    vmap-able over a stacked config axis AND differentiable w.r.t. the
-    layer-1 params — the leak linearization is recomputed from the current
-    (quantized) weights on every call. Per-config mirror of
-    :func:`_layer1_coarse`; the spike/MAC accounting matches it so both
-    protocols feed identical bandwidth/energy bookkeeping.
+    The variant enters only through numeric ``coeffs`` (leak linearization,
+    comparator threshold, process-variation sigma), so this function is
+    vmap-able over a stacked config axis, shard_map-able over the cfg mesh,
+    AND differentiable w.r.t. the layer-1 params — the leak linearization
+    is recomputed from the current (quantized) weights on every call.
+    Per-config mirror of :func:`_layer1_coarse`; the spike/MAC accounting
+    matches it so both protocols feed identical bandwidth/energy
+    bookkeeping.
     """
-    cfg = model_cfg.p2m
     spikes, _ = p2m_layer.p2m_forward_curvefit_coeffs(p2m_params, events,
-                                                      cfg, coeffs)
+                                                      model_cfg.p2m, coeffs)
+    return _pool_coarsen_l1(spikes, events, model_cfg)
+
+
+def _pool_coarsen_l1(spikes: jax.Array, events: jax.Array, model_cfg
+                     ) -> tuple[jax.Array, dict]:
+    """Shared tail of the single-config layer-1 paths: 2x pool, coarsen to
+    the backbone grid, and the spike/MAC bookkeeping contract."""
+    cfg = model_cfg.p2m
     B, T = spikes.shape[:2]
     tb = spikes.reshape((B * T,) + spikes.shape[2:])
     tb = snn.max_pool(tb)
@@ -194,17 +243,78 @@ def _layer1_coarse_one(p2m_params: Params, events: jax.Array, model_cfg,
     return coarse, l1
 
 
+def _layer1_coarse_frozen(p2m_params: Params, events: jax.Array, model_cfg,
+                          co_s: leakage.LeakCoeffs
+                          ) -> tuple[jax.Array, dict]:
+    """Frozen-protocol stacked layer 1: ideal conv ONCE, per-variant reduce.
+
+    With shared (frozen) layer-1 weights the expensive im2col conv of the
+    curvefit forward is variant-independent, so it is hoisted OUT of the
+    per-variant ``_map_cfgs`` loop — only the [n_sub, C_out] decay
+    reduction, transfer curve, comparator and pooling run per variant
+    (PR-1's "one conv + n_cfg cheap einsums" shape, now width-invariant
+    and mesh-shardable: the hoisted conv is replicated, identical on every
+    device). Returns (coarse [n_cfg, ...], l1 stats stacked [n_cfg]).
+    """
+    cfg = model_cfg.p2m
+    w_q = p2m_layer.effective_weights(p2m_params, cfg)
+    ideal = p2m_layer.curvefit_ideal(events, cfg, w_q)
+
+    def per_cfg(co):
+        lk = leakage.leak_params_from_coeffs(w_q, co)
+        v_pre = p2m_layer.curvefit_reduce(p2m_params, cfg, ideal, lk,
+                                          events.shape[0])
+        spikes = snn.spike_fn(v_pre - co.v_threshold)
+        return _pool_coarsen_l1(spikes, events, model_cfg)
+
+    return _map_cfgs(per_cfg, co_s)
+
+
 def _merge_grouped_l1(l1_s: dict) -> dict:
-    """vmapped per-config l1 stats → the frozen-path contract:
-    per-config spikes [G], config-independent events/MACs as scalars."""
+    """per-variant-mapped l1 stats → the engine contract: per-config
+    spikes [G], config-independent events/MACs as scalars."""
     return {"spikes/p2m": l1_s["spikes/p2m"],
             "events/in": l1_s["events/in"][0],
             "macs/p2m": l1_s["macs/p2m"][0]}
 
 
+def joint_optimizer(opt_backbone: Optimizer, opt_p2m: Optimizer) -> Optimizer:
+    """Per-group optimizer for the unfrozen joint update: the layer-1 leaf
+    group steps with ``opt_p2m`` (``SweepConfig.lr_p2m``), the backbone
+    group with ``opt_backbone``. With identical member optimizers the
+    update math matches a single optimizer over the joint tree leaf-for-
+    leaf (AdamW state is per-leaf; only the state *structure* changes), so
+    ``lr_p2m=None ≡ lr`` is a pure refactor of the PR-2 behavior."""
+    def init(params: Params) -> Params:
+        return {"p2m": opt_p2m.init(params["p2m"]),
+                "backbone": opt_backbone.init(params["backbone"])}
+
+    def update(grads, state, params):
+        up_p, st_p = opt_p2m.update(grads["p2m"], state["p2m"],
+                                    params["p2m"])
+        up_b, st_b = opt_backbone.update(grads["backbone"],
+                                         state["backbone"],
+                                         params["backbone"])
+        return ({"p2m": up_p, "backbone": up_b},
+                {"p2m": st_p, "backbone": st_b})
+
+    return Optimizer(init=init, update=update)
+
+
+def _check_curvefit(model_cfg, protocol: str) -> None:
+    if model_cfg.p2m.mode != "curvefit":
+        raise ValueError(
+            f"the batched {protocol} step trains through the curvefit "
+            f"forward (the coeffs-based path that vectorizes and shards "
+            f"over the variant axis); got p2m.mode={model_cfg.p2m.mode!r}. "
+            f"Use p2m_apply_stacked for scan/kernel physics validation.")
+
+
 def make_batched_finetune_step(model_cfg, leak_cfgs: tuple[LeakageConfig, ...],
-                               opt, protocol: str = "frozen") -> Callable:
-    """One jitted phase-2 step over all n_cfg circuit configs at once.
+                               opt, protocol: str = "frozen",
+                               executor: SweepExecutor | None = None
+                               ) -> Callable:
+    """One jitted phase-2 step over all n_cfg circuit variants at once.
 
     Unified signature for both protocols::
 
@@ -212,23 +322,35 @@ def make_batched_finetune_step(model_cfg, leak_cfgs: tuple[LeakageConfig, ...],
             p2m_ps, bb_params_s, opt_state_s, state_s, events, labels)
 
     ``protocol="frozen"`` (paper §3): ``p2m_ps`` is the SHARED layer-1
-    params, returned untouched — its stacked forward runs once outside the
-    gradient and only the backbones update (vmapped). ``opt_state_s`` is
+    params, returned untouched — its stacked forward runs outside the
+    gradient and only the backbones update (mapped per variant).
+    ``opt_state_s`` is
     the backbone-only optimizer state.
 
     ``protocol="unfrozen"``: ``p2m_ps`` carries a leading [n_cfg] axis and
-    the update is a JOINT vmapped step on ``{"p2m", "backbone"}`` — each
-    config differentiates through its own curvefit layer-1 forward
+    the update is a JOINT per-variant step on ``{"p2m", "backbone"}`` — each
+    variant differentiates through its own curvefit layer-1 forward
     (surrogate spike gradient, straight-through quantizer), re-linearizing
     its leak from the current weights inside the jitted step.
-    ``opt_state_s`` is the joint optimizer state.
+    ``opt_state_s`` is the joint optimizer state (``opt`` may be a
+    :func:`joint_optimizer` for a split layer-1 LR).
+
+    With a sharded ``executor`` the step body runs under ``shard_map``
+    over the 1-D cfg mesh: every stacked argument/output is partitioned on
+    its leading axis, events/labels (and the shared frozen layer-1 params)
+    are replicated. The caller must pass stacked trees padded to
+    ``executor.padded_size(n_cfg)`` lanes (see ``run_grid``); the variant
+    coefficients are padded here. The body is IDENTICAL with and without
+    sharding, which is what makes sharded and single-device sweeps
+    record-for-record comparable.
     """
     _check_protocol(protocol)
-    if protocol == "unfrozen" and model_cfg.p2m.mode != "curvefit":
-        raise ValueError(
-            f"unfrozen protocol requires p2m.mode='curvefit' (the "
-            f"differentiable forward), got {model_cfg.p2m.mode!r}")
+    _check_curvefit(model_cfg, protocol)
+    ex = executor or SweepExecutor()
     bb_cfg = model_cfg.backbone
+    coeffs_s = leakage.stacked_leak_coeffs(leak_cfgs,
+                                           model_cfg.p2m.v_threshold)
+    coeffs_s = ex.pad_stacked(coeffs_s, len(leak_cfgs))
 
     if protocol == "frozen":
         def bb_loss(bb_params, state, coarse, labels):
@@ -237,11 +359,10 @@ def make_batched_finetune_step(model_cfg, leak_cfgs: tuple[LeakageConfig, ...],
             loss = snn.cross_entropy(logits, labels)
             return loss, (new_state, aux, logits)
 
-        @jax.jit
-        def step(p2m_params, bb_params_s, opt_state_s, state_s, events,
-                 labels):
-            coarse_s, l1 = _layer1_coarse(p2m_params, events, model_cfg,
-                                          leak_cfgs)
+        def inner(co_s, p2m_params, bb_params_s, opt_state_s, state_s,
+                  events, labels):
+            coarse_s, l1_s = _layer1_coarse_frozen(p2m_params, events,
+                                                   model_cfg, co_s)
             coarse_s = lax.stop_gradient(coarse_s)
 
             def per_cfg(bb_p, o_s, st, coarse):
@@ -254,14 +375,25 @@ def make_batched_finetune_step(model_cfg, leak_cfgs: tuple[LeakageConfig, ...],
                            "acc": snn.accuracy(logits, labels)}
                 return bb_p, o_s, new_st, metrics
 
-            bb_params_s, opt_state_s, state_s, metrics = jax.vmap(per_cfg)(
-                bb_params_s, opt_state_s, state_s, coarse_s)
+            bb_params_s, opt_state_s, state_s, metrics = _map_cfgs(
+                per_cfg, bb_params_s, opt_state_s, state_s, coarse_s)
+            return bb_params_s, opt_state_s, state_s, metrics, l1_s
+
+        inner = ex.shard(
+            inner,
+            in_specs=(P_CFG, P_REP, P_CFG, P_CFG, P_CFG, P_REP, P_REP),
+            out_specs=(P_CFG, P_CFG, P_CFG, P_CFG, P_CFG))
+        jitted = jax.jit(inner)
+
+        def step(p2m_params, bb_params_s, opt_state_s, state_s, events,
+                 labels):
+            bb_params_s, opt_state_s, state_s, metrics, l1_s = jitted(
+                coeffs_s, p2m_params, bb_params_s, opt_state_s, state_s,
+                events, labels)
             return (p2m_params, bb_params_s, opt_state_s, state_s, metrics,
-                    l1)
+                    _merge_grouped_l1(l1_s))
 
         return step
-
-    coeffs_s = leakage.stacked_leak_coeffs(leak_cfgs)
 
     def joint_loss(joint, state, events, labels, coeffs):
         coarse, l1 = _layer1_coarse_one(joint["p2m"], events, model_cfg,
@@ -271,9 +403,8 @@ def make_batched_finetune_step(model_cfg, leak_cfgs: tuple[LeakageConfig, ...],
         loss = snn.cross_entropy(logits, labels)
         return loss, (new_state, aux, logits, l1)
 
-    @jax.jit
-    def step(p2m_params_s, bb_params_s, opt_state_s, state_s, events,
-             labels):
+    def inner(co_s, p2m_params_s, bb_params_s, opt_state_s, state_s,
+              events, labels):
         def per_cfg(p2m_p, bb_p, o_s, st, coeffs):
             joint = {"p2m": p2m_p, "backbone": bb_p}
             (loss, (new_st, aux, logits, l1)), grads = jax.value_and_grad(
@@ -285,9 +416,20 @@ def make_batched_finetune_step(model_cfg, leak_cfgs: tuple[LeakageConfig, ...],
                        "acc": snn.accuracy(logits, labels)}
             return joint["p2m"], joint["backbone"], o_s, new_st, metrics, l1
 
+        return _map_cfgs(per_cfg, p2m_params_s, bb_params_s, opt_state_s,
+                         state_s, co_s)
+
+    inner = ex.shard(
+        inner,
+        in_specs=(P_CFG, P_CFG, P_CFG, P_CFG, P_CFG, P_REP, P_REP),
+        out_specs=(P_CFG, P_CFG, P_CFG, P_CFG, P_CFG, P_CFG))
+    jitted = jax.jit(inner)
+
+    def step(p2m_params_s, bb_params_s, opt_state_s, state_s, events,
+             labels):
         (p2m_params_s, bb_params_s, opt_state_s, state_s, metrics,
-         l1_s) = jax.vmap(per_cfg)(p2m_params_s, bb_params_s, opt_state_s,
-                                   state_s, coeffs_s)
+         l1_s) = jitted(coeffs_s, p2m_params_s, bb_params_s, opt_state_s,
+                        state_s, events, labels)
         return (p2m_params_s, bb_params_s, opt_state_s, state_s, metrics,
                 _merge_grouped_l1(l1_s))
 
@@ -295,56 +437,63 @@ def make_batched_finetune_step(model_cfg, leak_cfgs: tuple[LeakageConfig, ...],
 
 
 def make_batched_eval(model_cfg, leak_cfgs: tuple[LeakageConfig, ...],
-                      protocol: str = "frozen") -> Callable:
+                      protocol: str = "frozen",
+                      executor: SweepExecutor | None = None) -> Callable:
     """Jitted batched eval: per-config accuracy/loss + backbone aux + the
     layer-1 spike statistics feeding bandwidth/energy.
 
     With ``protocol="unfrozen"`` the first argument carries per-config
-    layer-1 params (leading [n_cfg] axis) and the whole forward is vmapped;
-    the returned (metrics, aux, l1) contract is identical either way.
+    layer-1 params (leading [n_cfg] axis) and the whole forward maps over
+    the variant axis;
+    the returned (metrics, aux, l1) contract is identical either way. A
+    sharded ``executor`` partitions the stacked axis over the cfg mesh
+    exactly like :func:`make_batched_finetune_step`.
     """
     _check_protocol(protocol)
-    if protocol == "unfrozen" and model_cfg.p2m.mode != "curvefit":
-        raise ValueError(
-            f"unfrozen protocol requires p2m.mode='curvefit' (the "
-            f"differentiable forward), got {model_cfg.p2m.mode!r}")
+    _check_curvefit(model_cfg, protocol)
+    ex = executor or SweepExecutor()
     bb_cfg = model_cfg.backbone
+    coeffs_s = leakage.stacked_leak_coeffs(leak_cfgs,
+                                           model_cfg.p2m.v_threshold)
+    coeffs_s = ex.pad_stacked(coeffs_s, len(leak_cfgs))
 
     if protocol == "frozen":
-        @jax.jit
-        def ev(p2m_params, bb_params_s, state_s, events, labels):
-            coarse_s, l1 = _layer1_coarse(p2m_params, events, model_cfg,
-                                          leak_cfgs)
+        def inner(co_s, p2m_params, bb_params_s, state_s, events, labels):
+            coarse_s, l1_s = _layer1_coarse_frozen(p2m_params, events,
+                                                   model_cfg, co_s)
 
-            def per_cfg(bb_p, st, coarse):
+            def per_cfg(bb_p, st, coarse, l1):
                 logits, _, aux = snn.spiking_cnn_apply(
                     bb_p, st, coarse, bb_cfg, train=False)
                 return {"acc": snn.accuracy(logits, labels),
-                        "loss": snn.cross_entropy(logits, labels)}, aux
+                        "loss": snn.cross_entropy(logits, labels)}, aux, l1
 
-            metrics, aux = jax.vmap(per_cfg)(bb_params_s, state_s, coarse_s)
-            return metrics, aux, l1
+            return _map_cfgs(per_cfg, bb_params_s, state_s, coarse_s, l1_s)
+    else:
+        def inner(co_s, p2m_params_s, bb_params_s, state_s, events, labels):
+            def per_cfg(p2m_p, bb_p, st, coeffs):
+                coarse, l1 = _layer1_coarse_one(p2m_p, events, model_cfg,
+                                                coeffs)
+                logits, _, aux = snn.spiking_cnn_apply(
+                    bb_p, st, coarse, bb_cfg, train=False)
+                return {"acc": snn.accuracy(logits, labels),
+                        "loss": snn.cross_entropy(logits, labels)}, aux, l1
 
-        return ev
+            return _map_cfgs(per_cfg, p2m_params_s, bb_params_s, state_s,
+                             co_s)
 
-    coeffs_s = leakage.stacked_leak_coeffs(leak_cfgs)
+    p2m_spec = P_REP if protocol == "frozen" else P_CFG
+    inner = ex.shard(inner,
+                     in_specs=(P_CFG, p2m_spec, P_CFG, P_CFG, P_REP, P_REP),
+                     out_specs=(P_CFG, P_CFG, P_CFG))
+    jitted = jax.jit(inner)
 
-    @jax.jit
-    def ev(p2m_params_s, bb_params_s, state_s, events, labels):
-        def per_cfg(p2m_p, bb_p, st, coeffs):
-            coarse, l1 = _layer1_coarse_one(p2m_p, events, model_cfg,
-                                            coeffs)
-            logits, _, aux = snn.spiking_cnn_apply(
-                bb_p, st, coarse, bb_cfg, train=False)
-            return {"acc": snn.accuracy(logits, labels),
-                    "loss": snn.cross_entropy(logits, labels)}, aux, l1
-
-        metrics, aux, l1_s = jax.vmap(per_cfg)(p2m_params_s, bb_params_s,
-                                               state_s, coeffs_s)
+    def ev(p2m_ps, bb_params_s, state_s, events, labels):
+        metrics, aux, l1_s = jitted(coeffs_s, p2m_ps, bb_params_s, state_s,
+                                    events, labels)
         return metrics, aux, _merge_grouped_l1(l1_s)
 
     return ev
-
 
 
 # ---------------------------------------------------------------------------
@@ -386,7 +535,9 @@ def pretrain_backbone(key: jax.Array, data_cfg, model_cfg, sweep,
 @dataclass
 class GridResult:
     """Everything one sweep produced: flat records (one per
-    (circuit-config, T_INTG) cell), the retention surface, and grid meta."""
+    (variant, T_INTG, n_sub) cell), the retention surface, and grid meta.
+    Records are always UNPADDED — a sharded run's mesh-padding lanes are
+    dropped when the records are built."""
     records: list[dict]
     retention: dict
     labels: tuple[str, ...]
@@ -395,13 +546,15 @@ class GridResult:
 
     def to_artifact(self, extra_meta: dict | None = None) -> dict:
         return {
-            "schema": SCHEMA,
+            "schema": SCHEMA_V3,
             "protocol": self.protocol,
             "grid": {
                 "circuits": [c.value for c in self.grid.circuits],
                 "t_intg_grid_ms": list(self.grid.t_intg_grid_ms),
                 "null_mismatch": list(self.grid.null_mismatch),
                 "labels": list(self.labels),
+                "axes": variant_grid.active_axes(self.grid),
+                "axis_values": variant_grid.grid_axis_values(self.grid),
             },
             "retention": self.retention,
             "records": self.records,
@@ -410,14 +563,15 @@ class GridResult:
 
 
 def _normalize(records: list[dict]) -> None:
-    """Per config label, normalize bandwidth + per-step train time to the
-    longest-T point and compute the energy improvement against that
-    config's single conventional reference (paper Fig 2 right — the digital
-    backend always integrates at the accuracy-optimal long T)."""
-    by_label: dict[str, list[dict]] = {}
+    """Per (config label, n_sub) series, normalize bandwidth + per-step
+    train time to the longest-T point and compute the energy improvement
+    against that series' single conventional reference (paper Fig 2 right —
+    the digital backend always integrates at the accuracy-optimal long
+    T)."""
+    by_series: dict[tuple, list[dict]] = {}
     for r in records:
-        by_label.setdefault(r["label"], []).append(r)
-    for rs in by_label.values():
+        by_series.setdefault((r["label"], r["n_sub"]), []).append(r)
+    for rs in by_series.values():
         base = max(rs, key=lambda r: r["t_intg_ms"])
         e_conv_ref = base["backend_energy_conventional_j"]
         for r in rs:
@@ -432,23 +586,31 @@ def _normalize(records: list[dict]) -> None:
 def run_grid(data_cfg: events_mod.EventStreamConfig, model_cfg,
              sweep, grid: SweepGrid, log: Any = print, *,
              protocol: str = "frozen",
-             pretrained: tuple | None = None) -> GridResult:
+             pretrained: tuple | None = None,
+             executor: SweepExecutor | None = None) -> GridResult:
     """Run the batched co-design sweep. ``model_cfg`` is a
     codesign.P2MModelConfig, ``sweep`` a codesign.SweepConfig (its
     ``t_intg_grid_ms`` is superseded by ``grid.t_intg_grid_ms``).
 
     ``protocol`` selects the phase-2 variant: ``"frozen"`` (paper §3 —
     layer 1 fixed, backbones finetune) or ``"unfrozen"`` (each circuit
-    config jointly learns its own layer-1 weights + backbone). The phase-1
+    variant jointly learns its own layer-1 weights + backbone, with
+    ``sweep.lr_p2m`` on the layer-1 leaf group when set). The phase-1
     pretrain and the batch/eval key streams are identical across protocols
     for a given seed, so records are directly comparable. ``pretrained``
     optionally injects a shared ``(params, state, key)`` phase-1 result
-    (see :func:`run_protocols`)."""
+    (see :func:`run_protocols`). ``executor`` shards the stacked variant
+    axis over a device mesh (``SweepExecutor(devices=n)``); the records
+    are identical to the single-device run.
+    """
     _check_protocol(protocol)
+    ex = executor or SweepExecutor()
     leak_cfgs = expand_leak_configs(grid, model_cfg.p2m.leak)
     labels = tuple(config_label(lc) for lc in leak_cfgs)
     G = len(leak_cfgs)
+    G_pad = ex.padded_size(G)
     t_grid = grid.t_intg_grid_ms
+    cells = variant_grid.outer_cells(grid, model_cfg.p2m.n_sub)
 
     sweep = replace(sweep, t_intg_grid_ms=t_grid)
     if pretrained is None:
@@ -472,31 +634,40 @@ def run_grid(data_cfg: events_mod.EventStreamConfig, model_cfg,
     }
 
     opt = adamw(sweep.lr)
+    lr_p2m = getattr(sweep, "lr_p2m", None)
+    opt_unfrozen = joint_optimizer(
+        opt, adamw(sweep.lr if lr_p2m is None else lr_p2m))
     records: list[dict] = []
-    for ti, t_ms in enumerate(t_grid):
+    for t_ms, ns in cells:
+        ti = t_grid.index(t_ms)
         cfg_t = replace(
             model_cfg,
-            p2m=replace(model_cfg.p2m, t_intg_ms=t_ms, mode="curvefit"))
+            p2m=replace(model_cfg.p2m, t_intg_ms=t_ms, n_sub=ns,
+                        mode="curvefit"))
         if protocol == "unfrozen":
-            # layer 1 gains a stacked [n_cfg] axis: every circuit config
+            # layer 1 gains a stacked [n_cfg] axis: every circuit variant
             # starts from the shared pretrain and learns its own copy,
-            # jointly with its backbone (shared optimizer state tree).
-            p2m_ps = p2m_layer.stack_p2m_params(pre_params["p2m"], G)
-            bb_params_s = _stack_tree(pre_params["backbone"], G)
-            opt_state_s = jax.vmap(opt.init)(
+            # jointly with its backbone (per-group optimizer state so
+            # layer 1 can step at sweep.lr_p2m). G_pad lanes: the mesh
+            # executor's padding lanes train real-but-discarded copies.
+            p2m_ps = p2m_layer.stack_p2m_params(pre_params["p2m"], G_pad)
+            bb_params_s = _stack_tree(pre_params["backbone"], G_pad)
+            opt_state_s = jax.vmap(opt_unfrozen.init)(
                 {"p2m": p2m_ps, "backbone": bb_params_s})
+            opt_t = opt_unfrozen
         else:
             p2m_ps = {k: jnp.copy(v) for k, v in pre_params["p2m"].items()}
-            bb_params_s = _stack_tree(pre_params["backbone"], G)
+            bb_params_s = _stack_tree(pre_params["backbone"], G_pad)
             opt_state_s = jax.vmap(opt.init)(bb_params_s)
-        state_s = _stack_tree(pre_state, G)
-        step_fn = make_batched_finetune_step(cfg_t, leak_cfgs, opt,
-                                             protocol=protocol)
+            opt_t = opt
+        state_s = _stack_tree(pre_state, G_pad)
+        step_fn = make_batched_finetune_step(cfg_t, leak_cfgs, opt_t,
+                                             protocol=protocol, executor=ex)
         # warmup step: exclude jit compile from the train-time measurement
         # (the paper's training-time column is steady-state epochs)
         key, kw = jax.random.split(key)
         ev_w, lab_w = events_mod.sample_batch(kw, data_cfg, sweep.batch_size,
-                                              t_ms, n_sub=cfg_t.p2m.n_sub)
+                                              t_ms, n_sub=ns)
         p2m_ps, bb_params_s, opt_state_s, state_s, m, _ = step_fn(
             p2m_ps, bb_params_s, opt_state_s, state_s, ev_w, lab_w)
         jax.block_until_ready(m["loss"])
@@ -504,25 +675,31 @@ def run_grid(data_cfg: events_mod.EventStreamConfig, model_cfg,
         for _ in range(sweep.finetune_steps):
             key, kb = jax.random.split(key)
             ev, lab = events_mod.sample_batch(kb, data_cfg, sweep.batch_size,
-                                              t_ms, n_sub=cfg_t.p2m.n_sub)
+                                              t_ms, n_sub=ns)
             p2m_ps, bb_params_s, opt_state_s, state_s, m, _ = step_fn(
                 p2m_ps, bb_params_s, opt_state_s, state_s, ev, lab)
         jax.block_until_ready(m["loss"])
         train_s = time.perf_counter() - t0
 
         if protocol == "unfrozen":
-            # re-linearize each config's leak around its LEARNED kernel:
-            # the co-design point of the unfrozen protocol is that circuit
-            # (a)'s drift direction/rate is now a trained quantity.
-            w_q_s = analog_mod.quantize_weights(p2m_ps["w"],
+            # re-linearize each variant's leak around its LEARNED kernel
+            # (padding lanes dropped): the co-design point of the unfrozen
+            # protocol is that circuit (a)'s drift direction/rate is now a
+            # trained quantity.
+            w_q_s = analog_mod.quantize_weights(p2m_ps["w"][:G],
                                                 cfg_t.p2m.analog)
             lk_s = leakage.grouped_leak_params(w_q_s, leak_cfgs)
-            ret_t = jnp.mean(
-                leakage.retention_error(lk_s, RETENTION_V0, t_ms),
-                axis=-1)                                           # [G]
+            # per-variant learned-kernel retention SURFACE over the whole
+            # T grid (satellite of the frozen-kernel top-level surface);
+            # one linearization serves every T point and the scalar column
+            learned_surface = jnp.stack(
+                [jnp.mean(leakage.retention_error(lk_s, RETENTION_V0, t),
+                          axis=-1) for t in t_grid], axis=1)   # [G, n_t]
+            ret_t = learned_surface[:, ti]                     # [G]
 
         # batched eval: accuracy + spike statistics for bandwidth/energy
-        eval_fn = make_batched_eval(cfg_t, leak_cfgs, protocol=protocol)
+        eval_fn = make_batched_eval(cfg_t, leak_cfgs, protocol=protocol,
+                                    executor=ex)
         accs = [[] for _ in range(G)]
         l1_spikes = [0.0] * G
         in_events = 0.0
@@ -531,11 +708,12 @@ def run_grid(data_cfg: events_mod.EventStreamConfig, model_cfg,
         for _ in range(sweep.eval_batches):
             key, kb = jax.random.split(key)
             ev, lab = events_mod.sample_batch(kb, data_cfg, sweep.batch_size,
-                                              t_ms, n_sub=cfg_t.p2m.n_sub)
+                                              t_ms, n_sub=ns)
             metrics, aux, l1 = eval_fn(p2m_ps, bb_params_s, state_s,
                                        ev, lab)
             in_events += float(l1["events/in"])
             macs += float(l1["macs/p2m"])
+            # unpad: only the first G of the G_pad mesh lanes are real
             for g in range(G):
                 accs[g].append(float(metrics["acc"][g]))
                 l1_spikes[g] += float(l1["spikes/p2m"][g])
@@ -548,14 +726,22 @@ def run_grid(data_cfg: events_mod.EventStreamConfig, model_cfg,
             e_conv = energy_mod.backend_energy_conventional(aux_sum[g], macs)
             e_p2m = energy_mod.backend_energy_p2m(aux_sum[g], l1_spikes[g],
                                                   macs)
-            ret_g = (float(ret_t[g]) if protocol == "unfrozen"
-                     else float(surface[g, ti]))
+            if protocol == "unfrozen":
+                ret_g = float(ret_t[g])
+                surf_row = learned_surface[g]
+            else:
+                ret_g = float(surface[g, ti])
+                surf_row = surface[g]
             rec = {
                 "label": lab_g,
                 "circuit": lc.circuit.value,
                 "null_mismatch": lc.null_mismatch,
                 "protocol": protocol,
                 "t_intg_ms": t_ms,
+                "n_sub": ns,
+                "variant": variant_grid.variant_dict(
+                    lc, v_threshold_default=model_cfg.p2m.v_threshold,
+                    n_sub=ns),
                 "accuracy": sum(accs[g]) / len(accs[g]),
                 "train_time_s": train_s,
                 "train_time_per_step_s": train_s / sweep.finetune_steps,
@@ -566,6 +752,7 @@ def run_grid(data_cfg: events_mod.EventStreamConfig, model_cfg,
                 "layer1_spikes": l1_spikes[g],
                 "input_events": in_events,
                 "retention_err_v": ret_g,
+                "retention_surface_v": [float(x) for x in surf_row],
             }
             records.append(rec)
             log(f"[sweep {protocol} t={t_ms}ms cfg={lab_g}] "
@@ -581,7 +768,9 @@ def run_grid(data_cfg: events_mod.EventStreamConfig, model_cfg,
 def run_protocols(data_cfg: events_mod.EventStreamConfig, model_cfg,
                   sweep, grid: SweepGrid,
                   protocols: tuple[str, ...] = PROTOCOLS,
-                  log: Any = print) -> dict[str, GridResult]:
+                  log: Any = print,
+                  executor: SweepExecutor | None = None
+                  ) -> dict[str, GridResult]:
     """Run the grid under several phase-2 protocols off ONE shared phase-1
     pretrain. The post-pretrain PRNG key is reused for every protocol, so
     each one sees identical finetune/eval batches — accuracy differences
@@ -592,20 +781,21 @@ def run_protocols(data_cfg: events_mod.EventStreamConfig, model_cfg,
     key = jax.random.PRNGKey(sweep.seed)
     pretrained = pretrain_backbone(key, data_cfg, model_cfg, sweep, log)
     return {p: run_grid(data_cfg, model_cfg, sweep, grid, log=log,
-                        protocol=p, pretrained=pretrained)
+                        protocol=p, pretrained=pretrained, executor=executor)
             for p in protocols}
 
 
 def protocols_artifact(results: dict[str, GridResult],
                        extra_meta: dict | None = None) -> dict:
-    """Merge per-protocol grid results into ONE ``p2m-codesign-sweep/v2``
+    """Merge per-protocol grid results into ONE ``p2m-codesign-sweep/v3``
     artifact: same grid/retention metadata, records concatenated across
-    protocols (each record carries its ``"protocol"`` field)."""
+    protocols (each record carries its ``"protocol"`` field and its
+    ``"variant"`` dict)."""
     first = next(iter(results.values()))
     art = first.to_artifact()
     del art["protocol"]
     return {**art,
-            "schema": SCHEMA_V2,
+            "schema": SCHEMA_V3,
             "protocols": list(results),
             "records": [r for res in results.values() for r in res.records],
             **(extra_meta or {})}

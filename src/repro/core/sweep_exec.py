@@ -1,0 +1,112 @@
+"""Mesh-sharded execution of the sweep engine's stacked variant axis.
+
+The circuit-variant axis of the batched finetune/eval steps is
+embarrassingly parallel: every variant runs the same program on the same
+batch with different numeric coefficients. :class:`SweepExecutor` maps
+that stacked ``[n_cfg]`` axis onto a 1-D ``"cfg"`` device mesh with
+``shard_map`` — each device finetunes/evaluates ``n_cfg / n_devices``
+variants, events and the shared layer-1 params are replicated, and all
+stacked outputs come back sharded on the same axis.
+
+``n_cfg`` is padded up to a multiple of the device count by repeating the
+last variant (the padded lanes compute real-but-discarded work); the
+engine reads back only the first ``n_cfg`` lanes when it builds
+``GridResult`` records, so sharded and single-device runs produce
+record-for-record identical artifacts.
+
+On CPU CI the mesh comes from forced host devices::
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        python -m repro.launch.sweep --grid fast --devices 8
+
+``devices=1`` (the default) is the exact pre-sharding path: no mesh, no
+padding, plain ``jax.jit``.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import cached_property
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec
+
+CFG_AXIS = "cfg"
+# PartitionSpec shorthands for in/out spec trees: one stacked-variant spec,
+# one replicated spec (pytree prefixes — a single spec covers a whole
+# params/opt-state subtree).
+P_CFG = PartitionSpec(CFG_AXIS)
+P_REP = PartitionSpec()
+
+
+@dataclass(frozen=True)
+class SweepExecutor:
+    """Execution policy for the stacked variant axis.
+
+    ``devices=1`` → single-device (no shard_map, no padding). ``devices=n``
+    → 1-D ``"cfg"`` mesh over the first n local devices.
+    """
+    devices: int = 1
+
+    def __post_init__(self):
+        if self.devices < 1:
+            raise ValueError(f"devices must be >= 1, got {self.devices}")
+
+    @property
+    def is_sharded(self) -> bool:
+        return self.devices > 1
+
+    @cached_property
+    def mesh(self) -> Mesh:
+        avail = jax.devices()
+        if self.devices > len(avail):
+            raise ValueError(
+                f"executor wants {self.devices} devices but only "
+                f"{len(avail)} are visible; on CPU force host devices with "
+                f"XLA_FLAGS=--xla_force_host_platform_device_count="
+                f"{self.devices}")
+        return Mesh(np.asarray(avail[: self.devices]), (CFG_AXIS,))
+
+    def padded_size(self, n_cfg: int) -> int:
+        """Smallest multiple of the device count >= n_cfg."""
+        return math.ceil(n_cfg / self.devices) * self.devices
+
+    def pad_stacked(self, tree: Any, n_cfg: int) -> Any:
+        """Pad every leaf's leading [n_cfg] axis to ``padded_size(n_cfg)``
+        by repeating the last variant (real work, discarded on read-back)."""
+        pad = self.padded_size(n_cfg) - n_cfg
+        if pad == 0:
+            return tree
+        return jax.tree.map(
+            lambda x: jnp.concatenate(
+                [x, jnp.repeat(x[-1:], pad, axis=0)], axis=0), tree)
+
+    def shard(self, fn, in_specs: Sequence, out_specs):
+        """shard_map ``fn`` over the cfg mesh (identity when devices=1).
+
+        ``in_specs``/``out_specs`` are pytree prefixes of
+        :data:`P_CFG` / :data:`P_REP`. The body is already differentiated
+        (the engine's steps take grads inside), so no shard_map transpose
+        is ever needed and replication checking is disabled.
+        """
+        if not self.is_sharded:
+            return fn
+        return shard_map(fn, mesh=self.mesh, in_specs=tuple(in_specs),
+                         out_specs=out_specs, check_rep=False)
+
+
+def make_executor(devices: int | None) -> SweepExecutor:
+    """CLI entry: ``devices=None`` → single-device executor.
+
+    Validates the device count EAGERLY (builds the mesh up front) so a bad
+    ``--devices`` fails before any compute — not after a paper-scale
+    phase-1 pretrain has already run.
+    """
+    ex = SweepExecutor(devices=devices or 1)
+    if ex.is_sharded:
+        _ = ex.mesh
+    return ex

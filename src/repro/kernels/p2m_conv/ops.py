@@ -40,17 +40,26 @@ def _extract_patches(frames: jax.Array, k: int, stride: int) -> jax.Array:
 def _prepare(params, events, cfg, leak_cfgs=None):
     """Shared im2col + leak-linearization prep.
 
-    With ``leak_cfgs=None`` the leak tensors come out [F] (single config,
-    from ``cfg.leak``); with a tuple of LeakageConfigs they come out
-    [n_cfg, F] (the kernel's circuit grid axis).
+    With ``leak_cfgs=None`` the leak/threshold tensors come out [F]
+    (single config, from ``cfg.leak``); with a tuple of LeakageConfigs
+    they come out [n_cfg, F] (the kernel's circuit grid axis). The
+    comparator threshold travels as a tensor alongside the leak legs —
+    each variant may override the model-level ``cfg.v_threshold``.
     """
     B, T, n_sub, H, W, Cin = events.shape
     k = cfg.kernel_size
+    F = cfg.out_channels
     w_q = analog.quantize_weights(params["w"], cfg.analog)   # [k,k,Cin,F]
     if leak_cfgs is None:
         lk = leakage.kernel_leak_params(w_q, cfg.leak)
+        theta = jnp.full((F,), leakage.resolve_v_threshold(
+            cfg.leak, cfg.v_threshold), jnp.float32)
     else:
         lk = leakage.stacked_leak_params(w_q, leak_cfgs)
+        per = [leakage.resolve_v_threshold(lc, cfg.v_threshold)
+               for lc in leak_cfgs]
+        theta = jnp.broadcast_to(
+            jnp.asarray(per, jnp.float32)[:, None], (len(leak_cfgs), F))
     decay = leakage.decay_factor(lk.tau_ms, cfg.dt_ms)
     frames = events.reshape(B * T * n_sub, H, W, Cin)
     patches, (Ho, Wo) = _extract_patches(frames, k, cfg.stride)
@@ -63,20 +72,19 @@ def _prepare(params, events, cfg, leak_cfgs=None):
                   half_swing=cfg.analog.vdd / 2.0,
                   v_lo=-cfg.analog.v_precharge,
                   v_hi=cfg.analog.vdd - cfg.analog.v_precharge,
-                  theta=cfg.v_threshold,
                   nonlinear=cfg.analog.enable_nonlinearity)
-    return patches, w2, lk.v_inf, decay, params, consts, (B, T, Ho, Wo)
+    return patches, w2, lk.v_inf, decay, theta, params, consts, (B, T, Ho, Wo)
 
 
 @partial(jax.jit, static_argnames=("cfg", "use_ref"))
 def p2m_conv(params: dict, events: jax.Array, cfg, use_ref: bool = False
              ) -> tuple[jax.Array, jax.Array]:
     """events [B, T, n_sub, H, W, Cin] → (spikes, v_pre) [B, T, H', W', F]."""
-    patches, w2, v_inf, decay, params, consts, dims = _prepare(
+    patches, w2, v_inf, decay, theta, params, consts, dims = _prepare(
         params, events, cfg)
     B, T, Ho, Wo = dims
     fn = p2m_conv_ref if use_ref else p2m_conv_pallas
-    spikes, vpre = fn(patches, w2, v_inf, decay, params["pv_gain"],
+    spikes, vpre = fn(patches, w2, v_inf, decay, theta, params["pv_gain"],
                       params["pv_offset"], **consts)
     spikes = spikes[:, :B * Ho * Wo]   # crop tile padding
     vpre = vpre[:, :B * Ho * Wo]
@@ -97,11 +105,11 @@ def p2m_conv_multi(params: dict, events: jax.Array, cfg,
     [n_cfg, B, T, H', W', F]. ``leak_cfgs`` is a (hashable) tuple of
     LeakageConfig — the circuit axis of the sweep grid.
     """
-    patches, w2, v_inf, decay, params, consts, dims = _prepare(
+    patches, w2, v_inf, decay, theta, params, consts, dims = _prepare(
         params, events, cfg, leak_cfgs=leak_cfgs)
     B, T, Ho, Wo = dims
     fn = p2m_conv_multi_ref if use_ref else p2m_conv_multi_pallas
-    spikes, vpre = fn(patches, w2, v_inf, decay, params["pv_gain"],
+    spikes, vpre = fn(patches, w2, v_inf, decay, theta, params["pv_gain"],
                       params["pv_offset"], **consts)
     spikes = spikes[:, :, :B * Ho * Wo]   # crop tile padding
     vpre = vpre[:, :, :B * Ho * Wo]

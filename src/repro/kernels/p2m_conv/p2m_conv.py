@@ -14,9 +14,11 @@ per sub-slot, then the threshold comparator; only binary spikes leave the
 Layout: im2col patches [T_out, n_sub, P, K] (P = B·H'·W' sites, K = receptive
 field), weights [K, F]. The grid carries a **circuit-config axis** in front:
 grid = (n_cfg, T_out, P tiles), with the per-config leak linearization
-``(v_inf, decay)`` stored as [n_cfg, F] tensors indexed by the config grid
-dimension. Patches and weights are config-independent, so the same event
-tile is revisited once per config with only a new [1, F] leak tile loaded —
+``(v_inf, decay)`` AND the per-config comparator threshold ``theta`` (the
+variant grid's v_threshold axis) stored as [n_cfg, F] tensors indexed by
+the config grid dimension. Patches and weights are config-independent, so
+the same event tile is revisited once per config with only new [1, F]
+leak/threshold tiles loaded —
 this is what lets the co-design sweep engine (core/sweep.py) evaluate all
 three MAC circuit configs (and nullifier-mismatch variants) in ONE
 pallas_call instead of one compile per circuit. The n_sub loop runs inside
@@ -32,15 +34,16 @@ from jax import lax
 from jax.experimental import pallas as pl
 
 
-def _p2m_kernel(patches_ref, w_ref, vinf_ref, decay_ref, pvg_ref, pvo_ref,
-                spikes_ref, vpre_ref, *,
+def _p2m_kernel(patches_ref, w_ref, vinf_ref, decay_ref, theta_ref,
+                pvg_ref, pvo_ref, spikes_ref, vpre_ref, *,
                 dv_unit: float, half_swing: float, v_lo: float, v_hi: float,
-                theta: float, nonlinear: bool):
+                nonlinear: bool):
     n_sub = patches_ref.shape[1]
     bp = patches_ref.shape[2]
     F = w_ref.shape[1]
     vinf = vinf_ref[0, :]                      # [F] — this grid step's config
     decay = decay_ref[0, :]
+    theta = theta_ref[0, :]                    # per-config comparator level
     pvg = pvg_ref[0, :]
     pvo = pvo_ref[0, :]
 
@@ -65,22 +68,26 @@ def _p2m_kernel(patches_ref, w_ref, vinf_ref, decay_ref, pvg_ref, pvo_ref,
 
 
 def p2m_conv_multi_pallas(patches: jax.Array, w: jax.Array, v_inf: jax.Array,
-                          decay: jax.Array, pv_gain: jax.Array,
-                          pv_offset: jax.Array, *, dv_unit: float,
-                          half_swing: float, v_lo: float, v_hi: float,
-                          theta: float, nonlinear: bool = True,
+                          decay: jax.Array, theta: jax.Array,
+                          pv_gain: jax.Array, pv_offset: jax.Array, *,
+                          dv_unit: float, half_swing: float, v_lo: float,
+                          v_hi: float, nonlinear: bool = True,
                           block_p: int = 256, interpret: bool = True
                           ) -> tuple[jax.Array, jax.Array]:
     """Multi-circuit-config P²M conv.
 
     patches: [T_out, n_sub, P, K] f32; w: [K, F];
-    v_inf/decay: [n_cfg, F] per-config leak linearizations (the circuit
-    grid axis). Returns (spikes, v_pre), both [n_cfg, T_out, P, F] f32.
+    v_inf/decay/theta: [n_cfg, F] per-config leak linearizations and
+    comparator thresholds (the circuit grid axis — theta rides the same
+    [1, F] per-config tile stream as the leak legs, so threshold variants
+    cost no extra patch traffic). Returns (spikes, v_pre), both
+    [n_cfg, T_out, P, F] f32.
     """
     T, n_sub, P, K = patches.shape
     F = w.shape[1]
     n_cfg = v_inf.shape[0]
     assert decay.shape == (n_cfg, F), (decay.shape, (n_cfg, F))
+    assert theta.shape == (n_cfg, F), (theta.shape, (n_cfg, F))
     block_p = min(block_p, P)
     if P % block_p != 0:
         pad = block_p - P % block_p
@@ -90,7 +97,7 @@ def p2m_conv_multi_pallas(patches: jax.Array, w: jax.Array, v_inf: jax.Array,
 
     kernel = functools.partial(
         _p2m_kernel, dv_unit=dv_unit, half_swing=half_swing, v_lo=v_lo,
-        v_hi=v_hi, theta=theta, nonlinear=nonlinear)
+        v_hi=v_hi, nonlinear=nonlinear)
 
     spikes, vpre = pl.pallas_call(
         kernel,
@@ -98,6 +105,7 @@ def p2m_conv_multi_pallas(patches: jax.Array, w: jax.Array, v_inf: jax.Array,
         in_specs=[
             pl.BlockSpec((1, n_sub, block_p, K), lambda c, t, p: (t, 0, p, 0)),
             pl.BlockSpec((K, F), lambda c, t, p: (0, 0)),
+            pl.BlockSpec((1, F), lambda c, t, p: (c, 0)),
             pl.BlockSpec((1, F), lambda c, t, p: (c, 0)),
             pl.BlockSpec((1, F), lambda c, t, p: (c, 0)),
             pl.BlockSpec((1, F), lambda c, t, p: (0, 0)),
@@ -112,24 +120,25 @@ def p2m_conv_multi_pallas(patches: jax.Array, w: jax.Array, v_inf: jax.Array,
             jax.ShapeDtypeStruct((n_cfg, T, P, F), jnp.float32),
         ],
         interpret=interpret,
-    )(patches, w, v_inf, decay, pv_gain[None, :], pv_offset[None, :])
+    )(patches, w, v_inf, decay, theta, pv_gain[None, :], pv_offset[None, :])
     return spikes, vpre
 
 
 def p2m_conv_pallas(patches: jax.Array, w: jax.Array, v_inf: jax.Array,
-                    decay: jax.Array, pv_gain: jax.Array, pv_offset: jax.Array,
+                    decay: jax.Array, theta: jax.Array,
+                    pv_gain: jax.Array, pv_offset: jax.Array,
                     *, dv_unit: float, half_swing: float, v_lo: float,
-                    v_hi: float, theta: float, nonlinear: bool = True,
+                    v_hi: float, nonlinear: bool = True,
                     block_p: int = 256, interpret: bool = True
                     ) -> tuple[jax.Array, jax.Array]:
     """Single-config wrapper over the multi-config kernel.
 
-    patches: [T_out, n_sub, P, K] f32; w: [K, F]; v_inf/decay: [F].
+    patches: [T_out, n_sub, P, K] f32; w: [K, F]; v_inf/decay/theta: [F].
     Returns (spikes, v_pre) both [T_out, P, F] f32.
     """
     spikes, vpre = p2m_conv_multi_pallas(
-        patches, w, v_inf[None, :], decay[None, :], pv_gain, pv_offset,
+        patches, w, v_inf[None, :], decay[None, :], theta[None, :],
+        pv_gain, pv_offset,
         dv_unit=dv_unit, half_swing=half_swing, v_lo=v_lo, v_hi=v_hi,
-        theta=theta, nonlinear=nonlinear, block_p=block_p,
-        interpret=interpret)
+        nonlinear=nonlinear, block_p=block_p, interpret=interpret)
     return spikes[0], vpre[0]

@@ -7,11 +7,13 @@ from jax import lax
 
 
 def p2m_conv_ref(patches: jax.Array, w: jax.Array, v_inf: jax.Array,
-                 decay: jax.Array, pv_gain: jax.Array, pv_offset: jax.Array,
+                 decay: jax.Array, theta: jax.Array,
+                 pv_gain: jax.Array, pv_offset: jax.Array,
                  *, dv_unit: float, half_swing: float, v_lo: float,
-                 v_hi: float, theta: float, nonlinear: bool = True
+                 v_hi: float, nonlinear: bool = True
                  ) -> tuple[jax.Array, jax.Array]:
-    """patches [T, n_sub, P, K], w [K, F] → (spikes, v_pre) [T, P, F]."""
+    """patches [T, n_sub, P, K], w [K, F], theta [F] (per-filter comparator
+    threshold) → (spikes, v_pre) [T, P, F]."""
     T, n_sub, P, K = patches.shape
     F = w.shape[1]
 
@@ -34,13 +36,14 @@ def p2m_conv_ref(patches: jax.Array, w: jax.Array, v_inf: jax.Array,
 
 
 def p2m_conv_multi_ref(patches: jax.Array, w: jax.Array, v_inf: jax.Array,
-                       decay: jax.Array, pv_gain: jax.Array,
-                       pv_offset: jax.Array, **consts
+                       decay: jax.Array, theta: jax.Array,
+                       pv_gain: jax.Array, pv_offset: jax.Array, **consts
                        ) -> tuple[jax.Array, jax.Array]:
     """Multi-config oracle: vmap the single-config ref over the leading
-    circuit axis of (v_inf, decay) [n_cfg, F] → (spikes, v_pre)
+    circuit axis of (v_inf, decay, theta) [n_cfg, F] → (spikes, v_pre)
     [n_cfg, T, P, F]."""
-    def one(vi, de):
-        return p2m_conv_ref(patches, w, vi, de, pv_gain, pv_offset, **consts)
+    def one(vi, de, th):
+        return p2m_conv_ref(patches, w, vi, de, th, pv_gain, pv_offset,
+                            **consts)
 
-    return jax.vmap(one)(v_inf, decay)
+    return jax.vmap(one)(v_inf, decay, theta)

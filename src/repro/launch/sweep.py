@@ -1,11 +1,17 @@
 """Sweep launcher.
 
 Default mode — the batched CO-DESIGN sweep (paper Fig 2/4 + Table 1): one
-in-process, vmap-batched run over CircuitConfig × T_INTG × null_mismatch
-via repro.core.sweep, emitting ONE structured JSON artifact
-(schema "p2m-codesign-sweep/v2", see docs/sweep.md). --protocol picks the
-phase-2 finetune protocol(s): "frozen" (paper §3 — layer 1 fixed),
-"unfrozen" (each circuit config learns its own layer-1 weights), or
+in-process, vmap-batched run over the circuit-VARIANT grid × T_INTG via
+repro.core.sweep, emitting ONE structured JSON artifact (schema
+"p2m-codesign-sweep/v3", see docs/sweep.md). The variant axes come from
+the registry in repro.core.variant_grid: ``--axes`` activates any of
+``mismatch`` / ``v-threshold`` / ``sigma`` / ``n-sub`` with its default
+value grid, and each axis also has an explicit value flag. ``--devices n``
+shards the stacked variant axis over a 1-D device mesh (on CPU force host
+devices with XLA_FLAGS=--xla_force_host_platform_device_count=n);
+sharded and single-device runs emit identical records. --protocol picks
+the phase-2 finetune protocol(s): "frozen" (paper §3 — layer 1 fixed),
+"unfrozen" (each circuit variant learns its own layer-1 weights), or
 "both" (default: one shared pretrain, records for both protocols in one
 artifact so the co-design optimum can be compared):
 
@@ -13,6 +19,9 @@ artifact so the co-design optimum can be compared):
   PYTHONPATH=src python -m repro.launch.sweep --grid fast --protocol frozen
   PYTHONPATH=src python -m repro.launch.sweep --grid paper \\
       --circuits a c --t-intg 1 10 100 1000 --mismatch 0.02 0.06
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+      PYTHONPATH=src python -m repro.launch.sweep --grid fast \\
+      --axes v-threshold sigma --devices 8
 
 Legacy mode — the dry-run cell sweep (one subprocess per arch × shape ×
 pods cell so XLA state never accumulates across the 60+ compiles;
@@ -31,17 +40,26 @@ import sys
 import time
 from pathlib import Path
 
+# Make the CLI runnable from any cwd: resolve the package root relative to
+# THIS file instead of assuming the repo root is the working directory.
+# (When repro is pip-installed this resolves inside site-packages, which is
+# already importable — the insert is then a harmless no-op entry.)
+_SRC = str(Path(__file__).resolve().parents[2])
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
 
 # ---------------------------------------------------------------------------
 # co-design grid sweep (default) — built on repro.core.sweep
 # ---------------------------------------------------------------------------
 
 def run_codesign_grid(args) -> int:
-    sys.path.insert(0, "src")
     from dataclasses import replace
 
     from repro.core import sweep as engine
+    from repro.core import variant_grid
     from repro.core.leakage import CircuitConfig
+    from repro.core.sweep_exec import make_executor
 
     fast = args.grid == "fast"
     data, model, sweep_cfg, grid = engine.paper_setup(fast=fast, hw=args.hw)
@@ -50,11 +68,32 @@ def run_codesign_grid(args) -> int:
             CircuitConfig(c) for c in args.circuits))
     if args.t_intg:
         grid = replace(grid, t_intg_grid_ms=tuple(sorted(args.t_intg)))
-    if args.mismatch:
-        grid = replace(grid, null_mismatch=tuple(args.mismatch))
-        if CircuitConfig.NULLIFIED not in grid.circuits:
-            print("note: --mismatch only affects circuit (c), which is not "
-                  "in this grid — values ignored", file=sys.stderr)
+
+    # variant axes: an explicit value flag wins; --axes <name> activates the
+    # axis with its registry default grid. null_mismatch keeps its preset
+    # default (0.06) when untouched — the PR-1 grid.
+    explicit = {"null_mismatch": args.mismatch,
+                "v_threshold": args.v_threshold,
+                "sigma": args.sigma,
+                "n_sub": args.n_sub}
+    active = {variant_grid.axis("null-mismatch" if n == "mismatch" else n
+                                ).name for n in (args.axes or [])}
+    overrides = {}
+    for name, vals in explicit.items():
+        if vals is None and name in active:
+            vals = variant_grid.axis(name).cli_defaults
+        if vals is not None:
+            try:
+                overrides[name] = variant_grid.check_values(name, vals)
+            except ValueError as e:
+                print(f"error: {e}", file=sys.stderr)
+                return 2
+    grid = replace(grid, **overrides)
+    mismatch_requested = args.mismatch is not None or \
+        "null_mismatch" in active
+    if mismatch_requested and CircuitConfig.NULLIFIED not in grid.circuits:
+        print("note: the mismatch axis only affects circuit (c), which is "
+              "not in this grid — values ignored", file=sys.stderr)
 
     for t in grid.t_intg_grid_ms:
         g = model.coarse_window_ms / t
@@ -64,10 +103,15 @@ def run_codesign_grid(args) -> int:
             return 2
 
     protocols = engine.resolve_protocols(args.protocol)
+    try:
+        executor = make_executor(args.devices)
+    except ValueError as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
 
     t0 = time.time()
     results = engine.run_protocols(data, model, sweep_cfg, grid,
-                                   protocols=protocols)
+                                   protocols=protocols, executor=executor)
     wall_s = time.time() - t0
 
     out = Path(args.out)
@@ -75,6 +119,7 @@ def run_codesign_grid(args) -> int:
     path = out / f"codesign_grid_{args.grid}.json"
     artifact = engine.protocols_artifact(results, extra_meta={
         "wall_s": wall_s,
+        "devices": executor.devices,
         "data": {"name": data.name, "hw": data.height,
                  "duration_ms": data.duration_ms},
         "sweep": {"batch_size": sweep_cfg.batch_size,
@@ -105,7 +150,6 @@ def run_codesign_grid(args) -> int:
 # ---------------------------------------------------------------------------
 
 def run_dryrun_cells(args) -> int:
-    sys.path.insert(0, "src")
     from repro.configs import SHAPES, list_archs
 
     out = Path(args.out)
@@ -127,8 +171,10 @@ def run_dryrun_cells(args) -> int:
                     continue
             except json.JSONDecodeError:
                 pass
+        inherited = os.environ.get("PYTHONPATH")
         env = dict(os.environ,
-                   PYTHONPATH="src",
+                   PYTHONPATH=(_SRC + os.pathsep + inherited
+                               if inherited else _SRC),
                    REPRO_ARTIFACTS=str(out))
         cmd = [sys.executable, "-m", "repro.launch.dryrun",
                "--arch", arch, "--shape", shape, "--pods", str(pods),
@@ -172,8 +218,28 @@ def main() -> int:
                     choices=["a", "b", "c"], help="override circuit configs")
     ap.add_argument("--t-intg", type=float, nargs="+", default=None,
                     help="override T_INTG grid (ms)")
+    ap.add_argument("--axes", type=str, nargs="+", default=None,
+                    choices=["mismatch", "null-mismatch", "v-threshold",
+                             "sigma", "n-sub"],
+                    help="activate variant axes with their registry default "
+                         "value grids (core/variant_grid.py); explicit "
+                         "value flags below override")
     ap.add_argument("--mismatch", type=float, nargs="+", default=None,
+                    dest="mismatch",
                     help="nullifier mismatch values for circuit (c)")
+    ap.add_argument("--v-threshold", type=float, nargs="+", default=None,
+                    help="comparator threshold values (V) — expands every "
+                         "circuit")
+    ap.add_argument("--sigma", type=float, nargs="+", default=None,
+                    help="process-variation sigma values on the leak taus")
+    ap.add_argument("--n-sub", type=int, nargs="+", default=None,
+                    help="event sub-slots per window (shape-changing: "
+                         "outer loop with T_INTG)")
+    ap.add_argument("--devices", type=int, default=None,
+                    help="shard the stacked variant axis over this many "
+                         "devices (1-D cfg mesh via shard_map); on CPU "
+                         "force host devices with XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N")
     ap.add_argument("--protocol", type=str, default="both",
                     choices=["frozen", "unfrozen", "both"],
                     help="phase-2 finetune protocol(s): frozen layer 1 "

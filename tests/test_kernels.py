@@ -55,9 +55,9 @@ class TestP2MConvKernel:
         cfg = P2MConfig(out_channels=4, n_sub=2)
         params = p2m_init(jax.random.PRNGKey(1), cfg)
         ev = jnp.ones((1, 1, 2, 7, 9, 2))
-        patches, w2, v_inf, decay, params2, consts, dims = _prepare(
+        patches, w2, v_inf, decay, theta, params2, consts, dims = _prepare(
             params, ev, cfg)
-        s, v = p2m_conv_pallas(patches, w2, v_inf, decay,
+        s, v = p2m_conv_pallas(patches, w2, v_inf, decay, theta,
                                params2["pv_gain"], params2["pv_offset"],
                                block_p=16, **consts)
         s_ref, v_ref = p2m_forward_scan(params, ev, cfg)

@@ -118,6 +118,60 @@ class TestGridExpansion:
         cfgs = engine.expand_leak_configs(grid, LeakageConfig())
         assert len(cfgs) == 1 and cfgs[0].circuit == CircuitConfig.SWITCH
 
+    def test_v_threshold_axis_expands_every_circuit(self):
+        grid = engine.SweepGrid(null_mismatch=(), v_threshold=(0.01, 0.02))
+        cfgs = engine.expand_leak_configs(grid, LeakageConfig())
+        labels = [engine.config_label(c) for c in cfgs]
+        # circuit (c) always prints its mismatch (the PR-1 label contract:
+        # the un-swept base value still describes the variant's circuit)
+        assert labels == ["a@vt=0.01", "a@vt=0.02", "b@vt=0.01", "b@vt=0.02",
+                          "c@m=0.06@vt=0.01", "c@m=0.06@vt=0.02"]
+
+    def test_combined_axes_expand_in_registry_order(self):
+        """mismatch × v_threshold × sigma compose; mismatch still only
+        multiplies circuit (c), and the label suffixes follow registry
+        order (m, vt, s)."""
+        grid = engine.SweepGrid(circuits=(CircuitConfig.NULLIFIED,),
+                                null_mismatch=(0.02, 0.06),
+                                v_threshold=(0.01,), sigma=(0.0, 0.1))
+        cfgs = engine.expand_leak_configs(grid, LeakageConfig())
+        labels = [engine.config_label(c) for c in cfgs]
+        assert labels == ["c@m=0.02@vt=0.01", "c@m=0.02@vt=0.01@s=0.1",
+                          "c@m=0.06@vt=0.01", "c@m=0.06@vt=0.01@s=0.1"]
+
+    def test_sigma_zero_is_identity(self):
+        """sigma = 0 must reproduce the unperturbed circuit EXACTLY: for the
+        weight-independent SWITCH circuit the closed-form tau is the config
+        constant tau_b_ms, so the sigma term must multiply by exactly 1.0
+        (compared against the sigma-free closed form, not a second run of
+        the same code path)."""
+        w = jax.random.normal(jax.random.PRNGKey(3), (3, 3, 2, 8))
+        base = LeakageConfig(circuit=CircuitConfig.SWITCH, sigma=0.0)
+        lk = leakage.kernel_leak_params(w, base)
+        np.testing.assert_array_equal(
+            np.asarray(lk.tau_ms), np.full(8, base.tau_b_ms, np.float32))
+
+    def test_sigma_spreads_taus_log_normally(self):
+        w = jax.random.normal(jax.random.PRNGKey(3), (3, 3, 2, 8))
+        base = LeakageConfig(circuit=CircuitConfig.SWITCH)
+        lk0 = leakage.kernel_leak_params(w, base)
+        lks = leakage.kernel_leak_params(
+            w, dataclasses.replace(base, sigma=0.3))
+        ratio = np.asarray(lks.tau_ms) / np.asarray(lk0.tau_ms)
+        assert not np.allclose(ratio, 1.0)          # taus actually move
+        # shared frozen draw: doubling sigma squares each filter's ratio
+        lks2 = leakage.kernel_leak_params(
+            w, dataclasses.replace(base, sigma=0.6))
+        np.testing.assert_allclose(np.asarray(lks2.tau_ms)
+                                   / np.asarray(lk0.tau_ms),
+                                   ratio ** 2, rtol=1e-5)
+
+    def test_unknown_axis_raises(self):
+        from repro.core import variant_grid
+        with pytest.raises(KeyError):
+            variant_grid.axis("not-an-axis")
+        assert variant_grid.axis("v-threshold").name == "v_threshold"
+
 
 @pytest.fixture(scope="module")
 def grid_result():
@@ -164,11 +218,23 @@ class TestGridRun:
 
     def test_artifact_schema_and_json(self, grid_result):
         art = grid_result.to_artifact()
-        assert art["schema"] == engine.SCHEMA
+        assert art["schema"] == engine.SCHEMA_V3
         assert art["grid"]["labels"] == list(grid_result.labels)
         assert set(art["retention"]["mean_abs_error_v"]) == set(
             grid_result.labels)
         json.dumps(art)   # must be serializable as-is
+
+    def test_records_carry_variant_dict(self, grid_result):
+        """v3: every record resolves every registered axis, including the
+        v_threshold default and the outer-loop n_sub."""
+        for r in grid_result.records:
+            var = r["variant"]
+            assert var["circuit"] == r["circuit"]
+            assert var["null_mismatch"] == r["null_mismatch"]
+            assert var["v_threshold"] == pytest.approx(
+                leakage.DEFAULT_V_THRESHOLD)
+            assert var["sigma"] == 0.0
+            assert var["n_sub"] == r["n_sub"]
 
     def test_retention_ordering_in_records(self, grid_result):
         """Config (c) retains better than (b) better than (a) at 30 ms."""

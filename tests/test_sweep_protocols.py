@@ -1,8 +1,8 @@
 """Fast-grid protocol suite: the frozen-protocol regression against the
-PR-1 engine behavior, the ``p2m-codesign-sweep/v2`` two-protocol artifact,
-and the frozen-vs-unfrozen co-design comparison (one shared pretrain,
-identical batch streams — accuracy differences are the protocol, not the
-data)."""
+PR-1 engine behavior, the merged ``p2m-codesign-sweep/v3`` two-protocol
+artifact, and the frozen-vs-unfrozen co-design comparison (one shared
+pretrain, identical batch streams — accuracy differences are the protocol,
+not the data)."""
 import json
 
 import numpy as np
@@ -78,19 +78,23 @@ class TestFrozenRegression:
             assert 0.0 <= r["accuracy"] <= 1.0
             assert r["protocol"] == "frozen"
 
-    def test_single_protocol_artifact_stays_v1(self, fast_results):
+    def test_single_protocol_artifact_keeps_contract(self, fast_results):
+        """Schema string advances to v3, but the single-protocol artifact
+        keeps the PR-1/PR-2 structural contract (grid block, protocol tag,
+        plain-JSON serializability) on top of the new axis metadata."""
         results, _ = fast_results
         art = results["frozen"].to_artifact()
-        assert art["schema"] == engine.SCHEMA
+        assert art["schema"] == engine.SCHEMA_V3
         assert art["protocol"] == "frozen"
+        assert art["grid"]["axes"] == ["null_mismatch"]   # default axes
         json.dumps(art)
 
 
-class TestV2Artifact:
-    def test_v2_contains_both_protocols(self, fast_results):
+class TestMergedArtifact:
+    def test_contains_both_protocols(self, fast_results):
         results, grid = fast_results
         art = engine.protocols_artifact(results, extra_meta={"wall_s": 0.0})
-        assert art["schema"] == engine.SCHEMA_V2
+        assert art["schema"] == engine.SCHEMA_V3
         assert art["protocols"] == ["frozen", "unfrozen"]
         assert len(art["records"]) == 2 * 3 * len(grid.t_intg_grid_ms)
         assert {r["protocol"] for r in art["records"]} == {
@@ -101,7 +105,7 @@ class TestV2Artifact:
         assert len(cells) == len(art["records"])
         json.dumps(art)   # must serialize as-is
 
-    def test_v2_keeps_grid_and_retention_meta(self, fast_results):
+    def test_keeps_grid_and_retention_meta(self, fast_results):
         results, _ = fast_results
         art = engine.protocols_artifact(results)
         assert art["grid"]["labels"] == list(results["frozen"].labels)
@@ -153,3 +157,22 @@ class TestProtocolComparison:
         for res in results.values():
             for r in res.records:
                 assert r["train_time_per_step_s"] > 0.0
+
+    def test_learned_kernel_retention_surface(self, fast_results):
+        """Unfrozen records carry the per-variant retention SURFACE over the
+        whole T grid, re-linearized around that variant's learned kernel;
+        its entry at the record's own T must equal the scalar
+        retention_err_v, and weight-independent circuits (b)/(c) must match
+        the frozen (pretrained-kernel) surface exactly."""
+        results, grid = fast_results
+        t_grid = list(grid.t_intg_grid_ms)
+        fro = {r["label"]: r["retention_surface_v"]
+               for r in results["frozen"].records}
+        for r in results["unfrozen"].records:
+            surf = r["retention_surface_v"]
+            assert len(surf) == len(t_grid)
+            ti = t_grid.index(r["t_intg_ms"])
+            np.testing.assert_allclose(surf[ti], r["retention_err_v"],
+                                       rtol=1e-5, atol=1e-8)
+            if r["label"] in ("b", "c@m=0.06"):
+                np.testing.assert_allclose(surf, fro[r["label"]], rtol=1e-6)

@@ -1,0 +1,163 @@
+"""Mesh-sharded sweep executor: sharded-vs-single-device record parity
+(via a subprocess with 8 forced host devices, like test_pipeline.py) plus
+in-process unit coverage of the padding/mesh policy in
+``repro.core.sweep_exec``.
+
+The parity bar is EXACT equality: the shard_map body is the same traced
+function as the single-device path, only partitioned, so every non-timing
+record field must match bit-for-bit — including an ``n_cfg`` that does not
+divide the device count (padding lanes compute real-but-discarded work).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.sweep_exec import SweepExecutor, make_executor
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+class TestExecutorPolicy:
+    def test_default_is_single_device(self):
+        ex = make_executor(None)
+        assert ex.devices == 1 and not ex.is_sharded
+
+    def test_make_executor_validates_devices_eagerly(self):
+        """A bad --devices must fail at executor construction, before any
+        compute (not after a paper-scale pretrain)."""
+        if jax.device_count() >= 4:
+            assert make_executor(4).devices == 4
+        else:
+            with pytest.raises(ValueError, match="force_host_platform"):
+                make_executor(4)
+
+    def test_rejects_nonpositive(self):
+        with pytest.raises(ValueError):
+            SweepExecutor(devices=0)
+
+    @pytest.mark.parametrize("n_cfg,devices,padded", [
+        (3, 1, 3), (3, 8, 8), (4, 8, 8), (9, 8, 16), (8, 8, 8)])
+    def test_padded_size(self, n_cfg, devices, padded):
+        assert SweepExecutor(devices=devices).padded_size(n_cfg) == padded
+
+    def test_pad_stacked_repeats_last_variant(self):
+        ex = SweepExecutor(devices=4)
+        tree = {"a": jnp.arange(3.0), "b": jnp.ones((3, 2))}
+        padded = ex.pad_stacked(tree, 3)
+        assert padded["a"].shape == (4,) and padded["b"].shape == (4, 2)
+        np.testing.assert_array_equal(np.asarray(padded["a"]),
+                                      [0.0, 1.0, 2.0, 2.0])
+
+    def test_pad_noop_when_divisible(self):
+        ex = SweepExecutor(devices=2)
+        x = jnp.arange(4.0)
+        assert ex.pad_stacked({"x": x}, 4)["x"] is x
+
+    def test_single_device_shard_is_identity(self):
+        ex = SweepExecutor(devices=1)
+        fn = lambda x: x + 1  # noqa: E731
+        assert ex.shard(fn, in_specs=(None,), out_specs=None) is fn
+
+    def test_mesh_requires_enough_devices(self):
+        want = jax.device_count() + 1
+        with pytest.raises(ValueError, match="force_host_platform"):
+            _ = SweepExecutor(devices=want).mesh
+
+
+@pytest.mark.skipif(jax.device_count() < 2,
+                    reason="needs >1 device (run under XLA_FLAGS="
+                           "--xla_force_host_platform_device_count=8)")
+class TestShardedExecution:
+    """In-process shard_map coverage — active under the CI multi-device
+    step; the full-engine record parity lives in the subprocess test."""
+
+    def test_sharded_matches_unsharded_stacked_fn(self):
+        from repro.core.sweep_exec import P_CFG, P_REP
+        n_dev = jax.device_count()
+        ex = SweepExecutor(devices=n_dev)
+
+        def fn(stacked, shared):
+            return jax.vmap(lambda s: {"y": s["a"] * 2.0 + shared.sum(),
+                                       "n": (s["a"] > 0).sum()})(stacked)
+
+        n_cfg = n_dev + 1                       # force a padded lane
+        stacked = {"a": jnp.arange(float(n_cfg * 3)).reshape(n_cfg, 3) - 2.0}
+        shared = jnp.ones((4,))
+        want = fn(stacked, shared)
+        padded = ex.pad_stacked(stacked, n_cfg)
+        got = jax.jit(ex.shard(fn, in_specs=(P_CFG, P_REP),
+                               out_specs=P_CFG))(padded, shared)
+        for k in want:
+            np.testing.assert_array_equal(np.asarray(got[k][:n_cfg]),
+                                          np.asarray(want[k]))
+
+
+_PARITY_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax
+    from repro.core import sweep as engine
+    from repro.core.codesign import P2MModelConfig, SweepConfig
+    from repro.core.p2m_layer import P2MConfig
+    from repro.core.snn import SpikingCNNConfig
+    from repro.core.sweep_exec import make_executor
+    from repro.data import events as ev_mod
+
+    assert jax.device_count() == 8, jax.device_count()
+    model = P2MModelConfig(
+        p2m=P2MConfig(out_channels=8, n_sub=2, t_intg_ms=120.0),
+        backbone=SpikingCNNConfig(channels=(8, 8, 8, 8), input_hw=(16, 16),
+                                  fc_hidden=16, n_classes=5,
+                                  first_layer_external=True),
+        coarse_window_ms=120.0)
+    data = ev_mod.EventStreamConfig(name="gesture", height=16, width=16,
+                                    n_classes=5, duration_ms=240.0)
+    sweep_cfg = SweepConfig(batch_size=2, pretrain_steps=2, finetune_steps=2,
+                            eval_batches=1, lr_p2m=5e-4)
+    # 3 circuits, mismatch expands only (c): n_cfg = 4. devices=8 pads the
+    # stacked axis 4 -> 8; devices=3 pads 4 -> 6 (non-divisible n_cfg).
+    grid = engine.SweepGrid(t_intg_grid_ms=(30.0, 120.0),
+                            null_mismatch=(0.02, 0.06))
+    TIMING = {"train_time_s", "train_time_per_step_s", "train_time_norm"}
+    for proto in ("frozen", "unfrozen"):
+        base = engine.run_grid(data, model, sweep_cfg, grid,
+                               log=lambda *_: None, protocol=proto)
+        assert [r["label"] for r in base.records[:4]] == [
+            "a", "b", "c@m=0.02", "c@m=0.06"]
+        for dev in (3, 8):
+            sh = engine.run_grid(data, model, sweep_cfg, grid,
+                                 log=lambda *_: None, protocol=proto,
+                                 executor=make_executor(dev))
+            assert len(sh.records) == len(base.records)
+            for a, b in zip(base.records, sh.records):
+                assert set(a) == set(b), (set(a) ^ set(b))
+                for k in a:
+                    if k in TIMING:
+                        assert b[k] > 0.0
+                        continue
+                    assert a[k] == b[k], (proto, dev, k, a["label"],
+                                          a["t_intg_ms"], a[k], b[k])
+        print(proto, "parity ok")
+    print("PARITY_PASS")
+""")
+
+
+@pytest.mark.slow
+def test_sharded_records_match_single_device():
+    """Forced 8-host-device run: frozen AND unfrozen grids, devices in
+    {3, 8} (n_cfg = 4 → both the divisible and the padded case), every
+    non-timing record field exactly equal to the unsharded run, in the
+    same order."""
+    env = dict(os.environ, PYTHONPATH=str(REPO / "src"))
+    env.pop("XLA_FLAGS", None)   # the script must own the device count
+    proc = subprocess.run([sys.executable, "-c", _PARITY_SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=1200)
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    assert "PARITY_PASS" in proc.stdout
