@@ -8,6 +8,7 @@ grows — not the paper's absolute percentages (DESIGN.md §1).
 from __future__ import annotations
 
 from dataclasses import replace
+from pathlib import Path
 
 from repro.core import sweep as engine
 from repro.core.codesign import P2MModelConfig, SweepConfig
@@ -15,31 +16,47 @@ from repro.core.leakage import CircuitConfig, LeakageConfig
 from repro.core.p2m_layer import P2MConfig
 from repro.core.snn import SpikingCNNConfig
 from repro.data import events as ev_mod
+from repro.data import sources as sources_mod
 
 from benchmarks.common import emit, save_json
 
 GRID = (1.0, 10.0, 100.0, 1000.0)     # the paper's exact grid
 
 
-def _model(hw: int, n_classes: int) -> P2MModelConfig:
+def _model(hw: int, n_classes: int,
+           coarse_window_ms: float = 1000.0) -> P2MModelConfig:
     return P2MModelConfig(
         p2m=P2MConfig(out_channels=8, n_sub=2, t_intg_ms=10.0,
                       leak=LeakageConfig(circuit=CircuitConfig.NULLIFIED)),
         backbone=SpikingCNNConfig(channels=(8, 16, 16, 16), input_hw=(hw, hw),
                                   fc_hidden=64, n_classes=n_classes,
                                   first_layer_external=True),
-        coarse_window_ms=1000.0)
+        coarse_window_ms=coarse_window_ms)
 
 
-def _data(kind: str, hw: int):
+def _data(kind: str, hw: int, data_root: str | None = None):
+    """(train source, eval source | None) per table column: the synthetic
+    analytic streams by default; with ``data_root`` set, the file-backed
+    DVS128-Gesture / N-MNIST loaders (repro.data.sources) on the paper's
+    real recordings, evaluating on the held-out split when it exists."""
+    if data_root is not None:
+        sub = Path(data_root) / ("DvsGesture" if kind == "gesture"
+                                 else "N-MNIST")
+        name = "dvs128" if kind == "gesture" else "nmnist"
+        root = str(sub if sub.is_dir() else data_root)
+        train = sources_mod.resolve_dataset(name, hw=hw, data_root=root)
+        ev_src, _ = sources_mod.resolve_eval_dataset(name, hw=hw,
+                                                     data_root=root)
+        return train, ev_src
     if kind == "gesture":
-        return replace(ev_mod.dvs_gesture_like(hw), duration_ms=2000.0)
-    return replace(ev_mod.nmnist_like(hw), duration_ms=2000.0)
+        return replace(ev_mod.dvs_gesture_like(hw), duration_ms=2000.0), None
+    return replace(ev_mod.nmnist_like(hw), duration_ms=2000.0), None
 
 
 def run(fast: bool = False,
         protocols: tuple[str, ...] = ("frozen",),
-        devices: int | None = None) -> dict:
+        devices: int | None = None,
+        data_root: str | None = None) -> dict:
     """``protocols`` extends the table across phase-2 protocols (shared
     pretrain per dataset). The default stays the paper's frozen protocol
     so the benchmark series remains comparable; pass
@@ -47,7 +64,11 @@ def run(fast: bool = False,
     ``devices`` shards the stacked variant axis over a cfg mesh
     (core/sweep_exec.py) — records are identical, only the wall-clock
     `table1/*` timing series moves, which is exactly what a mesh-scaling
-    bench wants to read."""
+    bench wants to read. ``data_root`` swaps both columns onto the
+    file-backed datasets (a directory holding ``DvsGesture`` AEDAT files
+    for the gesture column and an N-MNIST tree for the nmnist column —
+    metric keys gain a ``file/`` prefix so the synthetic series stays
+    continuous)."""
     from repro.core.sweep_exec import make_executor
 
     sweep = SweepConfig(
@@ -56,24 +77,32 @@ def run(fast: bool = False,
         finetune_steps=8 if not fast else 2,
         eval_batches=6 if not fast else 2,
         lr=2e-3)
-    grid = engine.SweepGrid(circuits=(CircuitConfig.NULLIFIED,),
-                            t_intg_grid_ms=GRID if not fast
-                            else (10.0, 1000.0))
+    t_grid = GRID if not fast else (10.0, 1000.0)
     executor = make_executor(devices)
     out = {}
+    src_tag = "" if data_root is None else "file/"
     for kind in ("gesture", "nmnist"):
         hw = 24 if kind == "gesture" else 20
+        data, eval_data = _data(kind, hw, data_root)
+        # short recordings (real N-MNIST ≈ 300 ms) shrink the coarse
+        # window and drop T points that no longer fit the stream
+        dur = data.duration_ms
+        coarse = min(1000.0, dur)
+        fits = lambda t, span: abs(span / t - round(span / t)) < 1e-6  # noqa: E731
+        t_ok = tuple(t for t in t_grid if fits(t, coarse) and fits(t, dur))
+        grid = engine.SweepGrid(circuits=(CircuitConfig.NULLIFIED,),
+                                t_intg_grid_ms=t_ok)
         results = engine.run_protocols(
-            _data(kind, hw), _model(hw, 11 if kind == "gesture" else 10),
+            data, _model(hw, 11 if kind == "gesture" else 10, coarse),
             sweep, grid, protocols=protocols, log=lambda *_: None,
-            executor=executor)
+            executor=executor, eval_data=eval_data)
         out[kind] = engine.protocols_artifact(results)
         for proto, result in results.items():
             # frozen keys stay protocol-less so the metric series is
             # continuous with pre-protocol runs
             tag = "" if proto == "frozen" else f"{proto}/"
             for r in result.records:
-                emit(f"table1/{kind}/{tag}t{int(r['t_intg_ms'])}ms",
+                emit(f"table1/{src_tag}{kind}/{tag}t{int(r['t_intg_ms'])}ms",
                      r["train_time_per_step_s"] * 1e6,
                      f"acc={r['accuracy']:.3f};"
                      f"train_norm={r['train_time_norm']:.2f}")

@@ -4,7 +4,7 @@ every T_INTG and prints the trade-off table per config.
 
     PYTHONPATH=src python examples/codesign_sweep.py [--fast] [--circuit c] \\
         [--protocol frozen|unfrozen|both] [--axes sigma v-threshold] \\
-        [--devices N]
+        [--devices N] [--dataset dvs128 --data-root /data/DvsGesture]
 
 ``--circuit all`` (default) sweeps configs (a), (b) and (c) in one batched
 compile per T_INTG — the engine stacks the variant axis through the leak
@@ -23,6 +23,7 @@ from repro.core import sweep as engine
 from repro.core import variant_grid
 from repro.core.leakage import CircuitConfig
 from repro.core.sweep_exec import make_executor
+from repro.data import sources
 
 
 def main():
@@ -38,11 +39,22 @@ def main():
                          "default value grids")
     ap.add_argument("--devices", type=int, default=None,
                     help="shard the stacked variant axis over N devices")
+    ap.add_argument("--dataset", type=str, default="synthetic-gesture",
+                    choices=["synthetic-gesture", "synthetic-nmnist",
+                             "dvs128", "nmnist"],
+                    help="event source; dvs128/nmnist need --data-root "
+                         "(docs/datasets.md)")
+    ap.add_argument("--data-root", type=str, default=None,
+                    help="dataset directory for file-backed datasets")
     ap.add_argument("--hw", type=int, default=16)
     args = ap.parse_args()
 
-    data, model, sweep_cfg, grid = engine.paper_setup(fast=args.fast,
-                                                      hw=args.hw)
+    data, model, sweep_cfg, grid = engine.paper_setup(
+        fast=args.fast, hw=args.hw, dataset=args.dataset,
+        data_root=args.data_root)
+    # file-backed datasets eval on their held-out split when it exists
+    eval_data, _ = sources.resolve_eval_dataset(
+        args.dataset, hw=args.hw, data_root=args.data_root)
     if args.circuit != "all":
         grid = replace(grid, circuits=(CircuitConfig(args.circuit),))
     for name in args.axes or []:
@@ -51,7 +63,7 @@ def main():
     results = engine.run_protocols(
         data, model, sweep_cfg, grid,
         protocols=engine.resolve_protocols(args.protocol),
-        executor=make_executor(args.devices))
+        executor=make_executor(args.devices), eval_data=eval_data)
     for proto, result in results.items():
         # one table per (label, n_sub) series — the normalization unit
         series = sorted({(r["label"], r["n_sub"]) for r in result.records})

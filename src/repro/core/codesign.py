@@ -25,7 +25,6 @@ from repro.core import p2m_layer, snn
 from repro.core.leakage import CircuitConfig
 from repro.core.p2m_layer import P2MConfig
 from repro.core.snn import SpikingCNNConfig
-from repro.data import events as events_mod
 from repro.optim import clip_by_global_norm
 from repro.optim.optimizers import apply_updates
 
@@ -134,11 +133,16 @@ class SweepConfig:
     # None → use ``lr`` (exactly the single-optimizer joint update).
     lr_p2m: float | None = None
     seed: int = 0
+    # dataset selection (repro.data.sources.resolve_dataset): a name from
+    # sources.DATASETS; file-backed names need data_root. Used when the
+    # caller passes no explicit data_cfg/EventSource (run_sweep below).
+    dataset: str = "synthetic-gesture"
+    data_root: str | None = None
 
 
-def run_sweep(data_cfg: events_mod.EventStreamConfig,
-              model_cfg: P2MModelConfig,
-              sweep: SweepConfig,
+def run_sweep(data_cfg: Any = None,
+              model_cfg: P2MModelConfig | None = None,
+              sweep: SweepConfig = SweepConfig(),
               circuit: CircuitConfig = CircuitConfig.NULLIFIED,
               log: Any = print,
               protocol: str = "frozen",
@@ -146,6 +150,11 @@ def run_sweep(data_cfg: events_mod.EventStreamConfig,
     """Run the co-design T_INTG sweep for ONE circuit config. Returns one
     record per grid point with accuracy, wall-clock train time, bandwidth
     ratio, and backend energies.
+
+    ``data_cfg`` is any ``repro.data.sources.EventSource`` or a synthetic
+    ``EventStreamConfig``; pass ``None`` to resolve it from
+    ``sweep.dataset`` / ``sweep.data_root`` (the resolution follows the
+    model's backbone input grid).
 
     ``protocol`` picks the phase-2 variant: ``"frozen"`` (paper §3, layer 1
     fixed after phase 1) or ``"unfrozen"`` (layer 1 trains jointly with the
@@ -167,7 +176,14 @@ def run_sweep(data_cfg: events_mod.EventStreamConfig,
     """
     from repro.core import sweep as sweep_engine
     from repro.core.sweep_exec import make_executor
+    from repro.data import sources as sources_mod
 
+    if model_cfg is None:
+        model_cfg = P2MModelConfig()
+    if data_cfg is None:
+        data_cfg = sources_mod.resolve_dataset(
+            sweep.dataset, hw=model_cfg.backbone.input_hw[0],
+            data_root=sweep.data_root)
     mcfg = replace(model_cfg,
                    p2m=replace(model_cfg.p2m,
                                leak=replace(model_cfg.p2m.leak,

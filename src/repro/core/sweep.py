@@ -69,7 +69,7 @@ from repro.core import energy as energy_mod
 from repro.core import leakage, p2m_layer, snn, variant_grid
 from repro.core.leakage import CircuitConfig, LeakageConfig
 from repro.core.sweep_exec import P_CFG, P_REP, SweepExecutor
-from repro.data import events as events_mod
+from repro.data import sources as sources_mod
 from repro.optim import adamw, clip_by_global_norm
 from repro.optim.optimizers import Optimizer, apply_updates
 
@@ -503,9 +503,12 @@ def make_batched_eval(model_cfg, leak_cfgs: tuple[LeakageConfig, ...],
 def pretrain_backbone(key: jax.Array, data_cfg, model_cfg, sweep,
                       log: Any = print) -> tuple[Params, dict, jax.Array]:
     """Phase-1 pretrain at the longest T_INTG with an IDEAL (no-leak)
-    circuit — shared by every grid point."""
+    circuit — shared by every grid point. ``data_cfg`` is any
+    :class:`~repro.data.sources.EventSource` (or a bare synthetic
+    ``EventStreamConfig``, wrapped on entry)."""
     from repro.core import codesign
 
+    source = sources_mod.as_source(data_cfg)
     t_long = max(sweep.t_intg_grid_ms)
     pre_cfg = replace(
         model_cfg,
@@ -518,8 +521,8 @@ def pretrain_backbone(key: jax.Array, data_cfg, model_cfg, sweep,
     step_fn = codesign.make_train_step(pre_cfg, opt, freeze_p2m=False)
     for i in range(sweep.pretrain_steps):
         key, kb = jax.random.split(key)
-        ev, labels = events_mod.sample_batch(kb, data_cfg, sweep.batch_size,
-                                             t_long, n_sub=pre_cfg.p2m.n_sub)
+        ev, labels = source.sample_batch(kb, sweep.batch_size, t_long,
+                                         n_sub=pre_cfg.p2m.n_sub)
         params, opt_state, state, m, _ = step_fn(params, opt_state, state,
                                                  ev, labels)
         if i % 10 == 0:
@@ -583,12 +586,16 @@ def _normalize(records: list[dict]) -> None:
                 r["backend_energy_p2m_j"], 1e-30)
 
 
-def run_grid(data_cfg: events_mod.EventStreamConfig, model_cfg,
+def run_grid(data_cfg, model_cfg,
              sweep, grid: SweepGrid, log: Any = print, *,
              protocol: str = "frozen",
              pretrained: tuple | None = None,
-             executor: SweepExecutor | None = None) -> GridResult:
-    """Run the batched co-design sweep. ``model_cfg`` is a
+             executor: SweepExecutor | None = None,
+             eval_data=None) -> GridResult:
+    """Run the batched co-design sweep. ``data_cfg`` is any
+    :class:`~repro.data.sources.EventSource` — file-backed
+    (DVS128-Gesture / N-MNIST) or synthetic (a bare
+    ``events.EventStreamConfig`` is wrapped on entry) — ``model_cfg`` is a
     codesign.P2MModelConfig, ``sweep`` a codesign.SweepConfig (its
     ``t_intg_grid_ms`` is superseded by ``grid.t_intg_grid_ms``).
 
@@ -601,9 +608,17 @@ def run_grid(data_cfg: events_mod.EventStreamConfig, model_cfg,
     optionally injects a shared ``(params, state, key)`` phase-1 result
     (see :func:`run_protocols`). ``executor`` shards the stacked variant
     axis over a device mesh (``SweepExecutor(devices=n)``); the records
-    are identical to the single-device run.
+    are identical to the single-device run. ``eval_data`` optionally
+    draws the accuracy-eval batches from a DIFFERENT source than the
+    finetune batches — pass a file-backed dataset's held-out split
+    (``resolve_dataset(..., split="val")``) so record accuracies are
+    measured out-of-sample; ``None`` keeps the synthetic-generator
+    behavior (train and eval sample the same stream).
     """
     _check_protocol(protocol)
+    source = sources_mod.as_source(data_cfg)
+    eval_source = (sources_mod.as_source(eval_data)
+                   if eval_data is not None else source)
     ex = executor or SweepExecutor()
     leak_cfgs = expand_leak_configs(grid, model_cfg.p2m.leak)
     labels = tuple(config_label(lc) for lc in leak_cfgs)
@@ -616,7 +631,7 @@ def run_grid(data_cfg: events_mod.EventStreamConfig, model_cfg,
     if pretrained is None:
         key = jax.random.PRNGKey(sweep.seed)
         pre_params, pre_state, key = pretrain_backbone(
-            key, data_cfg, model_cfg, sweep, log)
+            key, source, model_cfg, sweep, log)
     else:
         pre_params, pre_state, key = pretrained
 
@@ -666,16 +681,16 @@ def run_grid(data_cfg: events_mod.EventStreamConfig, model_cfg,
         # warmup step: exclude jit compile from the train-time measurement
         # (the paper's training-time column is steady-state epochs)
         key, kw = jax.random.split(key)
-        ev_w, lab_w = events_mod.sample_batch(kw, data_cfg, sweep.batch_size,
-                                              t_ms, n_sub=ns)
+        ev_w, lab_w = source.sample_batch(kw, sweep.batch_size, t_ms,
+                                          n_sub=ns)
         p2m_ps, bb_params_s, opt_state_s, state_s, m, _ = step_fn(
             p2m_ps, bb_params_s, opt_state_s, state_s, ev_w, lab_w)
         jax.block_until_ready(m["loss"])
         t0 = time.perf_counter()
         for _ in range(sweep.finetune_steps):
             key, kb = jax.random.split(key)
-            ev, lab = events_mod.sample_batch(kb, data_cfg, sweep.batch_size,
-                                              t_ms, n_sub=ns)
+            ev, lab = source.sample_batch(kb, sweep.batch_size, t_ms,
+                                          n_sub=ns)
             p2m_ps, bb_params_s, opt_state_s, state_s, m, _ = step_fn(
                 p2m_ps, bb_params_s, opt_state_s, state_s, ev, lab)
         jax.block_until_ready(m["loss"])
@@ -707,8 +722,8 @@ def run_grid(data_cfg: events_mod.EventStreamConfig, model_cfg,
         aux_sum: list[dict | None] = [None] * G
         for _ in range(sweep.eval_batches):
             key, kb = jax.random.split(key)
-            ev, lab = events_mod.sample_batch(kb, data_cfg, sweep.batch_size,
-                                              t_ms, n_sub=ns)
+            ev, lab = eval_source.sample_batch(kb, sweep.batch_size, t_ms,
+                                               n_sub=ns)
             metrics, aux, l1 = eval_fn(p2m_ps, bb_params_s, state_s,
                                        ev, lab)
             in_events += float(l1["events/in"])
@@ -765,23 +780,27 @@ def run_grid(data_cfg: events_mod.EventStreamConfig, model_cfg,
                       grid=grid, protocol=protocol)
 
 
-def run_protocols(data_cfg: events_mod.EventStreamConfig, model_cfg,
+def run_protocols(data_cfg, model_cfg,
                   sweep, grid: SweepGrid,
                   protocols: tuple[str, ...] = PROTOCOLS,
                   log: Any = print,
-                  executor: SweepExecutor | None = None
-                  ) -> dict[str, GridResult]:
+                  executor: SweepExecutor | None = None,
+                  eval_data=None) -> dict[str, GridResult]:
     """Run the grid under several phase-2 protocols off ONE shared phase-1
-    pretrain. The post-pretrain PRNG key is reused for every protocol, so
+    pretrain. ``data_cfg`` is any event source and ``eval_data`` an
+    optional held-out eval source (see :func:`run_grid`). The
+    post-pretrain PRNG key is reused for every protocol, so
     each one sees identical finetune/eval batches — accuracy differences
     between records are the protocol, not the data."""
     for p in protocols:
         _check_protocol(p)
+    data_cfg = sources_mod.as_source(data_cfg)
     sweep = replace(sweep, t_intg_grid_ms=grid.t_intg_grid_ms)
     key = jax.random.PRNGKey(sweep.seed)
     pretrained = pretrain_backbone(key, data_cfg, model_cfg, sweep, log)
     return {p: run_grid(data_cfg, model_cfg, sweep, grid, log=log,
-                        protocol=p, pretrained=pretrained, executor=executor)
+                        protocol=p, pretrained=pretrained, executor=executor,
+                        eval_data=eval_data)
             for p in protocols}
 
 
@@ -805,24 +824,47 @@ def protocols_artifact(results: dict[str, GridResult],
 # canonical paper-scale setup (shared by launch/sweep.py and examples)
 # ---------------------------------------------------------------------------
 
-def paper_setup(fast: bool = False, hw: int = 16):
+def paper_setup(fast: bool = False, hw: int = 16,
+                dataset: str = "synthetic-gesture",
+                data_root: str | None = None):
     """Small-but-real defaults reproducing the paper's directional claims
-    on CPU in minutes: synthetic DVS-gesture-like stream + the P²M model."""
+    on CPU in minutes: an event source (synthetic analytic stream by
+    default; ``dataset="dvs128"``/``"nmnist"`` + ``data_root`` select the
+    file-backed loaders, see docs/datasets.md) + the P²M model sized to
+    it (class count from the source). Short-recording datasets (real
+    N-MNIST spans ~300 ms) shrink the backbone coarse window to the
+    stream duration and drop T_INTG grid points that no longer fit."""
     from repro.core.codesign import P2MModelConfig, SweepConfig
     from repro.core.p2m_layer import P2MConfig
     from repro.core.snn import SpikingCNNConfig
 
+    data = sources_mod.resolve_dataset(dataset, hw=hw, data_root=data_root)
+    coarse_ms = min(1000.0, data.duration_ms)
     model = P2MModelConfig(
         p2m=P2MConfig(out_channels=8, n_sub=2),
         backbone=SpikingCNNConfig(channels=(8, 16, 16, 16),
                                   input_hw=(hw, hw), fc_hidden=64,
-                                  n_classes=11, first_layer_external=True),
-        coarse_window_ms=1000.0)
-    data = replace(events_mod.dvs_gesture_like(hw), duration_ms=2000.0)
+                                  n_classes=data.n_classes,
+                                  first_layer_external=True),
+        coarse_window_ms=coarse_ms)
     sweep_cfg = SweepConfig(
         batch_size=2 if fast else 4,
         pretrain_steps=4 if fast else 30,
         finetune_steps=2 if fast else 6,
-        eval_batches=2 if fast else 4)
+        eval_batches=2 if fast else 4,
+        dataset=dataset, data_root=data_root)
     grid = fast_grid() if fast else paper_grid()
+    t_ok = tuple(t for t in grid.t_intg_grid_ms
+                 if _divides(t, coarse_ms) and _divides(t, data.duration_ms))
+    if not t_ok:
+        raise ValueError(
+            f"no T_INTG grid point fits dataset {dataset!r} "
+            f"(duration {data.duration_ms:g} ms, coarse window "
+            f"{coarse_ms:g} ms); pass --t-intg values that divide both")
+    grid = replace(grid, t_intg_grid_ms=t_ok)
     return data, model, sweep_cfg, grid
+
+
+def _divides(t_ms: float, span_ms: float) -> bool:
+    n = span_ms / t_ms
+    return abs(n - round(n)) < 1e-6 and round(n) >= 1

@@ -1,0 +1,62 @@
+"""On-disk binned-frame cache for file-backed event sources.
+
+Binning a long recording is the expensive part of file-backed sampling
+(parse + scatter over millions of events); the binned fine-slot histogram
+is tiny. The cache stores one ``.npy`` per (sample, binning) under
+
+    <cache_root>/<dataset>/t<slot_us>us_<H>x<W>_n<slots>/<sample_id>.npy
+
+so the key is exactly (dataset, T_INTG split into fine slots, target
+resolution, slot count) — a second sweep at the same T_INTG/resolution
+never re-parses a file, and two different T_INTG values coexist side by
+side. ``sample_id`` is a sanitized, hash-suffixed form of the sample's
+logical id (relative path + trial index), collision-safe across layouts.
+
+The default cache root is ``<data_root>/.p2m-frame-cache`` (gitignored).
+"""
+from __future__ import annotations
+
+import hashlib
+import re
+from pathlib import Path
+
+import numpy as np
+
+CACHE_DIRNAME = ".p2m-frame-cache"
+
+
+def _safe_id(sample_id: str) -> str:
+    tag = hashlib.sha1(sample_id.encode()).hexdigest()[:12]
+    stem = re.sub(r"[^A-Za-z0-9_.-]+", "_", sample_id)[-48:]
+    return f"{stem}__{tag}"
+
+
+class FrameCache:
+    """Tiny get-or-build cache of per-sample binned frames."""
+
+    def __init__(self, root: str | Path, dataset: str):
+        self.root = Path(root)
+        self.dataset = dataset
+
+    def path(self, sample_id: str, *, slot_us: int, out_hw: tuple[int, int],
+             n_total: int) -> Path:
+        h, w = out_hw
+        d = self.root / self.dataset / f"t{slot_us}us_{h}x{w}_n{n_total}"
+        return d / f"{_safe_id(sample_id)}.npy"
+
+    def get_or_build(self, sample_id: str, build, *, slot_us: int,
+                     out_hw: tuple[int, int], n_total: int) -> np.ndarray:
+        """Return the cached ``[n_total, H, W, 2]`` frames for a sample,
+        calling ``build()`` (→ float32 ndarray) on a miss. Writes are
+        atomic-enough for single-process sweeps (tmp + rename)."""
+        p = self.path(sample_id, slot_us=slot_us, out_hw=out_hw,
+                      n_total=n_total)
+        if p.exists():
+            return np.load(p)
+        frames = np.asarray(build(), dtype=np.float32)
+        assert frames.shape == (n_total, *out_hw, 2), frames.shape
+        p.parent.mkdir(parents=True, exist_ok=True)
+        tmp = p.with_suffix(".tmp.npy")
+        np.save(tmp, frames)
+        tmp.replace(p)
+        return frames

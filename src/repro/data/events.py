@@ -1,19 +1,12 @@
-"""Synthetic DVS event streams (stand-in for DVS128-Gesture / NMNIST).
+"""Synthetic DVS event streams — the offline fallback event source.
 
-Real datasets are unavailable offline, so we generate event streams with DVS
-statistics from analytic scenes: a DVS pixel emits ON (OFF) events when log
-intensity rises (falls) past a contrast threshold; the expected event count
-over an interval is the positive (negative) variation of intensity along the
-path, divided by the threshold. We model class-conditioned moving scenes:
+Class-conditioned analytic scenes with DVS statistics standing in for
+DVS128-Gesture (``gesture`` family) and N-MNIST (``nmnist`` family); the
+full generative model and its statistics are documented in
+docs/datasets.md ("The synthetic fallback"). The file-backed real-dataset
+loaders and the :class:`~repro.data.sources.EventSource` seam that
+unifies them with this generator live in ``repro.data.sources``.
 
-  * ``gesture``-family (DVS128-Gesture-like): an oriented Gaussian blob whose
-    motion pattern encodes the class — rotation direction/speed and
-    translation axis vary with the label (11 classes like arm-gesture
-    categories).
-  * ``nmnist``-family: a 2-bar glyph (bar angles encode the digit) undergoing
-    the NMNIST 3-saccade camera motion.
-
-Counts are Poisson; polarity split by the sign of the intensity change.
 Generation scans over integration slots so memory stays bounded at any
 temporal resolution (T_INTG = 1 ms ⇒ thousands of slots).
 """

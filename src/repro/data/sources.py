@@ -1,0 +1,393 @@
+"""Event sources: one contract over synthetic and file-backed DVS streams.
+
+The sweep engine touches event data through exactly one seam:
+
+    events, labels = source.sample_batch(key, batch_size, t_intg_ms, n_sub)
+
+with ``events`` float32 ``[B, n_slots, n_sub, H, W, 2]`` (ON/OFF counts on
+the last axis) and ``n_slots = round(duration_ms / t_intg_ms)``. This
+module defines that contract (:class:`EventSource`), the adapter that
+keeps the analytic generator working unchanged (:class:`SyntheticSource`
+over ``repro.data.events``), and the file-backed sources for the paper's
+real workloads: DVS128-Gesture (AEDAT 3.1 trials sliced by the
+``*_labels.csv`` gesture windows) and N-MNIST (per-digit ``.bin`` files).
+
+File-backed sources stream each recording through the chunked parsers
+(repro.data.formats), fold it into fine-slot frames with the streaming
+binner (repro.data.binning) at the requested T_INTG, and memoize the
+result in the on-disk frame cache (repro.data.cache) keyed by
+(dataset, slot width, resolution). Train/val membership is a
+deterministic hash of each sample's identity — stable across runs,
+machines, and directory enumeration order. See docs/datasets.md.
+"""
+from __future__ import annotations
+
+import csv
+import hashlib
+from dataclasses import dataclass, field, replace
+from pathlib import Path
+from typing import Callable, Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import events as events_mod
+from repro.data.binning import bin_chunks, slot_us_for
+from repro.data.cache import CACHE_DIRNAME, FrameCache
+from repro.data.formats import (
+    DVS128_SENSOR_HW, EventChunk, NMNIST_SENSOR_HW, read_aedat31,
+    read_nmnist_bin,
+)
+
+DATASETS = ("synthetic-gesture", "synthetic-nmnist", "dvs128", "nmnist")
+SPLITS = ("train", "val", "all")
+VAL_PERCENT = 20                     # deterministic hash-split fraction
+
+# default stream duration per dataset (resolve_dataset(duration_ms=None)):
+# DVS128-Gesture trials run ~6 s (we crop a 2 s window, matching the
+# synthetic generator); real N-MNIST recordings are 3 saccades ≈ 300 µs·1e3
+# — spanning 2 s would make ~85% of the slots empty padding.
+DATASET_DURATIONS_MS = {"synthetic-gesture": 2000.0,
+                        "synthetic-nmnist": 2000.0,
+                        "dvs128": 2000.0,
+                        "nmnist": 300.0}
+
+
+class EventSource:
+    """The engine-facing event-stream contract (see module docstring).
+
+    Concrete sources expose ``name``, ``height``, ``width``,
+    ``n_classes`` and ``duration_ms`` plus the two samplers. Everything
+    downstream of the seam (sweep engine, codesign harness, examples,
+    benchmarks) is source-agnostic.
+    """
+    name: str
+    height: int
+    width: int
+    n_classes: int
+    duration_ms: float
+
+    def n_slots(self, t_intg_ms: float) -> int:
+        n = self.duration_ms / t_intg_ms
+        if abs(n - round(n)) > 1e-6:
+            raise ValueError(f"T_INTG {t_intg_ms} ms does not divide the "
+                             f"stream duration {self.duration_ms} ms")
+        return int(round(n))
+
+    def sample_batch(self, key: jax.Array, batch_size: int,
+                     t_intg_ms: float, n_sub: int = 1
+                     ) -> tuple[jax.Array, jax.Array]:
+        raise NotImplementedError
+
+    def sample_batch_with_labels(self, key: jax.Array, labels: jax.Array,
+                                 t_intg_ms: float, n_sub: int = 1
+                                 ) -> tuple[jax.Array, jax.Array]:
+        raise NotImplementedError
+
+
+class SyntheticSource(EventSource):
+    """Adapter: the analytic generator (repro.data.events) behind the
+    :class:`EventSource` contract — the offline fallback for every
+    file-backed dataset."""
+
+    def __init__(self, cfg: events_mod.EventStreamConfig):
+        self.cfg = cfg
+        self.name = cfg.name
+        self.height, self.width = cfg.height, cfg.width
+        self.n_classes = cfg.n_classes
+        self.duration_ms = cfg.duration_ms
+
+    def sample_batch(self, key, batch_size, t_intg_ms, n_sub=1):
+        return events_mod.sample_batch(key, self.cfg, batch_size,
+                                       t_intg_ms, n_sub=n_sub)
+
+    def sample_batch_with_labels(self, key, labels, t_intg_ms, n_sub=1):
+        return events_mod.sample_batch_with_labels(key, self.cfg, labels,
+                                                   t_intg_ms, n_sub=n_sub)
+
+
+def as_source(data) -> EventSource:
+    """Normalize the engine's ``data_cfg`` argument: an
+    :class:`EventSource` passes through, a bare
+    :class:`~repro.data.events.EventStreamConfig` (every pre-dataset
+    caller) is wrapped in :class:`SyntheticSource`."""
+    if isinstance(data, EventSource):
+        return data
+    if isinstance(data, events_mod.EventStreamConfig):
+        return SyntheticSource(data)
+    raise TypeError(f"expected EventSource or EventStreamConfig, "
+                    f"got {type(data).__name__}")
+
+
+# ---------------------------------------------------------------------------
+# file-backed sources
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class FileSample:
+    """One labeled recording window: ``chunks()`` streams its events
+    (already time-limited where the format allows), ``t0_us`` is the
+    window start subtracted at binning time. ``split_id`` is the identity
+    the train/val hash runs on — defaults to ``sample_id``; recordings
+    holding many windows set it to the recording path so every window
+    lands in the same split (no leakage across splits)."""
+    sample_id: str
+    label: int
+    chunks: Callable[[], Iterator[EventChunk]] = field(compare=False)
+    t0_us: int = 0
+    # labeled window end (absolute µs): events at/after it belong to the
+    # next sample and are clipped out even when the source duration spans
+    # further. None → unbounded (whole-recording samples like N-MNIST).
+    t1_us: int | None = None
+    split_id: str | None = None
+
+
+def split_of(sample_id: str, val_percent: int = VAL_PERCENT) -> str:
+    """Deterministic train/val membership: a stable hash of the sample's
+    identity (NOT of enumeration order or absolute paths), so the split
+    is reproducible across runs and machines."""
+    h = int.from_bytes(hashlib.sha1(sample_id.encode()).digest()[:4], "big")
+    return "val" if h % 100 < val_percent else "train"
+
+
+class FileEventSource(EventSource):
+    """Shared machinery of the file-backed sources: deterministic split
+    filtering, per-sample cached binning, and the two samplers."""
+
+    def __init__(self, name: str, samples: list[FileSample], *,
+                 sensor_hw: tuple[int, int], hw: int, n_classes: int,
+                 duration_ms: float, split: str = "train",
+                 cache: FrameCache | None = None):
+        if split not in SPLITS:
+            raise ValueError(f"split {split!r} not in {SPLITS}")
+        if not samples:
+            raise ValueError(f"dataset {name!r}: no samples found")
+        self.name = name
+        self.sensor_hw = sensor_hw
+        self.height = self.width = hw
+        self.n_classes = n_classes
+        self.duration_ms = duration_ms
+        self.split = split
+        self.cache = cache
+        self.samples = sorted(
+            (s for s in samples
+             if split == "all"
+             or split_of(s.split_id or s.sample_id) == split),
+            key=lambda s: s.sample_id)
+        if not self.samples:
+            raise ValueError(f"dataset {name!r}: split {split!r} is empty "
+                             f"({len(samples)} samples total)")
+        self._by_class: dict[int, list[int]] = {}
+        for i, s in enumerate(self.samples):
+            self._by_class.setdefault(s.label, []).append(i)
+
+    def _sample_frames(self, i: int, slot_us: int, n_total: int
+                       ) -> np.ndarray:
+        s = self.samples[i]
+        build = lambda: bin_chunks(          # noqa: E731
+            s.chunks(), n_total=n_total, slot_us=slot_us,
+            sensor_hw=self.sensor_hw, out_hw=(self.height, self.width),
+            t0_us=s.t0_us, t_stop_us=s.t1_us)
+        if self.cache is None:
+            return build()
+        return self.cache.get_or_build(
+            s.sample_id, build, slot_us=slot_us,
+            out_hw=(self.height, self.width), n_total=n_total)
+
+    def _gather(self, idx: np.ndarray, t_intg_ms: float, n_sub: int
+                ) -> tuple[jax.Array, jax.Array]:
+        n_slots = self.n_slots(t_intg_ms)
+        slot_us = slot_us_for(t_intg_ms, n_sub)
+        n_total = n_slots * n_sub
+        frames = np.stack([self._sample_frames(int(i), slot_us, n_total)
+                           for i in idx])
+        ev = frames.reshape((len(idx), n_slots, n_sub,
+                             self.height, self.width, 2))
+        labels = np.asarray([self.samples[int(i)].label for i in idx],
+                            dtype=np.int32)
+        return jnp.asarray(ev), jnp.asarray(labels)
+
+    def sample_batch(self, key, batch_size, t_intg_ms, n_sub=1):
+        idx = np.asarray(jax.random.randint(key, (batch_size,), 0,
+                                            len(self.samples)))
+        return self._gather(idx, t_intg_ms, n_sub)
+
+    def sample_batch_with_labels(self, key, labels, t_intg_ms, n_sub=1):
+        labels = np.asarray(labels)
+        keys = jax.random.split(key, len(labels))
+        idx = []
+        for lab, k in zip(labels, keys):
+            pool = self._by_class.get(int(lab))
+            if not pool:
+                raise ValueError(f"dataset {self.name!r}: no {self.split} "
+                                 f"samples for class {int(lab)}")
+            j = int(jax.random.randint(k, (), 0, len(pool)))
+            idx.append(pool[j])
+        ev, _ = self._gather(np.asarray(idx), t_intg_ms, n_sub)
+        return ev, jnp.asarray(labels.astype(np.int32))
+
+
+def _make_cache(root: Path, dataset: str,
+                cache_root: str | Path | None) -> FrameCache:
+    return FrameCache(cache_root if cache_root is not None
+                      else root / CACHE_DIRNAME, dataset)
+
+
+class DVSGestureSource(FileEventSource):
+    """DVS128-Gesture: AEDAT 3.1 recordings plus companion
+    ``<name>_labels.csv`` files (``class,startTime_usec,endTime_usec``
+    rows, classes 1-indexed); each labeled window is one sample, cropped
+    to the source ``duration_ms``. If the IBM distribution's
+    ``trials_to_train.txt`` / ``trials_to_test.txt`` are present they
+    define the split; otherwise a per-recording hash does (all windows
+    of one recording land in the same split — no subject leakage)."""
+
+    N_CLASSES = 11
+
+    def __init__(self, root: str | Path, *, hw: int = 16,
+                 duration_ms: float = 2000.0, split: str = "train",
+                 cache_root: str | Path | None = None):
+        root = Path(root)
+        listed = self._listed_trials(root)
+        samples = []
+        for aedat in sorted(root.rglob("*.aedat")):
+            csv_path = aedat.with_name(aedat.stem + "_labels.csv")
+            if not csv_path.exists():
+                continue
+            rel = aedat.relative_to(root).as_posix()
+            for k, (cls, t0, t1) in enumerate(self._read_labels(csv_path)):
+                samples.append(FileSample(
+                    sample_id=f"{rel}#{k}", label=cls - 1,
+                    chunks=(lambda p=aedat, stop=t1:
+                            read_aedat31(p, t_stop_us=stop)),
+                    t0_us=t0, t1_us=t1, split_id=rel))
+        if listed is not None:
+            want = listed["train" if split != "val" else "test"]
+            if split != "all":
+                samples = [s for s in samples
+                           if s.sample_id.split("#")[0].split("/")[-1]
+                           in want]
+            split_eff = "all"
+        else:
+            split_eff = split
+        super().__init__("dvs128", samples, sensor_hw=DVS128_SENSOR_HW,
+                         hw=hw, n_classes=self.N_CLASSES,
+                         duration_ms=duration_ms, split=split_eff,
+                         cache=_make_cache(root, "dvs128", cache_root))
+
+
+    @staticmethod
+    def _listed_trials(root: Path) -> dict[str, set[str]] | None:
+        tr, te = root / "trials_to_train.txt", root / "trials_to_test.txt"
+        if not (tr.exists() and te.exists()):
+            return None
+        return {"train": {ln.strip() for ln in tr.read_text().splitlines()
+                          if ln.strip()},
+                "test": {ln.strip() for ln in te.read_text().splitlines()
+                         if ln.strip()}}
+
+    @staticmethod
+    def _read_labels(path: Path) -> list[tuple[int, int, int]]:
+        rows = []
+        with open(path, newline="") as f:
+            for row in csv.reader(f):
+                if not row or not row[0].strip().isdigit():
+                    continue    # header / blank lines
+                rows.append((int(row[0]), int(row[1]), int(row[2])))
+        return rows
+
+
+class NMNISTSource(FileEventSource):
+    """N-MNIST: ``<root>/(Train|Test)/<digit>/*.bin`` (the released
+    layout) or a flat ``<root>/<digit>/*.bin``. With Train/Test present,
+    ``split="train"``/``"val"`` map onto them; otherwise the
+    deterministic hash split applies per file."""
+
+    N_CLASSES = 10
+
+    def __init__(self, root: str | Path, *, hw: int = 16,
+                 duration_ms: float = 2000.0, split: str = "train",
+                 cache_root: str | Path | None = None):
+        root = Path(root)
+        has_dirs = (root / "Train").is_dir()
+        if has_dirs:
+            bases = ([root / "Train", root / "Test"] if split == "all"
+                     else [root / ("Train" if split == "train" else "Test")])
+            split_eff = "all"
+        else:
+            bases = [root]
+            split_eff = split
+        samples = []
+        for base in bases:
+            for b in sorted(base.rglob("*.bin")):
+                try:
+                    label = int(b.parent.name)
+                except ValueError:
+                    continue
+                if not 0 <= label < self.N_CLASSES:
+                    continue
+                samples.append(FileSample(
+                    sample_id=b.relative_to(root).as_posix(), label=label,
+                    chunks=lambda p=b: read_nmnist_bin(p)))
+        super().__init__("nmnist", samples, sensor_hw=NMNIST_SENSOR_HW,
+                         hw=hw, n_classes=self.N_CLASSES,
+                         duration_ms=duration_ms, split=split_eff,
+                         cache=_make_cache(root, "nmnist", cache_root))
+
+
+
+# ---------------------------------------------------------------------------
+# dataset registry
+# ---------------------------------------------------------------------------
+
+def resolve_dataset(name: str, *, hw: int = 16, data_root: str | None = None,
+                    duration_ms: float | None = None, split: str = "train",
+                    cache_root: str | Path | None = None) -> EventSource:
+    """CLI/`SweepConfig` dataset name → an :class:`EventSource`.
+
+    ``synthetic-*`` names need no files (the analytic generator);
+    ``dvs128`` / ``nmnist`` need ``data_root`` pointing at the dataset
+    directory (see docs/datasets.md for the expected layouts).
+    ``duration_ms=None`` picks the dataset's natural default
+    (:data:`DATASET_DURATIONS_MS` — note real N-MNIST recordings only
+    span ~300 ms).
+    """
+    if duration_ms is None:
+        if name not in DATASET_DURATIONS_MS:
+            raise ValueError(f"unknown dataset {name!r} (expected one of "
+                             f"{DATASETS})")
+        duration_ms = DATASET_DURATIONS_MS[name]
+    if name == "synthetic-gesture":
+        return SyntheticSource(replace(events_mod.dvs_gesture_like(hw),
+                                       duration_ms=duration_ms))
+    if name == "synthetic-nmnist":
+        return SyntheticSource(replace(events_mod.nmnist_like(hw),
+                                       duration_ms=duration_ms))
+    if name in ("dvs128", "nmnist"):
+        if data_root is None:
+            raise ValueError(f"dataset {name!r} is file-backed: pass "
+                             f"--data-root (or data_root=) pointing at it, "
+                             f"or use its synthetic-* fallback")
+        cls = DVSGestureSource if name == "dvs128" else NMNISTSource
+        return cls(data_root, hw=hw, duration_ms=duration_ms, split=split,
+                   cache_root=cache_root)
+    raise ValueError(f"unknown dataset {name!r} (expected one of "
+                     f"{DATASETS})")
+
+
+def resolve_eval_dataset(name: str, **kwargs
+                         ) -> tuple[EventSource | None, str | None]:
+    """Held-out eval source for a file-backed dataset: ``(val-split
+    source, "val")`` when the split is non-empty, ``(None, "train")``
+    when it is (tiny fixtures — the engine then evals on the training
+    stream), ``(None, None)`` for synthetic datasets (one generative
+    stream, no split notion). Callers feed the source to
+    ``run_grid(eval_data=...)`` and record the split name in artifact
+    metadata."""
+    if name not in ("dvs128", "nmnist"):
+        return None, None
+    try:
+        return resolve_dataset(name, split="val", **kwargs), "val"
+    except ValueError:
+        return None, "train"

@@ -13,7 +13,10 @@ sharded and single-device runs emit identical records. --protocol picks
 the phase-2 finetune protocol(s): "frozen" (paper §3 — layer 1 fixed),
 "unfrozen" (each circuit variant learns its own layer-1 weights), or
 "both" (default: one shared pretrain, records for both protocols in one
-artifact so the co-design optimum can be compared):
+artifact so the co-design optimum can be compared). ``--dataset`` picks
+the event source (repro.data.sources): the synthetic generators by
+default, or the file-backed DVS128-Gesture / N-MNIST loaders with
+``--data-root`` pointing at the dataset directory (docs/datasets.md):
 
   PYTHONPATH=src python -m repro.launch.sweep --grid paper
   PYTHONPATH=src python -m repro.launch.sweep --grid fast --protocol frozen
@@ -22,6 +25,8 @@ artifact so the co-design optimum can be compared):
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
       PYTHONPATH=src python -m repro.launch.sweep --grid fast \\
       --axes v-threshold sigma --devices 8
+  PYTHONPATH=src python -m repro.launch.sweep --grid fast \\
+      --dataset dvs128 --data-root /data/DvsGesture
 
 Legacy mode — the dry-run cell sweep (one subprocess per arch × shape ×
 pods cell so XLA state never accumulates across the 60+ compiles;
@@ -62,7 +67,21 @@ def run_codesign_grid(args) -> int:
     from repro.core.sweep_exec import make_executor
 
     fast = args.grid == "fast"
-    data, model, sweep_cfg, grid = engine.paper_setup(fast=fast, hw=args.hw)
+    try:
+        data, model, sweep_cfg, grid = engine.paper_setup(
+            fast=fast, hw=args.hw, dataset=args.dataset,
+            data_root=args.data_root)
+    except (ValueError, OSError) as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+    # file-backed datasets: eval on the held-out split so record
+    # accuracies are out-of-sample (synthetic streams have no split)
+    from repro.data import sources as sources_mod
+    eval_data, eval_split = sources_mod.resolve_eval_dataset(
+        args.dataset, hw=args.hw, data_root=args.data_root)
+    if eval_split == "train":
+        print("note: val split of the dataset is empty — evaluating on "
+              "the training split", file=sys.stderr)
     if args.circuits:
         grid = replace(grid, circuits=tuple(
             CircuitConfig(c) for c in args.circuits))
@@ -111,7 +130,8 @@ def run_codesign_grid(args) -> int:
 
     t0 = time.time()
     results = engine.run_protocols(data, model, sweep_cfg, grid,
-                                   protocols=protocols, executor=executor)
+                                   protocols=protocols, executor=executor,
+                                   eval_data=eval_data)
     wall_s = time.time() - t0
 
     out = Path(args.out)
@@ -120,8 +140,11 @@ def run_codesign_grid(args) -> int:
     artifact = engine.protocols_artifact(results, extra_meta={
         "wall_s": wall_s,
         "devices": executor.devices,
-        "data": {"name": data.name, "hw": data.height,
-                 "duration_ms": data.duration_ms},
+        "data": {"name": data.name, "dataset": args.dataset,
+                 "data_root": args.data_root, "hw": data.height,
+                 "n_classes": data.n_classes,
+                 "duration_ms": data.duration_ms,
+                 "eval_split": eval_split},
         "sweep": {"batch_size": sweep_cfg.batch_size,
                   "pretrain_steps": sweep_cfg.pretrain_steps,
                   "finetune_steps": sweep_cfg.finetune_steps,
@@ -245,8 +268,19 @@ def main() -> int:
                     help="phase-2 finetune protocol(s): frozen layer 1 "
                          "(paper §3), unfrozen joint layer-1+backbone "
                          "training, or both off one shared pretrain")
+    ap.add_argument("--dataset", type=str, default="synthetic-gesture",
+                    choices=["synthetic-gesture", "synthetic-nmnist",
+                             "dvs128", "nmnist"],
+                    help="event source (repro.data.sources): synthetic-* "
+                         "need no files; dvs128 (AEDAT 3.1) and nmnist "
+                         "(.bin) read --data-root (docs/datasets.md)")
+    ap.add_argument("--data-root", type=str, default=None,
+                    help="dataset directory for the file-backed datasets "
+                         "(binned frames are cached under "
+                         "<root>/.p2m-frame-cache)")
     ap.add_argument("--hw", type=int, default=16,
-                    help="synthetic stream resolution")
+                    help="event-frame resolution (synthetic grid size / "
+                         "file-backed downscale target)")
     # legacy dry-run options
     ap.add_argument("--pods", type=int, nargs="+", default=None)
     ap.add_argument("--archs", type=str, nargs="+", default=None)

@@ -1,0 +1,405 @@
+"""File-backed dataset subsystem (repro.data.{formats,binning,cache,
+sources,fixtures}): bit-exact parser round trips, streaming slot-binning
+at multiple T_INTG, deterministic splits, the on-disk frame cache, the
+EventSource contract against the synthetic path, and the end-to-end
+``--dataset dvs128`` CLI sweep on an on-the-fly AEDAT fixture.
+"""
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import binning, cache as cache_mod, fixtures, formats, sources
+
+SRC = Path(__file__).resolve().parents[1] / "src"
+
+
+def _random_events(rng, n, *, hw, t_max, sort=True):
+    t = rng.integers(0, t_max, n)
+    if sort:
+        t = np.sort(t)
+    return formats.EventChunk(
+        t=t.astype(np.int64),
+        x=rng.integers(0, hw, n).astype(np.int32),
+        y=rng.integers(0, hw, n).astype(np.int32),
+        p=rng.integers(0, 2, n).astype(np.int8))
+
+
+def _assert_chunks_equal(a, b):
+    for f in ("t", "x", "y", "p"):
+        np.testing.assert_array_equal(getattr(a, f), getattr(b, f), err_msg=f)
+
+
+class TestFormats:
+    """Writers are exact inverses of the parsers — bit-exact (t, x, y, p)."""
+
+    def test_aedat31_round_trip(self, tmp_path):
+        ev = _random_events(np.random.default_rng(0), 10_000, hw=128,
+                            t_max=5_000_000)
+        p = tmp_path / "rt.aedat"
+        formats.write_aedat31(p, ev, events_per_packet=997)  # packet splits
+        back = formats.concat_chunks(formats.read_aedat31(p))
+        _assert_chunks_equal(back, ev)
+
+    def test_aedat31_empty(self, tmp_path):
+        p = tmp_path / "empty.aedat"
+        formats.write_aedat31(p, formats.concat_chunks([]))
+        assert len(formats.concat_chunks(formats.read_aedat31(p))) == 0
+
+    def test_aedat31_t_stop_cuts_tail_packets(self, tmp_path):
+        ev = _random_events(np.random.default_rng(1), 4000, hw=128,
+                            t_max=1_000_000)
+        p = tmp_path / "win.aedat"
+        formats.write_aedat31(p, ev, events_per_packet=100)
+        cut = formats.concat_chunks(formats.read_aedat31(
+            p, t_stop_us=500_000))
+        assert 0 < len(cut) < len(ev)
+        # every pre-cut event present (packets stop once past the window)
+        assert int(cut.t[0]) == int(ev.t[0])
+
+    def test_aedat31_rejects_other_magic(self, tmp_path):
+        p = tmp_path / "v2.aedat"
+        p.write_bytes(b"#!AER-DAT2.0\r\n" + b"\x00" * 64)
+        with pytest.raises(ValueError, match="AEDAT"):
+            list(formats.read_aedat31(p))
+
+    def test_aedat31_range_check(self, tmp_path):
+        bad = formats.EventChunk(t=np.array([0], np.int64),
+                                 x=np.array([1 << 15], np.int32),
+                                 y=np.array([0], np.int32),
+                                 p=np.array([1], np.int8))
+        with pytest.raises(ValueError, match="range"):
+            formats.write_aedat31(tmp_path / "bad.aedat", bad)
+
+    def test_nmnist_bin_round_trip(self, tmp_path):
+        ev = _random_events(np.random.default_rng(2), 7_531, hw=34,
+                            t_max=(1 << 23) - 1, sort=False)
+        p = tmp_path / "rt.bin"
+        formats.write_nmnist_bin(p, ev)
+        back = formats.concat_chunks(
+            formats.read_nmnist_bin(p, chunk_events=512))  # chunk splits
+        _assert_chunks_equal(back, ev)
+
+    def test_nmnist_bin_range_check(self, tmp_path):
+        bad = formats.EventChunk(t=np.array([1 << 23], np.int64),
+                                 x=np.array([0], np.int32),
+                                 y=np.array([0], np.int32),
+                                 p=np.array([0], np.int8))
+        with pytest.raises(ValueError, match="range"):
+            formats.write_nmnist_bin(tmp_path / "bad.bin", bad)
+
+
+class TestBinning:
+    def test_frames_to_events_to_frames_exact(self):
+        rng = np.random.default_rng(3)
+        frames = rng.poisson(0.7, (16, 8, 8, 2)).astype(np.float32)
+        ev = binning.frames_to_events(frames, 2000)
+        back = binning.bin_chunks([ev], n_total=16, slot_us=2000,
+                                  sensor_hw=(8, 8), out_hw=(8, 8))
+        np.testing.assert_array_equal(back, frames)
+
+    def test_rebin_at_coarser_t_intg_conserves_counts(self):
+        """The same stream binned at two T_INTG values: totals identical,
+        and the coarse histogram is the block-sum of the fine one."""
+        rng = np.random.default_rng(4)
+        frames = rng.poisson(0.5, (20, 8, 8, 2)).astype(np.float32)
+        ev = binning.frames_to_events(frames, 1000)
+        fine = binning.bin_chunks([ev], n_total=20, slot_us=1000,
+                                  sensor_hw=(8, 8), out_hw=(8, 8))
+        coarse = binning.bin_chunks([ev], n_total=4, slot_us=5000,
+                                    sensor_hw=(8, 8), out_hw=(8, 8))
+        assert coarse.sum() == fine.sum()
+        np.testing.assert_array_equal(
+            coarse, fine.reshape(4, 5, 8, 8, 2).sum(axis=1))
+
+    def test_spatial_downscale_conserves_counts(self):
+        rng = np.random.default_rng(5)
+        ev = _random_events(rng, 5000, hw=128, t_max=10_000)
+        full = binning.bin_chunks([ev], n_total=10, slot_us=1000,
+                                  sensor_hw=(128, 128), out_hw=(128, 128))
+        down = binning.bin_chunks([ev], n_total=10, slot_us=1000,
+                                  sensor_hw=(128, 128), out_hw=(16, 16))
+        assert down.shape == (10, 16, 16, 2)
+        assert down.sum() == full.sum() == 5000
+        # per-slot, per-polarity marginals survive the downscale
+        np.testing.assert_array_equal(down.sum(axis=(1, 2)),
+                                      full.sum(axis=(1, 2)))
+
+    def test_polarity_channel_convention(self):
+        """p=1 (ON) lands in channel 0, p=0 (OFF) in channel 1 — matching
+        the synthetic generator's (ON, OFF) last axis."""
+        ev = formats.EventChunk(t=np.array([10, 20], np.int64),
+                                x=np.array([1, 2], np.int32),
+                                y=np.array([3, 4], np.int32),
+                                p=np.array([1, 0], np.int8))
+        out = binning.bin_chunks([ev], n_total=1, slot_us=1000,
+                                 sensor_hw=(8, 8), out_hw=(8, 8))
+        assert out[0, 3, 1, 0] == 1.0 and out[0, 4, 2, 1] == 1.0
+        assert out.sum() == 2.0
+
+    def test_out_of_window_events_dropped(self):
+        ev = formats.EventChunk(t=np.array([-5, 500, 99_999], np.int64),
+                                x=np.zeros(3, np.int32),
+                                y=np.zeros(3, np.int32),
+                                p=np.ones(3, np.int8))
+        out = binning.bin_chunks([ev], n_total=10, slot_us=1000,
+                                 sensor_hw=(8, 8), out_hw=(8, 8))
+        assert out.sum() == 1.0        # only t=500 is inside [0, 10ms)
+
+    def test_slot_us_for_rejects_fractional(self):
+        assert binning.slot_us_for(10.0, 2) == 5000
+        with pytest.raises(ValueError, match="microsecond"):
+            binning.slot_us_for(0.0005, 3)
+
+
+class TestSplits:
+    def test_split_of_deterministic_and_partitioned(self):
+        ids = [f"user{u:02d}_led.aedat#{k}" for u in range(30)
+               for k in range(12)]
+        s1 = [sources.split_of(i) for i in ids]
+        s2 = [sources.split_of(i) for i in ids]
+        assert s1 == s2
+        frac = s1.count("val") / len(s1)
+        assert 0.08 < frac < 0.35      # ~VAL_PERCENT with hash noise
+        assert set(s1) == {"train", "val"}
+
+    def test_recording_level_split_via_split_id(self):
+        """Windows of one recording never straddle splits: the hash runs
+        on FileSample.split_id (the recording path for DVS128-Gesture)."""
+        mk = lambda rec, k: sources.FileSample(            # noqa: E731
+            f"{rec}#{k}", 0, lambda: iter([]), split_id=rec)
+        samples = [mk(f"rec{r:02d}.aedat", k)
+                   for r in range(40) for k in range(5)]
+        srcs = {sp: sources.FileEventSource(
+            "x", samples, sensor_hw=(8, 8), hw=8, n_classes=1,
+            duration_ms=100.0, split=sp) for sp in ("train", "val")}
+        recs = lambda s: {x.split_id for x in s.samples}   # noqa: E731
+        assert not recs(srcs["train"]) & recs(srcs["val"])
+        assert recs(srcs["train"]) | recs(srcs["val"]) == \
+            {f"rec{r:02d}.aedat" for r in range(40)}
+        # every window of a surviving recording survives with it
+        for s in srcs.values():
+            by_rec = {}
+            for x in s.samples:
+                by_rec.setdefault(x.split_id, []).append(x)
+            assert all(len(v) == 5 for v in by_rec.values())
+
+    def test_train_val_disjoint_and_exhaustive(self, tmp_path):
+        root = fixtures.make_nmnist_fixture(tmp_path / "nm", n_per_class=3,
+                                            duration_ms=200.0)
+        tr = sources.NMNISTSource(root, duration_ms=1000.0, split="train")
+        va = sources.NMNISTSource(root, duration_ms=1000.0, split="val")
+        al = sources.NMNISTSource(root, duration_ms=1000.0, split="all")
+        ids = lambda s: {x.sample_id for x in s.samples}  # noqa: E731
+        assert ids(tr) | ids(va) == ids(al)
+        assert not ids(tr) & ids(va)
+
+
+@pytest.fixture(scope="module")
+def dvs_root(tmp_path_factory):
+    return fixtures.make_dvs128_fixture(
+        tmp_path_factory.mktemp("dvs"), n_recordings=2,
+        trials_per_recording=11, duration_ms=2000.0)
+
+
+class TestFileSources:
+    def test_event_source_contract_matches_synthetic(self, dvs_root):
+        """File-backed batches carry the synthetic path's exact array
+        contract: float32 [B, n_slots, n_sub, H, W, 2] counts + labels."""
+        src = sources.DVSGestureSource(dvs_root, hw=16, duration_ms=2000.0,
+                                       split="all")
+        syn = sources.resolve_dataset("synthetic-gesture", hw=16)
+        for s in (src, syn):
+            ev, lab = s.sample_batch(jax.random.PRNGKey(0), 3, 500.0,
+                                     n_sub=2)
+            assert ev.shape == (3, 4, 2, 16, 16, 2)
+            assert ev.dtype == jnp.float32
+            assert lab.shape == (3,)
+            assert float(ev.min()) >= 0.0 and float(ev.sum()) > 0.0
+            assert int(lab.max()) < s.n_classes
+
+    def test_two_t_intg_values_conserve_counts(self, dvs_root):
+        src = sources.DVSGestureSource(dvs_root, hw=16, duration_ms=2000.0,
+                                       split="all")
+        k = jax.random.PRNGKey(1)
+        ev_a, _ = src.sample_batch(k, 2, 200.0)
+        ev_b, _ = src.sample_batch(k, 2, 1000.0)
+        assert ev_a.shape[1] == 10 and ev_b.shape[1] == 2
+        assert float(ev_a.sum()) == float(ev_b.sum())
+
+    def test_deterministic_in_key(self, dvs_root):
+        src = sources.DVSGestureSource(dvs_root, hw=16, duration_ms=2000.0,
+                                       split="all")
+        ev1, l1 = src.sample_batch(jax.random.PRNGKey(3), 4, 500.0)
+        ev2, l2 = src.sample_batch(jax.random.PRNGKey(3), 4, 500.0)
+        np.testing.assert_array_equal(np.asarray(ev1), np.asarray(ev2))
+        np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+
+    def test_sample_batch_with_labels(self, dvs_root):
+        src = sources.DVSGestureSource(dvs_root, hw=16, duration_ms=2000.0,
+                                       split="all")
+        want = jnp.array([0, 3, 7])
+        ev, lab = src.sample_batch_with_labels(jax.random.PRNGKey(4), want,
+                                               500.0)
+        np.testing.assert_array_equal(np.asarray(lab), np.asarray(want))
+        assert ev.shape[0] == 3
+
+    def test_cache_hit_is_exact_and_reused(self, dvs_root, tmp_path):
+        croot = tmp_path / "cache"
+        src = sources.DVSGestureSource(dvs_root, hw=16, duration_ms=2000.0,
+                                       split="all", cache_root=croot)
+        k = jax.random.PRNGKey(5)
+        ev1, _ = src.sample_batch(k, 2, 500.0)
+        files = list(croot.rglob("*.npy"))
+        assert files                      # miss path populated the cache
+        mtimes = {f: f.stat().st_mtime_ns for f in files}
+        ev2, _ = src.sample_batch(k, 2, 500.0)
+        np.testing.assert_array_equal(np.asarray(ev1), np.asarray(ev2))
+        assert all(f.stat().st_mtime_ns == mtimes[f] for f in files)
+
+    def test_cache_keyed_by_t_intg(self, dvs_root, tmp_path):
+        croot = tmp_path / "cache"
+        c = cache_mod.FrameCache(croot, "dvs128")
+        p1 = c.path("a#0", slot_us=1000, out_hw=(16, 16), n_total=10)
+        p2 = c.path("a#0", slot_us=5000, out_hw=(16, 16), n_total=2)
+        p3 = c.path("a#0", slot_us=1000, out_hw=(32, 32), n_total=10)
+        assert len({p1, p2, p3}) == 3
+
+    def test_gesture_fixture_labels_cover_all_classes(self, dvs_root):
+        src = sources.DVSGestureSource(dvs_root, hw=16, duration_ms=2000.0,
+                                       split="all")
+        assert {s.label for s in src.samples} == set(range(11))
+
+    def test_window_end_clips_next_gesture(self, tmp_path):
+        """A source duration longer than a labeled window must NOT pull
+        the next gesture's events into this sample (binning clips at the
+        CSV's endTime_usec)."""
+        root = fixtures.make_dvs128_fixture(
+            tmp_path / "dvs0", n_recordings=1, trials_per_recording=4,
+            duration_ms=1000.0, gap_us=0)      # back-to-back windows
+        src = sources.DVSGestureSource(root, hw=16, duration_ms=2000.0,
+                                       split="all")
+        ev, _ = src.sample_batch_with_labels(
+            jax.random.PRNGKey(0), jnp.array([0]), 1000.0)   # 2 slots
+        ev = np.asarray(ev)
+        assert ev[0, 0].sum() > 0          # the labeled 1 s window
+        assert ev[0, 1].sum() == 0         # next gesture's second: clipped
+
+    def test_nmnist_default_duration_matches_recordings(self, tmp_path):
+        root = fixtures.make_nmnist_fixture(tmp_path / "nm", n_per_class=1,
+                                            duration_ms=300.0)
+        src = sources.resolve_dataset("nmnist", data_root=str(root),
+                                      split="all")
+        assert src.duration_ms == 300.0   # not 2 s of ~85% zero padding
+
+    def test_resolve_eval_dataset(self, dvs_root, tmp_path):
+        # synthetic: no split notion
+        assert sources.resolve_eval_dataset("synthetic-gesture") == \
+            (None, None)
+        # fixture recordings all hash to train → val empty → fallback
+        src, split = sources.resolve_eval_dataset(
+            "dvs128", hw=16, data_root=str(dvs_root))
+        assert (src, split) == (None, "train")
+        # nmnist fixture with Train/Test dirs → real held-out source
+        root = fixtures.make_nmnist_fixture(tmp_path / "nm", n_per_class=1,
+                                            duration_ms=200.0,
+                                            train_test_dirs=True)
+        src, split = sources.resolve_eval_dataset("nmnist",
+                                                  data_root=str(root))
+        assert split == "val"
+        assert all(s.sample_id.startswith("Test/") for s in src.samples)
+
+    def test_missing_root_raises(self, tmp_path):
+        with pytest.raises(ValueError, match="no samples"):
+            sources.DVSGestureSource(tmp_path / "nope", hw=16)
+        with pytest.raises(ValueError, match="file-backed"):
+            sources.resolve_dataset("dvs128")
+
+    def test_nmnist_train_test_dirs_map_to_splits(self, tmp_path):
+        root = fixtures.make_nmnist_fixture(tmp_path / "nm", n_per_class=1,
+                                            duration_ms=200.0,
+                                            train_test_dirs=True)
+        tr = sources.NMNISTSource(root, duration_ms=1000.0, split="train")
+        va = sources.NMNISTSource(root, duration_ms=1000.0, split="val")
+        assert all(s.sample_id.startswith("Train/") for s in tr.samples)
+        assert all(s.sample_id.startswith("Test/") for s in va.samples)
+        ev, lab = tr.sample_batch(jax.random.PRNGKey(0), 2, 250.0, n_sub=2)
+        assert ev.shape == (2, 4, 2, 16, 16, 2)
+
+
+class TestEndToEndSweep:
+    def test_cli_dvs128_fast_grid_artifact(self, dvs_root, tmp_path):
+        """The acceptance path: `--dataset dvs128 --data-root <tmp>` on a
+        generated AEDAT fixture emits a valid p2m-codesign-sweep/v3
+        artifact whose records carry the synthetic path's schema."""
+        from repro.core import sweep as engine  # noqa: F401 (import check)
+
+        env = dict(os.environ, PYTHONPATH=str(SRC), JAX_PLATFORMS="cpu")
+        out = tmp_path / "art"
+        cmd = [sys.executable, "-m", "repro.launch.sweep",
+               "--grid", "fast", "--protocol", "frozen",
+               "--dataset", "dvs128", "--data-root", str(dvs_root),
+               "--t-intg", "200", "1000", "--out", str(out)]
+        proc = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                              timeout=900)
+        assert proc.returncode == 0, proc.stderr
+        art = json.loads((out / "codesign_grid_fast.json").read_text())
+        assert art["schema"] == "p2m-codesign-sweep/v3"
+        assert art["data"]["dataset"] == "dvs128"
+        assert art["data"]["n_classes"] == 11
+        assert art["data"]["eval_split"] in ("train", "val")
+        # record contract identical to the synthetic path (the v1 keys
+        # pinned by tests/test_sweep_protocols.py plus the v3 additions)
+        keys = {"label", "circuit", "null_mismatch", "protocol", "t_intg_ms",
+                "n_sub", "variant", "accuracy", "train_time_s",
+                "train_time_per_step_s", "train_time_norm",
+                "bandwidth_ratio", "bandwidth_norm",
+                "backend_energy_conventional_j", "backend_energy_p2m_j",
+                "energy_improvement", "sensor_energy_p2m_j",
+                "layer1_spikes", "input_events", "retention_err_v",
+                "retention_surface_v"}
+        assert len(art["records"]) == 3 * 2        # 3 circuits × 2 T points
+        for r in art["records"]:
+            assert keys <= set(r), keys - set(r)
+            assert 0.0 <= r["accuracy"] <= 1.0
+            assert r["input_events"] > 0
+
+    def test_run_grid_accepts_file_source_in_process(self, dvs_root):
+        """Programmatic seam: run_grid on a FileEventSource (1 circuit,
+        1 T point) produces normalized records."""
+        from dataclasses import replace
+
+        from repro.core import sweep as engine
+        from repro.core.leakage import CircuitConfig
+
+        data = sources.DVSGestureSource(dvs_root, hw=16, duration_ms=2000.0,
+                                        split="all")
+        _, model, sweep_cfg, _ = engine.paper_setup(fast=True)
+        model = replace(model, backbone=replace(model.backbone,
+                                                n_classes=data.n_classes))
+        grid = engine.SweepGrid(circuits=(CircuitConfig.NULLIFIED,),
+                                t_intg_grid_ms=(1000.0,))
+        class CountingEval(sources.SyntheticSource):
+            calls = 0
+
+            def sample_batch(self, *a, **kw):
+                CountingEval.calls += 1
+                return super().sample_batch(*a, **kw)
+
+        eval_src = CountingEval(sources.resolve_dataset(
+            "synthetic-gesture", hw=16).cfg)
+        res = engine.run_grid(data, model, sweep_cfg, grid,
+                              log=lambda *_: None, protocol="frozen",
+                              eval_data=eval_src)
+        assert len(res.records) == 1
+        r = res.records[0]
+        assert r["bandwidth_norm"] == pytest.approx(1.0)
+        assert r["input_events"] > 0
+        # the held-out eval seam was actually used for the eval batches
+        assert CountingEval.calls == sweep_cfg.eval_batches

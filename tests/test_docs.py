@@ -1,0 +1,44 @@
+"""Docs integrity: the link checker (tools/check_docs.py) passes on the
+committed README.md + docs/*.md, and its failure modes actually fire."""
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+CHECKER = REPO / "tools" / "check_docs.py"
+
+sys.path.insert(0, str(REPO / "tools"))
+import check_docs  # noqa: E402
+
+
+class TestChecker:
+    def test_repo_docs_link_clean(self):
+        proc = subprocess.run([sys.executable, str(CHECKER)],
+                              capture_output=True, text=True)
+        assert proc.returncode == 0, proc.stderr + proc.stdout
+
+    def test_slugify_github_style(self):
+        assert check_docs.slugify("The `EventSource` contract") == \
+            "the-eventsource-contract"
+        assert check_docs.slugify("Phase-2 protocols: frozen vs unfrozen") \
+            == "phase-2-protocols-frozen-vs-unfrozen"
+
+    def test_broken_path_detected(self, tmp_path, monkeypatch):
+        md = tmp_path / "x.md"
+        md.write_text("# T\n\nsee [gone](does/not/exist.md)\n")
+        errs = check_docs.check_file(md)
+        assert errs and "broken path link" in errs[0]
+
+    def test_broken_anchor_detected(self, tmp_path):
+        a = tmp_path / "a.md"
+        b = tmp_path / "b.md"
+        a.write_text("# Top\n\n[ok](b.md#real)\n[bad](b.md#fake)\n")
+        b.write_text("# Real\n")
+        errs = check_docs.check_file(a)
+        assert len(errs) == 1 and "#fake" in errs[0]
+
+    def test_code_blocks_ignored(self, tmp_path):
+        md = tmp_path / "c.md"
+        md.write_text("# T\n\n```md\n[not a link](missing.md)\n```\n"
+                      "and `[inline](also/missing.md)` too\n")
+        assert check_docs.check_file(md) == []

@@ -1,0 +1,72 @@
+"""Coverage for the frame-manipulation helpers in repro.data.events:
+``events_to_frames`` (sub-slot collapse) and ``refine_slots`` (re-bin onto
+a coarser T grid) — shapes, polarity/count conservation, and the
+refine-then-rebin round trip the sweep engine's T_INTG semantics rely on.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import events as ev_mod
+
+
+@pytest.fixture(scope="module")
+def batch():
+    """[B=2, T=8, n_sub=3, H=12, W=12, 2] synthetic event counts."""
+    cfg = ev_mod.dvs_gesture_like(12)
+    ev, labels = ev_mod.sample_batch(jax.random.PRNGKey(7), cfg, 2, 250.0,
+                                     n_sub=3)
+    assert ev.shape == (2, 8, 3, 12, 12, 2)
+    return ev
+
+
+class TestEventsToFrames:
+    def test_shape(self, batch):
+        frames = ev_mod.events_to_frames(batch)
+        assert frames.shape == (2, 8, 12, 12, 2)
+
+    def test_counts_conserved_per_polarity(self, batch):
+        """Collapsing sub-slots must conserve ON and OFF counts
+        separately — polarity is a physical channel, not an average."""
+        frames = ev_mod.events_to_frames(batch)
+        for pol in (0, 1):
+            np.testing.assert_allclose(
+                np.asarray(frames[..., pol].sum()),
+                np.asarray(batch[..., pol].sum()), rtol=1e-6)
+
+    def test_pixelwise_sum(self, batch):
+        np.testing.assert_allclose(np.asarray(ev_mod.events_to_frames(batch)),
+                                   np.asarray(batch.sum(axis=2)), rtol=1e-6)
+
+
+class TestRefineSlots:
+    def test_shape(self, batch):
+        out = ev_mod.refine_slots(batch, 4)
+        # T 8→2, n_sub 3→12: same total fine slots, coarser T grid
+        assert out.shape == (2, 2, 12, 12, 12, 2)
+
+    def test_factor_must_divide(self, batch):
+        with pytest.raises(AssertionError):
+            ev_mod.refine_slots(batch, 3)      # 8 % 3 != 0
+
+    def test_count_conserving(self, batch):
+        out = ev_mod.refine_slots(batch, 2)
+        np.testing.assert_allclose(float(out.sum()), float(batch.sum()),
+                                   rtol=1e-6)
+
+    def test_refine_then_rebin_round_trip(self, batch):
+        """events_to_frames(refine_slots(ev, f))[b, i] must equal the sum
+        of the original frames over slot block [i*f, (i+1)*f) — the same
+        stream integrated at a longer T_INTG."""
+        f = 4
+        frames = np.asarray(ev_mod.events_to_frames(batch))     # [B, 8, ...]
+        coarse = np.asarray(
+            ev_mod.events_to_frames(ev_mod.refine_slots(batch, f)))
+        expect = frames.reshape(frames.shape[0], frames.shape[1] // f, f,
+                                *frames.shape[2:]).sum(axis=2)
+        np.testing.assert_allclose(coarse, expect, rtol=1e-6)
+
+    def test_identity_factor(self, batch):
+        np.testing.assert_array_equal(
+            np.asarray(ev_mod.refine_slots(batch, 1)), np.asarray(batch))

@@ -1,0 +1,100 @@
+#!/usr/bin/env python3
+"""Link-check the repo docs: README.md + docs/*.md.
+
+Verifies, offline and with no third-party deps:
+
+  * relative file/directory links resolve from the linking file
+    (``[x](docs/sweep.md)``, ``[y](../src/repro/core/sweep.py)``);
+  * intra-doc and cross-doc anchors (``#section`` /
+    ``path.md#section``) match a real heading, using GitHub's
+    slugification (lowercase, strip punctuation, spaces → hyphens);
+  * inline code spans are ignored; external http(s)/mailto links are
+    skipped (no network in CI).
+
+Exit code 1 with one line per broken reference. Run from the repo root
+(CI: the docs job) or anywhere — paths resolve relative to this file.
+
+    python tools/check_docs.py
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+
+LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+CODE_FENCE_RE = re.compile(r"```.*?```", re.DOTALL)
+INLINE_CODE_RE = re.compile(r"`[^`]*`")
+
+
+def doc_files() -> list[Path]:
+    files = [REPO / "README.md"]
+    files += sorted((REPO / "docs").glob("*.md"))
+    return [f for f in files if f.exists()]
+
+
+def slugify(heading: str) -> str:
+    """GitHub-style heading → anchor id."""
+    h = INLINE_CODE_RE.sub(lambda m: m.group(0).strip("`"), heading)
+    h = re.sub(r"[^\w\s-]", "", h.strip().lower())
+    return re.sub(r"\s+", "-", h)
+
+
+def anchors_of(md: Path) -> set[str]:
+    text = CODE_FENCE_RE.sub("", md.read_text(encoding="utf-8"))
+    return {slugify(h) for h in HEADING_RE.findall(text)}
+
+
+def _rel(p: Path) -> str:
+    try:
+        return str(p.relative_to(REPO))
+    except ValueError:       # files outside the repo (tests)
+        return str(p)
+
+
+def check_file(md: Path) -> list[str]:
+    errors = []
+    text = md.read_text(encoding="utf-8")
+    text = CODE_FENCE_RE.sub("", text)
+    text = INLINE_CODE_RE.sub("", text)
+    for target in LINK_RE.findall(text):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        path_part, _, anchor = target.partition("#")
+        if path_part:
+            dest = (md.parent / path_part).resolve()
+            if not dest.exists():
+                errors.append(f"{_rel(md)}: broken path link "
+                              f"'{target}' → {path_part}")
+                continue
+        else:
+            dest = md
+        if anchor:
+            if dest.suffix != ".md":
+                errors.append(f"{_rel(md)}: anchor on non-"
+                              f"markdown target '{target}'")
+            elif anchor not in anchors_of(dest):
+                errors.append(f"{_rel(md)}: broken anchor "
+                              f"'{target}' (no heading '#{anchor}' in "
+                              f"{_rel(dest)})")
+    return errors
+
+
+def main() -> int:
+    files = doc_files()
+    if not files:
+        print("check_docs: no README.md / docs/*.md found", file=sys.stderr)
+        return 1
+    errors = [e for f in files for e in check_file(f)]
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"check_docs: {len(files)} files, "
+          f"{'OK' if not errors else f'{len(errors)} broken references'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
