@@ -1,31 +1,47 @@
 """Paper Fig 2: normalized bandwidth (left) and backend energy improvement
 (right) vs T_INTG for both datasets. Uses the same sweep machinery as
 Table 1 but reports the bandwidth/energy columns (they come from the same
-records; a separate artifact keeps one benchmark per paper figure)."""
+records; a separate artifact keeps one benchmark per paper figure).
+
+``data_root`` swaps both columns onto the file-backed datasets — the same
+plumbing as ``table1_acc_traintime`` (a directory holding ``DvsGesture``
+AEDAT files and an N-MNIST tree; held-out eval split when it exists;
+metric keys gain a ``file/`` prefix so the synthetic series stays
+continuous). Short recordings (real N-MNIST ≈ 300 ms) shrink the grid to
+the T_INTG points that fit the stream.
+"""
 from __future__ import annotations
 
 from benchmarks.common import emit, save_json
 from benchmarks.table1_acc_traintime import GRID, _data, _model
 
 from repro.core import codesign
+from repro.core import sweep as engine
 from repro.core.codesign import SweepConfig
 
 
-def run(fast: bool = False) -> dict:
-    sweep = SweepConfig(
-        t_intg_grid_ms=GRID if not fast else (10.0, 1000.0),
-        batch_size=4, pretrain_steps=12 if not fast else 3,
-        finetune_steps=4 if not fast else 2,
-        eval_batches=8 if not fast else 2, lr=2e-3, seed=1)
+def run(fast: bool = False, data_root: str | None = None) -> dict:
+    t_grid = GRID if not fast else (10.0, 1000.0)
     out = {}
+    src_tag = "" if data_root is None else "file/"
     for kind in ("gesture", "nmnist"):
         hw = 24 if kind == "gesture" else 20
-        recs = codesign.run_sweep(_data(kind, hw), _model(
-            hw, 11 if kind == "gesture" else 10), sweep,
-            log=lambda *_: None)
+        data, eval_data = _data(kind, hw, data_root)
+        # short recordings shrink the coarse window and drop T points
+        # that no longer fit the stream (table1 parity)
+        coarse = min(1000.0, data.duration_ms)
+        t_ok = engine.fit_t_grid(t_grid, data.duration_ms, coarse)
+        sweep = SweepConfig(
+            t_intg_grid_ms=t_ok,
+            batch_size=4, pretrain_steps=12 if not fast else 3,
+            finetune_steps=4 if not fast else 2,
+            eval_batches=8 if not fast else 2, lr=2e-3, seed=1)
+        recs = codesign.run_sweep(
+            data, _model(hw, 11 if kind == "gesture" else 10, coarse),
+            sweep, log=lambda *_: None, eval_data=eval_data)
         out[kind] = recs
         for r in recs:
-            emit(f"fig2/{kind}/t{int(r['t_intg_ms'])}ms", None,
+            emit(f"fig2/{src_tag}{kind}/t{int(r['t_intg_ms'])}ms", None,
                  f"bw_norm={r['bandwidth_norm']:.3f};"
                  f"energy_impr={r['energy_improvement']:.2f}x")
     save_json("fig2", out)

@@ -20,11 +20,13 @@ def main() -> int:
     ap.add_argument("--fast", action="store_true",
                     help="reduced grids/steps (CI)")
     ap.add_argument("--only", type=str, default=None,
-                    help="run a single bench: table1|fig2|fig4|kernels|roofline")
+                    help="run a single bench: "
+                         "table1|fig2|fig4|kernels|roofline|stream")
     args = ap.parse_args()
 
     from benchmarks import (fig2_bandwidth_energy, fig4_leakage, kernel_bench,
-                            roofline_report, table1_acc_traintime)
+                            roofline_report, stream_serving,
+                            table1_acc_traintime)
 
     benches = {
         "table1": table1_acc_traintime.run,
@@ -32,6 +34,7 @@ def main() -> int:
         "fig4": fig4_leakage.run,
         "kernels": kernel_bench.run,
         "roofline": roofline_report.run,
+        "stream": stream_serving.run,
     }
     if args.only:
         benches = {args.only: benches[args.only]}

@@ -1,0 +1,63 @@
+"""Online streaming-inference benchmark: readout latency (p50/p99),
+events/s and streams/s of the continuous-batching serving engine
+(repro.stream.engine) over the synthetic event source.
+
+Serving-path performance does not depend on trained weights, so the
+deployment is a fresh init (repro.stream.deploy.fresh_deployment) — the
+benchmark isolates the engine: host binning of replay chunks, the jitted
+lane-batched fold/readout steps, and slot recycling. Two lane counts per
+run show the micro-batching effect (same stream work, wider jitted
+batch).
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit, save_json
+
+from repro.core.codesign import P2MModelConfig
+from repro.core.leakage import CircuitConfig, LeakageConfig
+from repro.core.p2m_layer import P2MConfig
+from repro.core.snn import SpikingCNNConfig
+from repro.data import sources as sources_mod
+from repro.stream import deploy as deploy_mod
+from repro.stream.engine import StreamEngine
+
+
+def _model(hw: int, n_classes: int, t_intg_ms: float) -> P2MModelConfig:
+    return P2MModelConfig(
+        p2m=P2MConfig(out_channels=8, n_sub=2, t_intg_ms=t_intg_ms,
+                      leak=LeakageConfig(circuit=CircuitConfig.NULLIFIED)),
+        backbone=SpikingCNNConfig(channels=(8, 16, 16, 16),
+                                  input_hw=(hw, hw), fc_hidden=64,
+                                  n_classes=n_classes,
+                                  first_layer_external=True),
+        coarse_window_ms=1000.0)
+
+
+def run(fast: bool = False, hw: int = 16,
+        t_intg_ms: float = 100.0) -> dict:
+    source = sources_mod.resolve_dataset("synthetic-gesture", hw=hw)
+    dep = deploy_mod.fresh_deployment(
+        _model(hw, source.n_classes, t_intg_ms), seed=0)
+    n_streams = 8 if fast else 32
+    out = {}
+    for capacity in ((2, 4) if fast else (4, 16)):
+        engine = StreamEngine(dep, capacity=capacity)
+        report = engine.serve(source, n_streams, seed=0)
+        art = report.to_artifact()
+        out[f"capacity{capacity}"] = art
+        lat, thr = art["latency_ms"], art["throughput"]
+        emit(f"stream/readout/c{capacity}", lat["readout_p50"] * 1e3,
+             f"p50={lat['readout_p50']:.3f}ms;p99={lat['readout_p99']:.3f}ms;"
+             f"mean={lat['readout_mean']:.3f}ms")
+        emit(f"stream/fold/c{capacity}", lat["fold_p50"] * 1e3,
+             f"p50={lat['fold_p50']:.3f}ms;p99={lat['fold_p99']:.3f}ms")
+        emit(f"stream/throughput/c{capacity}", None,
+             f"events_per_s={thr['events_per_s']:.0f};"
+             f"streams_per_s={thr['streams_per_s']:.2f};"
+             f"readouts_per_s={thr['readouts_per_s']:.1f}")
+    save_json("stream_serving", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -86,10 +86,8 @@ def run(fast: bool = False,
         data, eval_data = _data(kind, hw, data_root)
         # short recordings (real N-MNIST ≈ 300 ms) shrink the coarse
         # window and drop T points that no longer fit the stream
-        dur = data.duration_ms
-        coarse = min(1000.0, dur)
-        fits = lambda t, span: abs(span / t - round(span / t)) < 1e-6  # noqa: E731
-        t_ok = tuple(t for t in t_grid if fits(t, coarse) and fits(t, dur))
+        coarse = min(1000.0, data.duration_ms)
+        t_ok = engine.fit_t_grid(t_grid, data.duration_ms, coarse)
         grid = engine.SweepGrid(circuits=(CircuitConfig.NULLIFIED,),
                                 t_intg_grid_ms=t_ok)
         results = engine.run_protocols(

@@ -146,7 +146,8 @@ def run_sweep(data_cfg: Any = None,
               circuit: CircuitConfig = CircuitConfig.NULLIFIED,
               log: Any = print,
               protocol: str = "frozen",
-              devices: int | None = None) -> list[dict]:
+              devices: int | None = None,
+              eval_data: Any = None) -> list[dict]:
     """Run the co-design T_INTG sweep for ONE circuit config. Returns one
     record per grid point with accuracy, wall-clock train time, bandwidth
     ratio, and backend energies.
@@ -173,6 +174,10 @@ def run_sweep(data_cfg: Any = None,
     (core/sweep_exec.py) — with a single circuit the axis has length 1, so
     this only matters when the caller expands mismatch/threshold/sigma
     variants through the model config.
+
+    ``eval_data`` optionally draws the accuracy-eval batches from a
+    held-out source (``resolve_eval_dataset``) so record accuracies are
+    out-of-sample — same semantics as ``sweep.run_grid(eval_data=...)``.
     """
     from repro.core import sweep as sweep_engine
     from repro.core.sweep_exec import make_executor
@@ -194,5 +199,6 @@ def run_sweep(data_cfg: Any = None,
         null_mismatch=(mcfg.p2m.leak.null_mismatch,))
     result = sweep_engine.run_grid(data_cfg, mcfg, sweep, grid, log=log,
                                    protocol=protocol,
-                                   executor=make_executor(devices))
+                                   executor=make_executor(devices),
+                                   eval_data=eval_data)
     return result.records

@@ -185,6 +185,24 @@ def curvefit_ideal(events: jax.Array, cfg: P2MConfig, w_q: jax.Array
     return ideal.reshape((B * T_out, n_sub) + ideal.shape[1:])
 
 
+def window_decay(lk: leakage.LeakParams, n_sub: int, dt_ms: float
+                 ) -> tuple[jax.Array, jax.Array]:
+    """One integration window's leak weighting: per-sub-slot decay
+    weights ``a^(n_sub-1-k)`` (a = e^(−dt/τ) per filter) and the window
+    drift toward ``V_inf``. THE single source of this math — shared by
+    the offline curve-fit reduce below and the online streaming
+    accumulator (repro.stream.accumulator), whose readout-boundary
+    parity depends on both paths weighting identically.
+
+    Returns ``(decay_w [n_sub, C_out], drift [C_out])``.
+    """
+    a = leakage.decay_factor(lk.tau_ms, dt_ms)                 # [C_out]
+    k = jnp.arange(n_sub)
+    decay_w = a[None, :] ** (n_sub - 1 - k)[:, None]           # [n_sub, C]
+    drift = jnp.sum(1.0 - decay_w, axis=0) * lk.v_inf / n_sub  # [C]
+    return decay_w, drift
+
+
 def curvefit_reduce(params: Params, cfg: P2MConfig, ideal: jax.Array,
                     lk: leakage.LeakParams, batch: int) -> jax.Array:
     """The cheap, per-variant half of the curve-fit forward: leak-decay
@@ -193,11 +211,7 @@ def curvefit_reduce(params: Params, cfg: P2MConfig, ideal: jax.Array,
     ``ideal`` is :func:`curvefit_ideal`'s output; ``lk`` fields are
     per-filter ``[C_out]``. Returns v_pre [B, T_out, H', W', C_out].
     """
-    n_sub = ideal.shape[1]
-    a = leakage.decay_factor(lk.tau_ms, cfg.dt_ms)             # [C_out]
-    k = jnp.arange(n_sub)
-    decay_w = a[None, :] ** (n_sub - 1 - k)[:, None]           # [n_sub, C]
-    drift = jnp.sum(1.0 - decay_w, axis=0) * lk.v_inf / n_sub  # [C]
+    decay_w, drift = window_decay(lk, ideal.shape[1], cfg.dt_ms)
     x = jnp.einsum("bk...c,kc->b...c", ideal, decay_w) + drift
     pv = {"gain": params["pv_gain"], "offset": params["pv_offset"]}
     v_pre = analog.transfer_curve(x, cfg.analog, pv)

@@ -242,6 +242,72 @@ def spiking_cnn_apply(params: Params, state: State, x: jax.Array,
     return logits, new_state, aux
 
 
+# ---------------------------------------------------------------------------
+# streaming (one-coarse-frame-at-a-time) evaluation
+# ---------------------------------------------------------------------------
+
+def _stream_shapes(cfg: SpikingCNNConfig) -> tuple[dict, int]:
+    """Per-layer LIF membrane shapes (pre-pool conv outputs + FC hidden)
+    and the layer the stream starts at — mirrors spiking_cnn_init's shape
+    walk so streaming state lines up with the trained params."""
+    h, w = cfg.input_hw
+    c_in = cfg.in_channels
+    start = 0
+    if cfg.first_layer_external:
+        c_in = cfg.channels[0]
+        h //= (2 * cfg.first_stride)
+        w //= (2 * cfg.first_stride)
+        start = 1
+    shapes = {}
+    for i in range(start, cfg.n_conv):
+        stride = cfg.first_stride if i == 0 else 1
+        h_c, w_c = h // stride, w // stride       # conv output (SAME pad)
+        shapes[f"lif{i}"] = (h_c, w_c, cfg.channels[i])
+        h, w = h_c // 2, w_c // 2                 # 2x pool
+        c_in = cfg.channels[i]
+    shapes["lif_fc0"] = (cfg.fc_hidden,)
+    return shapes, start
+
+
+def spiking_cnn_stream_init(cfg: SpikingCNNConfig, batch: int) -> State:
+    """Zero LIF membranes for step-wise (online) evaluation — one state
+    tree per serving lane batch. ``lif_over_time`` starts every scan from
+    v=0, so a fresh stream state reproduces the batched forward exactly."""
+    shapes, _ = _stream_shapes(cfg)
+    return {k: jnp.zeros((batch,) + s) for k, s in shapes.items()}
+
+
+def spiking_cnn_stream_step(params: Params, state: State, mem: State,
+                            x_t: jax.Array, cfg: SpikingCNNConfig
+                            ) -> tuple[jax.Array, State]:
+    """One coarse timestep of the backbone with explicit LIF state.
+
+    ``x_t`` is a single coarse frame [B, H, W, C] (what
+    ``spiking_cnn_apply`` sees at one index of its time axis); ``mem``
+    carries every layer's membrane between calls. Stepping T frames
+    through this function and averaging the returned per-step logits is
+    IDENTICAL to ``spiking_cnn_apply(..., train=False)`` on the stacked
+    [B, T, ...] tensor (conv/BN are stateless at eval, LIF scans are
+    causal) — the parity the online serving engine (repro.stream) relies
+    on and tests/test_streaming.py pins.
+    """
+    _, start = _stream_shapes(cfg)
+    new_mem: State = {}
+    h = x_t
+    for i in range(start, cfg.n_conv):
+        stride = cfg.first_stride if i == 0 else 1
+        y = conv_apply(params[f"conv{i}"], h, stride=stride)
+        y, _ = bn_apply(params[f"bn{i}"], state[f"bn{i}"], y, train=False)
+        v, s = lif_step(mem[f"lif{i}"], y, cfg.lif)
+        new_mem[f"lif{i}"] = v
+        h = max_pool(s)
+    z = dense_apply(params["fc0"], h.reshape((h.shape[0], -1)))
+    v, s = lif_step(mem["lif_fc0"], z, cfg.lif)
+    new_mem["lif_fc0"] = v
+    logits_t = dense_apply(params["fc1"], s)
+    return logits_t, new_mem
+
+
 def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
     logp = jax.nn.log_softmax(logits, axis=-1)
     return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=-1))

@@ -57,8 +57,8 @@ from __future__ import annotations
 
 import math
 import time
-from dataclasses import dataclass, replace
-from typing import Any, Callable
+from dataclasses import dataclass, field, replace
+from typing import Any, Callable, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -540,12 +540,22 @@ class GridResult:
     """Everything one sweep produced: flat records (one per
     (variant, T_INTG, n_sub) cell), the retention surface, and grid meta.
     Records are always UNPADDED — a sharded run's mesh-padding lanes are
-    dropped when the records are built."""
+    dropped when the records are built.
+
+    ``final_params`` (``run_grid(keep_params=True)``) holds each outer
+    cell's trained weights, keyed by ``(t_intg_ms, n_sub)``:
+    ``{"p2m": ..., "backbone": ..., "state": ...}`` with backbone/state
+    stacked on the unpadded ``[n_cfg]`` variant axis (p2m too under the
+    unfrozen protocol; shared/unstacked when frozen). This is the seam
+    the streaming deployment handshake (repro.stream.deploy) slices one
+    variant's servable checkpoint out of — it is NOT part of the JSON
+    artifact."""
     records: list[dict]
     retention: dict
     labels: tuple[str, ...]
     grid: SweepGrid
     protocol: str = "frozen"
+    final_params: dict[tuple[float, int], dict] = field(default_factory=dict)
 
     def to_artifact(self, extra_meta: dict | None = None) -> dict:
         return {
@@ -591,7 +601,8 @@ def run_grid(data_cfg, model_cfg,
              protocol: str = "frozen",
              pretrained: tuple | None = None,
              executor: SweepExecutor | None = None,
-             eval_data=None) -> GridResult:
+             eval_data=None,
+             keep_params: bool = False) -> GridResult:
     """Run the batched co-design sweep. ``data_cfg`` is any
     :class:`~repro.data.sources.EventSource` — file-backed
     (DVS128-Gesture / N-MNIST) or synthetic (a bare
@@ -614,6 +625,9 @@ def run_grid(data_cfg, model_cfg,
     (``resolve_dataset(..., split="val")``) so record accuracies are
     measured out-of-sample; ``None`` keeps the synthetic-generator
     behavior (train and eval sample the same stream).
+    ``keep_params=True`` additionally retains each cell's trained
+    weights on ``GridResult.final_params`` so a variant can be deployed
+    to the online serving path (see :class:`GridResult`).
     """
     _check_protocol(protocol)
     source = sources_mod.as_source(data_cfg)
@@ -653,6 +667,7 @@ def run_grid(data_cfg, model_cfg,
     opt_unfrozen = joint_optimizer(
         opt, adamw(sweep.lr if lr_p2m is None else lr_p2m))
     records: list[dict] = []
+    final_params: dict[tuple[float, int], dict] = {}
     for t_ms, ns in cells:
         ti = t_grid.index(t_ms)
         cfg_t = replace(
@@ -711,6 +726,16 @@ def run_grid(data_cfg, model_cfg,
                 [jnp.mean(leakage.retention_error(lk_s, RETENTION_V0, t),
                           axis=-1) for t in t_grid], axis=1)   # [G, n_t]
             ret_t = learned_surface[:, ti]                     # [G]
+
+        if keep_params:
+            # unpad the mesh lanes; frozen layer-1 params stay shared
+            unpad = lambda tree: jax.tree.map(lambda v: v[:G], tree)  # noqa: E731
+            final_params[(t_ms, ns)] = {
+                "p2m": (unpad(p2m_ps) if protocol == "unfrozen"
+                        else p2m_ps),
+                "backbone": unpad(bb_params_s),
+                "state": unpad(state_s),
+            }
 
         # batched eval: accuracy + spike statistics for bandwidth/energy
         eval_fn = make_batched_eval(cfg_t, leak_cfgs, protocol=protocol,
@@ -777,7 +802,8 @@ def run_grid(data_cfg, model_cfg,
 
     _normalize(records)
     return GridResult(records=records, retention=retention, labels=labels,
-                      grid=grid, protocol=protocol)
+                      grid=grid, protocol=protocol,
+                      final_params=final_params)
 
 
 def run_protocols(data_cfg, model_cfg,
@@ -785,7 +811,8 @@ def run_protocols(data_cfg, model_cfg,
                   protocols: tuple[str, ...] = PROTOCOLS,
                   log: Any = print,
                   executor: SweepExecutor | None = None,
-                  eval_data=None) -> dict[str, GridResult]:
+                  eval_data=None,
+                  keep_params: bool = False) -> dict[str, GridResult]:
     """Run the grid under several phase-2 protocols off ONE shared phase-1
     pretrain. ``data_cfg`` is any event source and ``eval_data`` an
     optional held-out eval source (see :func:`run_grid`). The
@@ -800,7 +827,7 @@ def run_protocols(data_cfg, model_cfg,
     pretrained = pretrain_backbone(key, data_cfg, model_cfg, sweep, log)
     return {p: run_grid(data_cfg, model_cfg, sweep, grid, log=log,
                         protocol=p, pretrained=pretrained, executor=executor,
-                        eval_data=eval_data)
+                        eval_data=eval_data, keep_params=keep_params)
             for p in protocols}
 
 
@@ -854,8 +881,7 @@ def paper_setup(fast: bool = False, hw: int = 16,
         eval_batches=2 if fast else 4,
         dataset=dataset, data_root=data_root)
     grid = fast_grid() if fast else paper_grid()
-    t_ok = tuple(t for t in grid.t_intg_grid_ms
-                 if _divides(t, coarse_ms) and _divides(t, data.duration_ms))
+    t_ok = fit_t_grid(grid.t_intg_grid_ms, data.duration_ms, coarse_ms)
     if not t_ok:
         raise ValueError(
             f"no T_INTG grid point fits dataset {dataset!r} "
@@ -863,6 +889,16 @@ def paper_setup(fast: bool = False, hw: int = 16,
             f"{coarse_ms:g} ms); pass --t-intg values that divide both")
     grid = replace(grid, t_intg_grid_ms=t_ok)
     return data, model, sweep_cfg, grid
+
+
+def fit_t_grid(t_grid_ms: Sequence[float], duration_ms: float,
+               coarse_ms: float) -> tuple[float, ...]:
+    """The T_INTG grid points that divide both the stream duration and
+    the backbone coarse window — short-recording datasets (real N-MNIST
+    ≈ 300 ms) drop the points that no longer fit. The single home of
+    this filter (paper_setup, benchmarks/table1, benchmarks/fig2)."""
+    return tuple(t for t in t_grid_ms
+                 if _divides(t, coarse_ms) and _divides(t, duration_ms))
 
 
 def _divides(t_ms: float, span_ms: float) -> bool:

@@ -33,11 +33,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.data import events as events_mod
-from repro.data.binning import bin_chunks, slot_us_for
+from repro.data.binning import bin_chunks, frames_to_events, slot_us_for
 from repro.data.cache import CACHE_DIRNAME, FrameCache
 from repro.data.formats import (
-    DVS128_SENSOR_HW, EventChunk, NMNIST_SENSOR_HW, read_aedat31,
-    read_nmnist_bin,
+    DVS128_SENSOR_HW, EventChunk, NMNIST_SENSOR_HW, concat_chunks,
+    read_aedat31, read_nmnist_bin,
 )
 
 DATASETS = ("synthetic-gesture", "synthetic-nmnist", "dvs128", "nmnist")
@@ -58,15 +58,23 @@ class EventSource:
     """The engine-facing event-stream contract (see module docstring).
 
     Concrete sources expose ``name``, ``height``, ``width``,
-    ``n_classes`` and ``duration_ms`` plus the two samplers. Everything
-    downstream of the seam (sweep engine, codesign harness, examples,
-    benchmarks) is source-agnostic.
+    ``n_classes``, ``duration_ms`` and ``sensor_hw`` plus the two batch
+    samplers and the replay entry point
+    (:meth:`iter_event_chunks` — one labeled sample as a timestamped
+    live stream, the seam the online serving engine in ``repro.stream``
+    consumes). Everything downstream of the seam (sweep engine, codesign
+    harness, streaming engine, examples, benchmarks) is source-agnostic.
     """
     name: str
     height: int
     width: int
     n_classes: int
     duration_ms: float
+    # native coordinate grid of replayed (t, x, y, p) chunks: the file
+    # sensor resolution for file-backed sources, the generator grid for
+    # synthetic ones. Consumers bin replayed chunks FROM this grid down
+    # to (height, width) — the same downscale the offline binner applies.
+    sensor_hw: tuple[int, int]
 
     def n_slots(self, t_intg_ms: float) -> int:
         n = self.duration_ms / t_intg_ms
@@ -85,6 +93,47 @@ class EventSource:
                                  ) -> tuple[jax.Array, jax.Array]:
         raise NotImplementedError
 
+    def iter_event_chunks(self, key: jax.Array, *, chunk_us: int,
+                          slot_us: int | None = None
+                          ) -> tuple[int, Iterator[EventChunk]]:
+        """Replay one labeled sample as a timestamped live stream.
+
+        Returns ``(label, chunks)`` where chunk ``i`` carries the raw
+        ``(t, x, y, p)`` records of the window
+        ``[i·chunk_us, (i+1)·chunk_us)`` in µs relative to stream start,
+        at the source's ``sensor_hw`` resolution. EMPTY chunks are
+        yielded too, so a replay consumer's clock advances through event
+        gaps (the capacitor keeps leaking while nothing arrives). The
+        stream spans exactly ``duration_ms``, i.e.
+        ``duration_ms·1000 / chunk_us`` chunks. ``slot_us`` is the fine
+        time grid synthetic sources generate events on (ignored by
+        file-backed sources, whose recordings carry real timestamps).
+        """
+        raise NotImplementedError
+
+
+def _replay_chunk_count(duration_ms: float, chunk_us: int) -> int:
+    n = duration_ms * 1000.0 / chunk_us
+    if abs(n - round(n)) > 1e-6 or round(n) < 1:
+        raise ValueError(f"chunk_us={chunk_us} does not divide the stream "
+                         f"duration {duration_ms} ms")
+    return int(round(n))
+
+
+def rechunk_events(ev: EventChunk, chunk_us: int, n_chunks: int
+                   ) -> Iterator[EventChunk]:
+    """Slice one event record (timestamps relative to stream start) into
+    ``n_chunks`` fixed-width timestamped chunks — the replay shape behind
+    :meth:`EventSource.iter_event_chunks`. Events at/after the stream end
+    are dropped; gaps yield empty chunks."""
+    order = np.argsort(ev.t, kind="stable")
+    t, x, y, p = ev.t[order], ev.x[order], ev.y[order], ev.p[order]
+    bounds = np.searchsorted(t, np.arange(n_chunks + 1, dtype=np.int64)
+                             * chunk_us)
+    for i in range(n_chunks):
+        lo, hi = int(bounds[i]), int(bounds[i + 1])
+        yield EventChunk(t=t[lo:hi], x=x[lo:hi], y=y[lo:hi], p=p[lo:hi])
+
 
 class SyntheticSource(EventSource):
     """Adapter: the analytic generator (repro.data.events) behind the
@@ -95,6 +144,7 @@ class SyntheticSource(EventSource):
         self.cfg = cfg
         self.name = cfg.name
         self.height, self.width = cfg.height, cfg.width
+        self.sensor_hw = (cfg.height, cfg.width)
         self.n_classes = cfg.n_classes
         self.duration_ms = cfg.duration_ms
 
@@ -105,6 +155,33 @@ class SyntheticSource(EventSource):
     def sample_batch_with_labels(self, key, labels, t_intg_ms, n_sub=1):
         return events_mod.sample_batch_with_labels(key, self.cfg, labels,
                                                    t_intg_ms, n_sub=n_sub)
+
+    def iter_event_chunks(self, key, *, chunk_us, slot_us=None,
+                          label: int | None = None):
+        """Replay one synthetic sample: frames on the ``slot_us`` fine
+        grid (default: one slot per chunk) expanded into discrete events
+        (``binning.frames_to_events`` — deterministic within-slot spread,
+        so re-binning at ``slot_us`` recovers the frames exactly), then
+        sliced into ``chunk_us`` replay chunks."""
+        slot_us = chunk_us if slot_us is None else slot_us
+        if chunk_us % slot_us:
+            raise ValueError(f"chunk_us={chunk_us} must be a multiple of "
+                             f"the generation grid slot_us={slot_us}")
+        n_chunks = _replay_chunk_count(self.duration_ms, chunk_us)
+        n_total = n_chunks * (chunk_us // slot_us)
+        kl, ke = jax.random.split(key)
+        if label is None:
+            label = int(jax.random.randint(kl, (), 0, self.n_classes))
+
+        def lazy(lab=label):
+            # events materialize on first next(): a queued-but-not-yet-
+            # admitted stream costs nothing (see StreamEngine.serve)
+            frames = events_mod.sample_events(ke, self.cfg,
+                                              jnp.asarray([lab]), n_total, 1)
+            ev = frames_to_events(np.asarray(frames[0, :, 0]), slot_us)
+            yield from rechunk_events(ev, chunk_us, n_chunks)
+
+        return label, lazy()
 
 
 def as_source(data) -> EventSource:
@@ -226,6 +303,39 @@ class FileEventSource(EventSource):
             idx.append(pool[j])
         ev, _ = self._gather(np.asarray(idx), t_intg_ms, n_sub)
         return ev, jnp.asarray(labels.astype(np.int32))
+
+    def iter_event_chunks(self, key, *, chunk_us, slot_us=None,
+                          index: int | None = None):
+        """Replay one recording window as a live stream: its events
+        (window-clipped, timestamps shifted to stream-relative µs) sliced
+        into ``chunk_us`` chunks. ``index`` pins the sample (tests /
+        deterministic replay); default draws it from ``key``. ``slot_us``
+        is ignored — file recordings carry real timestamps."""
+        del slot_us
+        n_chunks = _replay_chunk_count(self.duration_ms, chunk_us)
+        if index is None:
+            index = int(jax.random.randint(key, (), 0, len(self.samples)))
+        s = self.samples[index]
+
+        def lazy(i=index):
+            # file I/O + the record's arrays materialize on first next(),
+            # so a queued-but-not-yet-admitted stream holds no event data
+            yield from rechunk_events(self.sample_events(i), chunk_us,
+                                      n_chunks)
+
+        return s.label, lazy()
+
+    def sample_events(self, index: int) -> EventChunk:
+        """One sample's full event record, window-clipped and shifted to
+        stream-relative timestamps (the record :func:`rechunk_events`
+        replays and the offline binner consumes)."""
+        s = self.samples[index]
+        ev = concat_chunks(s.chunks())
+        keep = ev.t >= s.t0_us
+        if s.t1_us is not None:
+            keep &= ev.t < s.t1_us
+        return EventChunk(t=ev.t[keep] - s.t0_us, x=ev.x[keep],
+                          y=ev.y[keep], p=ev.p[keep])
 
 
 def _make_cache(root: Path, dataset: str,

@@ -4,9 +4,12 @@ slot manager.
     PYTHONPATH=src python -m repro.launch.serve --arch internlm2-1.8b \
         --smoke --requests 8 --prompt-len 64 --gen 32
 
-The slot manager keeps a fixed decode batch; finished sequences free their
-slot for queued requests (prefill refills the KV rows). On CPU/smoke it
-demonstrates the full request lifecycle with the reduced config.
+The slot lifecycle (admit / step / release / refill) is the shared,
+model-agnostic ``repro.serve.slots.SlotManager`` — the same table the
+event-stream server (repro.stream.engine) batches on; this module is the
+LM-decode consumer: finished sequences free their slot for queued
+requests (prefill refills the KV rows). On CPU/smoke it demonstrates the
+full request lifecycle with the reduced config.
 """
 from __future__ import annotations
 
@@ -22,6 +25,7 @@ from repro.configs import get_config, smoke_variant
 from repro.configs.base import ShapeConfig
 from repro.launch.mesh import make_host_mesh
 from repro.models import lm
+from repro.serve.slots import SlotManager
 from repro.serve.steps import serve_config
 
 
@@ -35,7 +39,12 @@ class Request:
 
 
 class SlotServer:
-    """Fixed-batch continuous decoding over a shared KV cache."""
+    """Fixed-batch continuous decoding over a shared KV cache.
+
+    Slot bookkeeping is the shared :class:`repro.serve.slots.SlotManager`;
+    this class owns only the LM-specific lane state (KV rows, per-row
+    positions, prefill/decode steps).
+    """
 
     def __init__(self, cfg, mesh, batch: int, max_len: int):
         self.cfg = serve_config(cfg)
@@ -44,7 +53,7 @@ class SlotServer:
         self.max_len = max_len
         self.cache = lm.init_cache(self.cfg, batch, max_len)
         self.params = None
-        self.slots: list[Request | None] = [None] * batch
+        self.slots: SlotManager[Request] = SlotManager(batch)
         self.pos = jnp.zeros((batch,), jnp.int32)
 
         def one_decode(params, token, pos, cache):
@@ -56,26 +65,32 @@ class SlotServer:
 
     def admit(self, req: Request) -> bool:
         """Prefill ``req`` into a free slot. Returns False when full."""
-        try:
-            slot = self.slots.index(None)
-        except ValueError:
+        slot = self.slots.admit(req)
+        if slot is None:
             return False
-        # prefill this prompt alone (batch-1), then scatter kv into the slot
-        logits, cache1 = lm.prefill(self.params, req.prompt[None, :], self.cfg,
-                                    max_len=self.max_len)
+        try:
+            # prefill this prompt alone (batch-1), then scatter kv into
+            # the slot
+            logits, cache1 = lm.prefill(self.params, req.prompt[None, :],
+                                        self.cfg, max_len=self.max_len)
+        except Exception:
+            # a failed prefill must not leak the lane
+            self.slots.release(slot)
+            raise
         def put(big, small):
             return big.at[:, slot:slot + 1].set(small)
         self.cache = jax.tree.map(put, self.cache, cache1)
         tok = jnp.argmax(logits[0]).astype(jnp.int32)
         req.generated.append(int(tok))
-        self.slots[slot] = req
         self.pos = self.pos.at[slot].set(req.prompt.shape[0])
         return True
 
     def step(self) -> list[Request]:
         """One decode step for every occupied slot. Returns finished reqs."""
         tokens = jnp.array(
-            [[r.generated[-1] if r else 0] for r in self.slots], jnp.int32)
+            [[r.generated[-1] if r is not None else 0]
+             for r in (self.slots.get(i) for i in range(self.batch))],
+            jnp.int32)
         # per-row positions: every slot decodes at its own sequence length
         # (continuous batching); rope, cache writes, and kv masking are all
         # row-local in decode_attention
@@ -83,15 +98,13 @@ class SlotServer:
                                           self.pos, self.cache)
         nxt = jnp.argmax(logits[:, 0, :], axis=-1)
         finished = []
-        for i, r in enumerate(self.slots):
-            if r is None:
-                continue
+        for i, r in list(self.slots.occupied()):
             r.generated.append(int(nxt[i]))
             self.pos = self.pos.at[i].add(1)
             if len(r.generated) >= r.max_new:
                 r.done = True
                 finished.append(r)
-                self.slots[i] = None
+                self.slots.release(i)
         return finished
 
 

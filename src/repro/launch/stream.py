@@ -1,0 +1,168 @@
+"""Online streaming inference launcher: serve live event streams through
+a deployed P²M variant with continuous batching (repro.stream).
+
+Deployment handshake (docs/streaming.md): a sweep artifact is the menu,
+a serving checkpoint (written by ``repro.stream.deploy``) is the weights.
+Three ways in:
+
+  * ``--checkpoint DIR`` serves an existing deployment;
+    ``--artifact PATH`` optionally cross-checks it against the sweep
+    artifact it was deployed from;
+  * no checkpoint: a fast co-design sweep runs in-process
+    (``keep_params=True``), deploys the best record for ``--protocol``
+    (``--deploy-t-intg`` pins the integration time), and serves it;
+  * ``--smoke``: fully self-contained CI path — if the dataset is
+    file-backed and no ``--data-root`` is given, a miniature fixture
+    dataset is generated first (repro.data.fixtures), then the tiny
+    train → deploy → serve pipeline runs end-to-end on CPU.
+
+Emits one serving-stats JSON artifact (schema ``p2m-stream-serving/v1``):
+per-stream predictions, p50/p99 readout latency, events/s.
+
+  PYTHONPATH=src python -m repro.launch.stream --smoke --streams 8
+  PYTHONPATH=src python -m repro.launch.stream --dataset dvs128 \\
+      --data-root /data/DvsGesture --checkpoint artifacts/stream/ckpt_frozen \\
+      --streams 64 --capacity 16
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import shutil
+import sys
+import tempfile
+from pathlib import Path
+
+# runnable from any cwd (same pattern as launch/sweep.py)
+_SRC = str(Path(__file__).resolve().parents[2])
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
+FILE_BACKED = ("dvs128", "nmnist")
+
+
+def _make_fixture(dataset: str, root: Path) -> None:
+    from repro.data import fixtures
+
+    if dataset == "dvs128":
+        fixtures.make_dvs128_fixture(root, n_recordings=2,
+                                     trials_per_recording=6)
+    else:
+        fixtures.make_nmnist_fixture(root)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--dataset", type=str, default=None,
+                    choices=["synthetic-gesture", "synthetic-nmnist",
+                             "dvs128", "nmnist"],
+                    help="event source to stream (default: dvs128 under "
+                         "--smoke — served from a generated fixture — "
+                         "else synthetic-gesture)")
+    ap.add_argument("--data-root", type=str, default=None,
+                    help="dataset directory for file-backed datasets")
+    ap.add_argument("--artifact", type=str, default=None,
+                    help="sweep artifact JSON to cross-check the "
+                         "checkpoint against (deployment handshake)")
+    ap.add_argument("--checkpoint", type=str, default=None,
+                    help="serving checkpoint dir (repro.stream.deploy); "
+                         "omitted: a fast sweep trains and deploys one "
+                         "in-process")
+    ap.add_argument("--streams", type=int, default=8,
+                    help="number of event streams to serve")
+    ap.add_argument("--capacity", type=int, default=4,
+                    help="concurrent serving lanes (the jitted batch)")
+    ap.add_argument("--chunks-per-window", type=int, default=None,
+                    help="replay chunks per T_INTG window (must divide "
+                         "n_sub; default: one chunk per fine sub-slot)")
+    ap.add_argument("--protocol", type=str, default="frozen",
+                    choices=["frozen", "unfrozen"],
+                    help="which phase-2 protocol to train+deploy when no "
+                         "--checkpoint is given")
+    ap.add_argument("--deploy-t-intg", type=float, default=None,
+                    help="pin the deployed record's T_INTG (ms); default: "
+                         "best accuracy on the trained grid")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI scale: tiny train steps; generates a fixture "
+                         "dataset when file-backed data has no --data-root")
+    ap.add_argument("--hw", type=int, default=16,
+                    help="event-frame resolution")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", type=str, default="artifacts/stream")
+    args = ap.parse_args()
+
+    from repro.data import sources as sources_mod
+    from repro.stream import deploy as deploy_mod
+    from repro.stream.engine import StreamEngine
+
+    dataset = args.dataset or ("dvs128" if args.smoke
+                               else "synthetic-gesture")
+    data_root = args.data_root
+    out = Path(args.out)
+    out.mkdir(parents=True, exist_ok=True)
+
+    fixture_tmp = None
+    if dataset in FILE_BACKED and data_root is None:
+        if not args.smoke:
+            print(f"error: dataset {dataset!r} is file-backed: pass "
+                  f"--data-root (or --smoke to generate a fixture)",
+                  file=sys.stderr)
+            return 2
+        fixture_tmp = tempfile.mkdtemp(prefix=f"p2m-{dataset}-fixture-")
+        data_root = fixture_tmp
+        print(f"[stream] generating {dataset} fixture under {data_root}")
+        _make_fixture(dataset, Path(data_root))
+
+    try:
+        if args.checkpoint is not None:
+            dep = deploy_mod.load_deployment(args.checkpoint, args.artifact)
+        else:
+            # no weights on disk: train + deploy in-process (fast grid)
+            smoke_t = (100.0, 1000.0) if args.smoke else None
+            bundle = deploy_mod.train_and_deploy(
+                out / "deploy", dataset=dataset, data_root=data_root,
+                hw=args.hw, protocols=(args.protocol,), smoke=args.smoke,
+                t_intg_grid_ms=smoke_t,
+                deploy_t_intg_ms=(args.deploy_t_intg if args.deploy_t_intg
+                                  is not None else
+                                  (100.0 if args.smoke else None)))
+            dep = deploy_mod.load_deployment(
+                bundle["checkpoints"][args.protocol], bundle["artifact"])
+        source = sources_mod.resolve_dataset(dataset, hw=args.hw,
+                                             data_root=data_root,
+                                             split="all")
+        engine = StreamEngine(dep, capacity=args.capacity,
+                              chunks_per_window=args.chunks_per_window)
+        report = engine.serve(source, args.streams, seed=args.seed,
+                              log=print)
+    except (ValueError, OSError) as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+    finally:
+        if fixture_tmp is not None:
+            shutil.rmtree(fixture_tmp, ignore_errors=True)
+
+    art = report.to_artifact()
+    art["data"] = {"dataset": dataset, "data_root": data_root,
+                   "hw": args.hw, "n_classes": source.n_classes,
+                   "duration_ms": source.duration_ms}
+    path = out / f"stream_serving_{dataset}.json"
+    path.write_text(json.dumps(art, indent=2, default=float))
+
+    lat, thr = art["latency_ms"], art["throughput"]
+    print(f"\n=== stream serving ({art['n_streams']} streams, "
+          f"{report.capacity} lanes, T_INTG={art['t_intg_ms']:g}ms, "
+          f"variant {art['deployed']['label']}/{art['deployed']['protocol']}"
+          f") ===")
+    print(f"accuracy       {art['accuracy']:.3f}")
+    print(f"readout p50    {lat['readout_p50']:.2f} ms   "
+          f"p99 {lat['readout_p99']:.2f} ms")
+    print(f"throughput     {thr['events_per_s']:.0f} events/s   "
+          f"{thr['readouts_per_s']:.1f} readouts/s   "
+          f"{thr['streams_per_s']:.2f} streams/s")
+    print(f"artifact: {path}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

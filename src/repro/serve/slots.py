@@ -1,0 +1,98 @@
+"""Continuous-batching slot manager — the model-agnostic core shared by
+LM decode serving (repro.launch.serve) and event-stream serving
+(repro.stream.engine).
+
+A ``SlotManager`` is a fixed-capacity table of serving lanes. The pattern
+both servers follow:
+
+  * a queue of pending work items (LM requests / event streams);
+  * ``refill(queue)`` admits items from the queue head into free lanes at
+    every batching boundary (decode step / T_INTG window boundary);
+  * one jitted step advances every occupied lane at once (the fixed batch
+    is what keeps the compiled step shape-stable);
+  * finished lanes ``release()`` and the freed capacity is refilled on
+    the next boundary — no draining, no recompilation.
+
+The manager only does the bookkeeping (which lane holds what); resetting
+per-lane model state (KV rows, charge accumulators, LIF membranes) is the
+consumer's job, keyed by the lane index this class hands out.
+"""
+from __future__ import annotations
+
+from typing import Generic, Iterator, TypeVar
+
+T = TypeVar("T")
+
+
+class SlotManager(Generic[T]):
+    """Fixed-capacity lane table with admit / release / refill."""
+
+    def __init__(self, capacity: int):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self._items: list[T | None] = [None] * capacity
+
+    @property
+    def capacity(self) -> int:
+        return len(self._items)
+
+    @property
+    def n_occupied(self) -> int:
+        return sum(item is not None for item in self._items)
+
+    @property
+    def n_free(self) -> int:
+        return self.capacity - self.n_occupied
+
+    def is_empty(self) -> bool:
+        return self.n_occupied == 0
+
+    def is_full(self) -> bool:
+        return self.n_free == 0
+
+    def get(self, slot: int) -> T | None:
+        return self._items[slot]
+
+    def occupied(self) -> Iterator[tuple[int, T]]:
+        """(lane index, item) pairs for every occupied lane, in lane order
+        — the iteration every batched step runs."""
+        for i, item in enumerate(self._items):
+            if item is not None:
+                yield i, item
+
+    def active_mask(self) -> list[bool]:
+        """Per-lane occupancy, aligned with the batch axis of the jitted
+        step (lane i ↔ batch row i)."""
+        return [item is not None for item in self._items]
+
+    def admit(self, item: T) -> int | None:
+        """Place ``item`` into the lowest free lane. Returns the lane
+        index, or None when every lane is occupied."""
+        if item is None:
+            raise ValueError("cannot admit None (None marks a free lane)")
+        for i, existing in enumerate(self._items):
+            if existing is None:
+                self._items[i] = item
+                return i
+        return None
+
+    def release(self, slot: int) -> T:
+        """Free ``slot`` and return the item it held."""
+        item = self._items[slot]
+        if item is None:
+            raise ValueError(f"slot {slot} is already free")
+        self._items[slot] = None
+        return item
+
+    def refill(self, queue: list[T]) -> list[tuple[int, T]]:
+        """Admit items from the head of ``queue`` (in order, popping them)
+        until the queue is empty or every lane is full. Returns the
+        (lane, item) placements so the consumer can initialize per-lane
+        model state."""
+        placed: list[tuple[int, T]] = []
+        while queue and not self.is_full():
+            item = queue.pop(0)
+            slot = self.admit(item)
+            assert slot is not None
+            placed.append((slot, item))
+        return placed

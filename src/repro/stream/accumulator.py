@@ -1,0 +1,173 @@
+"""Leak-aware online charge accumulation: the jitted lane-batched steps
+behind the streaming engine.
+
+The paper's central constraint — the passive kernel capacitor loses
+charge between event arrival and readout — is an *online* phenomenon.
+This module integrates it online: each serving lane carries the linear
+charge state ``x`` of one stream's pixel array, and every arriving
+sub-slot of events advances the exact leak ODE before depositing its
+conv contribution:
+
+    x ← x · a + conv(events_k) · dv_unit,     a = e^(−dt/τ)  per filter
+
+Folding sub-slots ``k = 0..n_sub−1`` this way telescopes to the offline
+curve-fit forward's decay weighting ``Σ_k conv(ev_k)·a^(n_sub−1−k)``
+(core/p2m_layer.curvefit_reduce) — an EMPTY sub-slot is one multiply by
+``a`` (the capacitor keeps leaking while nothing arrives), and a chunk
+gap of Δt sub-slots decays by ``a^Δt`` without touching the event path.
+At each T_INTG boundary :func:`readout` adds the window's asymptotic
+drift, applies the fitted transfer curve + process variation, compares
+against the variant's threshold, 2x-pools the binary spikes onto the
+sensor output, accumulates them toward the backbone's coarse grid, and
+— on lanes crossing a coarse boundary — steps the stateful spiking
+backbone (core/snn.spiking_cnn_stream_step) and the rate-decoding logit
+average. The capacitor precharges (x ← 0) after every readout.
+
+Everything is masked per lane (``active`` / ``coarse_mask``), so one
+fixed-shape jitted step serves a continuously-batched lane table whose
+streams start, progress, and finish independently. Numerical parity with
+the offline batched forward (repro.stream.deploy.offline_forward) is
+pinned by tests/test_streaming.py.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import analog, leakage, p2m_layer, snn
+# the SAME conv the offline curvefit forward runs — parity depends on
+# identical padding/dimension numbers, so it is imported, not copied
+from repro.core.p2m_layer import _conv
+from repro.stream.deploy import Deployment
+
+
+def _mask(m: jax.Array, new: jax.Array, old: jax.Array) -> jax.Array:
+    """Per-lane select: lanes where ``m`` take ``new``, others keep
+    ``old`` (broadcast over trailing axes)."""
+    return jnp.where(m.reshape(m.shape + (1,) * (new.ndim - 1)), new, old)
+
+
+@dataclass(frozen=True)
+class StreamFns:
+    """The compiled serving surface for one deployment × lane capacity:
+    ``state`` is a pytree batched on the leading lane axis."""
+    init_state: Callable[[], dict]
+    reset_lane: Callable[[dict, int], dict]
+    fold: Callable[[dict, jax.Array, jax.Array], dict]
+    readout: Callable[[dict, jax.Array, jax.Array], tuple[dict, dict]]
+    in_hw: tuple[int, int]       # event-frame resolution the lanes consume
+    n_classes: int
+
+
+def make_stream_fns(dep: Deployment, *, capacity: int,
+                    chunk_slots: int) -> StreamFns:
+    """Build the jitted lane-batched fold/readout steps for ``dep``.
+
+    ``chunk_slots`` is the number of fine sub-slots one replay chunk
+    spans (``fold`` consumes frames ``[capacity, chunk_slots, H, W, 2]``);
+    it must divide ``n_sub`` so T_INTG boundaries land on chunk
+    boundaries.
+    """
+    cfg = dep.model_cfg
+    p2m_cfg = cfg.p2m
+    bb_cfg = cfg.backbone
+    n_sub = p2m_cfg.n_sub
+    if n_sub % chunk_slots:
+        raise ValueError(f"chunk_slots={chunk_slots} must divide "
+                         f"n_sub={n_sub}")
+    H, W = bb_cfg.input_hw
+    C = p2m_cfg.out_channels
+    hp, wp = H // p2m_cfg.stride // 2, W // p2m_cfg.stride // 2  # post-pool
+
+    # variant numerics, identical to the offline curvefit path: quantized
+    # weights, leak linearization from the DEPLOYED kernel, per-filter
+    # sub-slot decay a, window drift toward V_inf, transfer curve + PV.
+    w_q = p2m_layer.effective_weights(dep.params["p2m"], p2m_cfg)
+    coeffs = dep.coeffs
+    lk = leakage.leak_params_from_coeffs(w_q, coeffs)
+    a = leakage.decay_factor(lk.tau_ms, p2m_cfg.dt_ms)            # [C]
+    _, drift = p2m_layer.window_decay(lk, n_sub, p2m_cfg.dt_ms)   # [C]
+    pv = {"gain": dep.params["p2m"]["pv_gain"],
+          "offset": dep.params["p2m"]["pv_offset"]}
+    theta = coeffs.v_threshold
+    bb_params = dep.params["backbone"]
+    bn_state = dep.bn_state
+
+    def init_state() -> dict:
+        return {
+            # linear charge accumulator (pre-transfer-curve swing volts),
+            # at the conv OUTPUT resolution (stride applied)
+            "x": jnp.zeros((capacity, H // p2m_cfg.stride,
+                            W // p2m_cfg.stride, C)),
+            # pooled layer-1 spikes accumulating toward the next coarse
+            # backbone frame
+            "coarse": jnp.zeros((capacity, hp, wp, C)),
+            # backbone LIF membranes (per layer) + rate-decoding average
+            "mem": snn.spiking_cnn_stream_init(bb_cfg, capacity),
+            "logits": jnp.zeros((capacity, bb_cfg.n_classes)),
+            "n_coarse": jnp.zeros((capacity,), jnp.int32),
+        }
+
+    @jax.jit
+    def reset_lane(state: dict, lane: jax.Array) -> dict:
+        """Zero one lane's state (a newly admitted stream's precharge)."""
+        return jax.tree.map(
+            lambda v: v.at[lane].set(jnp.zeros_like(v[lane])), state)
+
+    @jax.jit
+    def fold(state: dict, frames: jax.Array, active: jax.Array) -> dict:
+        """Advance the charge ODE through one replay chunk.
+
+        ``frames`` [capacity, chunk_slots, H, W, 2] — the chunk's events
+        binned on the fine sub-slot grid; ``active`` [capacity] bool.
+        Each sub-slot decays the standing charge by ``a`` and deposits
+        its (dv_unit-scaled) conv — empty slots decay without deposit.
+        """
+        def sub_step(x, ev_k):
+            ideal = _conv(ev_k, w_q, p2m_cfg.stride) * p2m_cfg.analog.dv_unit
+            return x * a + ideal, None
+
+        x, _ = lax.scan(sub_step, state["x"], jnp.moveaxis(frames, 1, 0))
+        return {**state, "x": _mask(active, x, state["x"])}
+
+    @jax.jit
+    def readout(state: dict, active: jax.Array, coarse_mask: jax.Array
+                ) -> tuple[dict, dict]:
+        """T_INTG-boundary readout for every lane at once.
+
+        ``active`` gates which lanes read out (and precharge);
+        ``coarse_mask ⊆ active`` marks lanes whose coarse window just
+        completed — only those step the backbone and the logit average.
+        Returns the new state and per-lane outputs (binary spike map,
+        pooled spike count) for stats and parity checks.
+        """
+        v_pre = analog.transfer_curve(state["x"] + drift, p2m_cfg.analog, pv)
+        spikes = snn.spike_fn(v_pre - theta)                  # [B, H, W, C]
+        pooled = snn.max_pool(spikes)
+        coarse = state["coarse"] + pooled
+        logits_t, mem2 = snn.spiking_cnn_stream_step(
+            bb_params, bn_state, state["mem"], coarse, bb_cfg)
+        new_state = {
+            "x": _mask(active, jnp.zeros_like(state["x"]), state["x"]),
+            "coarse": _mask(active,
+                            _mask(coarse_mask, jnp.zeros_like(coarse),
+                                  coarse),
+                            state["coarse"]),
+            "mem": jax.tree.map(lambda n, o: _mask(coarse_mask, n, o),
+                                mem2, state["mem"]),
+            "logits": state["logits"] + _mask(coarse_mask, logits_t,
+                                              jnp.zeros_like(logits_t)),
+            "n_coarse": state["n_coarse"] + coarse_mask.astype(jnp.int32),
+        }
+        out = {"spikes": spikes,
+               "n_spikes": jnp.sum(pooled, axis=(1, 2, 3))
+               * active.astype(pooled.dtype)}
+        return new_state, out
+
+    return StreamFns(init_state=init_state, reset_lane=reset_lane,
+                     fold=fold, readout=readout, in_hw=(H, W),
+                     n_classes=bb_cfg.n_classes)

@@ -1,0 +1,351 @@
+"""Deployment handshake: sweep artifact + checkpoint → a servable model.
+
+The offline sweep engine (repro.core.sweep) measures every circuit
+variant; serving deploys ONE of them. The handshake has two halves:
+
+  * the **sweep artifact** (``p2m-codesign-sweep/v3`` JSON) is the menu —
+    :func:`select_record` picks the record (circuit, v_threshold, sigma,
+    T_INTG, n_sub, protocol) to deploy, by accuracy or explicitly;
+  * the **checkpoint** (repro.checkpoint.store layout) is the weights —
+    :func:`deploy_from_sweep` slices the chosen variant's trained
+    layer-1 + backbone (+ BN state) out of a ``keep_params=True`` grid
+    run and writes one committed checkpoint whose ``extra`` block embeds
+    the record and the full model config, so :func:`load_deployment`
+    rebuilds the servable :class:`Deployment` from the checkpoint alone.
+
+``offline_forward`` is the deployment-level batched reference forward —
+the oracle the streaming engine (repro.stream.engine) is tested against,
+and the precise statement of what "serving this record" computes.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import asdict, dataclass, replace
+from pathlib import Path
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import store
+from repro.core import leakage, p2m_layer, snn
+from repro.core.analog import AnalogConfig
+from repro.core.codesign import P2MModelConfig
+from repro.core.leakage import CircuitConfig, LeakageConfig
+from repro.core.p2m_layer import P2MConfig
+from repro.core.snn import LIFConfig, SpikingCNNConfig
+
+DEPLOY_SCHEMA = "p2m-stream-deploy/v1"
+
+
+# ---------------------------------------------------------------------------
+# model-config (de)serialization — the checkpoint must be self-describing
+# ---------------------------------------------------------------------------
+
+def model_config_to_dict(cfg: P2MModelConfig) -> dict:
+    """JSON-safe dict of the full model config (enums → values)."""
+    d = asdict(cfg)
+    d["p2m"]["leak"]["circuit"] = cfg.p2m.leak.circuit.value
+    return d
+
+
+def model_config_from_dict(d: dict) -> P2MModelConfig:
+    """Inverse of :func:`model_config_to_dict` (JSON round-trip safe:
+    lists are coerced back to the config tuples)."""
+    p2m = dict(d["p2m"])
+    leak = dict(p2m.pop("leak"))
+    leak["circuit"] = CircuitConfig(leak["circuit"])
+    analog_cfg = AnalogConfig(**p2m.pop("analog"))
+    bb = dict(d["backbone"])
+    lif = LIFConfig(**bb.pop("lif"))
+    bb["channels"] = tuple(bb["channels"])
+    bb["input_hw"] = tuple(bb["input_hw"])
+    return P2MModelConfig(
+        p2m=P2MConfig(**p2m, analog=analog_cfg,
+                      leak=LeakageConfig(**leak)),
+        backbone=SpikingCNNConfig(**bb, lif=lif),
+        coarse_window_ms=d["coarse_window_ms"])
+
+
+def leak_config_from_variant(variant: dict, base: LeakageConfig
+                             ) -> LeakageConfig:
+    """A record's ``"variant"`` dict (core/variant_grid.variant_dict) →
+    the LeakageConfig the serving path runs. The record carries the
+    RESOLVED comparator threshold, so it is pinned as the per-variant
+    override (no model-default fallback ambiguity at load time)."""
+    return replace(base,
+                   circuit=CircuitConfig(variant["circuit"]),
+                   null_mismatch=float(variant["null_mismatch"]),
+                   v_threshold=float(variant["v_threshold"]),
+                   sigma=float(variant.get("sigma") or 0.0))
+
+
+# ---------------------------------------------------------------------------
+# the servable bundle
+# ---------------------------------------------------------------------------
+
+@dataclass
+class Deployment:
+    """One servable variant: model config pinned to the deployed cell
+    (``p2m.t_intg_ms``/``n_sub``/``leak`` = the record's), its trained
+    params + BN state, and the sweep record it came from."""
+    model_cfg: P2MModelConfig
+    params: dict                 # {"p2m": {...}, "backbone": {...}}
+    bn_state: dict
+    record: dict
+    protocol: str = "frozen"
+
+    @property
+    def coeffs(self) -> leakage.LeakCoeffs:
+        """Branch-free numerics of the deployed variant — exactly what
+        the offline engine's jitted steps ran with."""
+        return leakage.leak_coeffs(self.model_cfg.p2m.leak,
+                                   self.model_cfg.p2m.v_threshold)
+
+    @property
+    def t_intg_ms(self) -> float:
+        return self.model_cfg.p2m.t_intg_ms
+
+    def deployed_meta(self) -> dict:
+        """The ``"deployed"`` block of the serving-stats artifact."""
+        return {"label": self.record.get("label"),
+                "protocol": self.protocol,
+                "t_intg_ms": self.t_intg_ms,
+                "n_sub": self.model_cfg.p2m.n_sub,
+                "variant": self.record.get("variant"),
+                "accuracy_offline": self.record.get("accuracy")}
+
+
+def offline_forward(dep: Deployment, events: jax.Array) -> dict:
+    """The deployment's offline batched forward — the reference the
+    online engine must match (tests/test_streaming.py).
+
+    ``events``: [B, T, n_sub, H, W, 2] binned frames over the full
+    stream. Returns the intermediate tensors of the serving contract:
+    layer-1 ``spikes`` [B, T, H, W, C] and ``v_pre``, the 2x-``pooled``
+    spike maps, the backbone-grid ``coarse`` counts, and the rate-decoded
+    ``logits`` [B, n_classes].
+    """
+    cfg = dep.model_cfg
+    spikes, v_pre = p2m_layer.p2m_forward_curvefit_coeffs(
+        dep.params["p2m"], events, cfg.p2m, dep.coeffs)
+    B, T = spikes.shape[:2]
+    tb = snn.max_pool(spikes.reshape((B * T,) + spikes.shape[2:]))
+    pooled = tb.reshape((B, T) + tb.shape[1:])
+    coarse = p2m_layer.coarsen_spikes(pooled, cfg.coarsen_group())
+    logits, _, _ = snn.spiking_cnn_apply(dep.params["backbone"],
+                                         dep.bn_state, coarse, cfg.backbone,
+                                         train=False)
+    return {"spikes": spikes, "v_pre": v_pre, "pooled": pooled,
+            "coarse": coarse, "logits": logits}
+
+
+def fresh_deployment(model_cfg: P2MModelConfig, *, seed: int = 0,
+                     protocol: str = "frozen") -> Deployment:
+    """An UNTRAINED deployment (fresh init) — serving-path benchmarks
+    measure latency/throughput, which do not need trained weights."""
+    from repro.core import codesign, variant_grid
+
+    params, state = codesign.model_init(jax.random.PRNGKey(seed), model_cfg)
+    lc = model_cfg.p2m.leak
+    record = {
+        "label": variant_grid.variant_label(lc),
+        "t_intg_ms": model_cfg.p2m.t_intg_ms,
+        "n_sub": model_cfg.p2m.n_sub,
+        "variant": variant_grid.variant_dict(
+            lc, v_threshold_default=model_cfg.p2m.v_threshold,
+            n_sub=model_cfg.p2m.n_sub),
+        "accuracy": None,
+        "untrained": True,
+    }
+    return Deployment(model_cfg=model_cfg, params=params, bn_state=state,
+                      record=record, protocol=protocol)
+
+
+# ---------------------------------------------------------------------------
+# record selection
+# ---------------------------------------------------------------------------
+
+def select_record(records: list[dict], *, protocol: str | None = None,
+                  t_intg_ms: float | None = None,
+                  label: str | None = None) -> dict:
+    """Pick the record to deploy: filter by protocol / T_INTG / variant
+    label, then take the best accuracy (ties → shortest T_INTG, then
+    label order — deterministic)."""
+    pool = [r for r in records
+            if (protocol is None or r.get("protocol") == protocol)
+            and (t_intg_ms is None or r["t_intg_ms"] == t_intg_ms)
+            and (label is None or r["label"] == label)]
+    if not pool:
+        raise ValueError(
+            f"no sweep record matches protocol={protocol!r} "
+            f"t_intg_ms={t_intg_ms!r} label={label!r} "
+            f"({len(records)} records total)")
+    return sorted(pool, key=lambda r: (-r["accuracy"], r["t_intg_ms"],
+                                       r["label"]))[0]
+
+
+def select_from_artifact(artifact: dict | str | Path, **kwargs) -> dict:
+    """``select_record`` over a sweep-artifact dict or JSON path."""
+    if isinstance(artifact, (str, Path)):
+        artifact = json.loads(Path(artifact).read_text())
+    schema = artifact.get("schema", "")
+    if not str(schema).startswith("p2m-codesign-sweep/"):
+        raise ValueError(f"not a co-design sweep artifact "
+                         f"(schema={schema!r})")
+    return select_record(artifact["records"], **kwargs)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint save / load
+# ---------------------------------------------------------------------------
+
+def save_deployment(directory: str | Path, dep: Deployment) -> Path:
+    """Write one committed, self-describing serving checkpoint."""
+    tree = {"params": dep.params, "bn_state": dep.bn_state}
+    extra = {
+        "deploy_schema": DEPLOY_SCHEMA,
+        "protocol": dep.protocol,
+        "record": dep.record,
+        "model_config": model_config_to_dict(dep.model_cfg),
+    }
+    return store.save_checkpoint(directory, 0, tree, extra)
+
+
+def load_deployment(directory: str | Path,
+                    artifact: dict | str | Path | None = None) -> Deployment:
+    """Rebuild a :class:`Deployment` from a serving checkpoint.
+
+    ``artifact`` optionally cross-checks the checkpoint against the sweep
+    artifact it was deployed from: the embedded record must appear there
+    (same label / protocol / T_INTG) — the handshake guard against
+    serving weights whose menu entry was regenerated.
+    """
+    tree, extra = store.load_checkpoint(directory)
+    if extra.get("deploy_schema") != DEPLOY_SCHEMA:
+        raise ValueError(
+            f"{directory} is not a streaming deployment checkpoint "
+            f"(extra.deploy_schema={extra.get('deploy_schema')!r}; "
+            f"expected {DEPLOY_SCHEMA!r})")
+    tree = jax.tree.map(jnp.asarray, tree)
+    dep = Deployment(
+        model_cfg=model_config_from_dict(extra["model_config"]),
+        params=tree["params"], bn_state=tree["bn_state"],
+        record=extra["record"], protocol=extra["protocol"])
+    if artifact is not None:
+        _check_against_artifact(dep, artifact)
+    return dep
+
+
+def _check_against_artifact(dep: Deployment,
+                            artifact: dict | str | Path) -> None:
+    if isinstance(artifact, (str, Path)):
+        artifact = json.loads(Path(artifact).read_text())
+    key = ("label", "protocol", "t_intg_ms", "n_sub")
+    want = tuple(dep.record.get(k) for k in key)
+    for r in artifact.get("records", []):
+        if tuple(r.get(k) for k in key) == want:
+            return
+    raise ValueError(
+        f"checkpoint record {dict(zip(key, want))} not found in the sweep "
+        f"artifact — the artifact and checkpoint are from different runs")
+
+
+def deploy_from_sweep(result: Any, model_cfg: P2MModelConfig, record: dict,
+                      directory: str | Path) -> Path:
+    """Slice ``record``'s variant out of a ``keep_params=True``
+    :class:`~repro.core.sweep.GridResult` and write its serving
+    checkpoint. Frozen cells share one layer-1; unfrozen cells carry a
+    per-variant stacked layer-1 that is sliced like the backbone."""
+    cell = (record["t_intg_ms"], record["n_sub"])
+    if cell not in result.final_params:
+        raise ValueError(
+            f"grid result holds no final params for cell {cell} — run the "
+            f"sweep with keep_params=True (cells kept: "
+            f"{sorted(result.final_params)})")
+    g = list(result.labels).index(record["label"])
+    fp = result.final_params[cell]
+    take = lambda tree: jax.tree.map(lambda v: v[g], tree)  # noqa: E731
+    p2m_params = (take(fp["p2m"]) if result.protocol == "unfrozen"
+                  else fp["p2m"])
+    leak = leak_config_from_variant(record["variant"], model_cfg.p2m.leak)
+    cfg_cell = replace(model_cfg, p2m=replace(
+        model_cfg.p2m, t_intg_ms=record["t_intg_ms"],
+        n_sub=record["n_sub"], mode="curvefit", leak=leak))
+    dep = Deployment(model_cfg=cfg_cell,
+                     params={"p2m": p2m_params,
+                             "backbone": take(fp["backbone"])},
+                     bn_state=take(fp["state"]),
+                     record=record, protocol=result.protocol)
+    return save_deployment(directory, dep)
+
+
+# ---------------------------------------------------------------------------
+# one-call train → artifact + checkpoints (smoke CLI / tests)
+# ---------------------------------------------------------------------------
+
+def train_and_deploy(out_dir: str | Path, *, dataset: str = "synthetic-gesture",
+                     data_root: str | None = None, hw: int = 16,
+                     protocols: tuple[str, ...] = ("frozen",),
+                     t_intg_grid_ms: tuple[float, ...] | None = None,
+                     circuits: tuple[CircuitConfig, ...] | None = None,
+                     smoke: bool = False,
+                     deploy_t_intg_ms: float | None = None,
+                     log: Any = print) -> dict:
+    """Run a (fast-grid) co-design sweep with ``keep_params=True``, write
+    the sweep artifact, and deploy the best record per protocol as a
+    serving checkpoint. Returns ``{"artifact": path, "checkpoints":
+    {protocol: ckpt dir}, "records": {protocol: record}, "results":
+    {protocol: GridResult}, "source": train EventSource}``.
+
+    ``smoke`` shrinks the step counts to CI scale;
+    ``deploy_t_intg_ms`` pins the deployed record's integration time
+    (default: best accuracy anywhere on the grid).
+    """
+    from repro.core import sweep as engine
+    from repro.data import sources as sources_mod
+
+    out = Path(out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    data, model, sweep_cfg, grid = engine.paper_setup(
+        fast=True, hw=hw, dataset=dataset, data_root=data_root)
+    if smoke:
+        sweep_cfg = replace(sweep_cfg, batch_size=2, pretrain_steps=2,
+                            finetune_steps=1, eval_batches=1)
+    if t_intg_grid_ms is not None:
+        ok = set(engine.fit_t_grid(t_intg_grid_ms, data.duration_ms,
+                                   model.coarse_window_ms))
+        bad = [t for t in t_intg_grid_ms if t not in ok]
+        if bad:
+            raise ValueError(
+                f"T_INTG values {bad} do not divide the coarse window "
+                f"({model.coarse_window_ms:g} ms) and stream duration "
+                f"({data.duration_ms:g} ms)")
+        grid = replace(grid, t_intg_grid_ms=tuple(t_intg_grid_ms))
+    if circuits is not None:
+        grid = replace(grid, circuits=tuple(circuits))
+    eval_data, eval_split = sources_mod.resolve_eval_dataset(
+        dataset, hw=hw, data_root=data_root)
+    results = engine.run_protocols(data, model, sweep_cfg, grid,
+                                   protocols=protocols, log=log,
+                                   eval_data=eval_data, keep_params=True)
+    artifact = engine.protocols_artifact(results, extra_meta={
+        "data": {"name": data.name, "dataset": dataset,
+                 "data_root": data_root, "hw": data.height,
+                 "n_classes": data.n_classes,
+                 "duration_ms": data.duration_ms,
+                 "eval_split": eval_split}})
+    artifact_path = out / "codesign_grid_deploy.json"
+    artifact_path.write_text(json.dumps(artifact, indent=2, default=float))
+    checkpoints: dict[str, Path] = {}
+    chosen: dict[str, dict] = {}
+    for proto, result in results.items():
+        rec = select_record(result.records, t_intg_ms=deploy_t_intg_ms)
+        ckpt_dir = out / f"ckpt_{proto}"
+        deploy_from_sweep(result, model, rec, ckpt_dir)
+        checkpoints[proto] = ckpt_dir
+        chosen[proto] = rec
+        log(f"[deploy] {proto}: {rec['label']} @ T={rec['t_intg_ms']:g}ms "
+            f"acc={rec['accuracy']:.3f} -> {ckpt_dir}")
+    return {"artifact": artifact_path, "checkpoints": checkpoints,
+            "records": chosen, "results": results, "source": data}

@@ -1,0 +1,284 @@
+"""Online event-stream serving with continuous batching.
+
+The missing half of the offline reproduction: the sweep engine measures
+circuit variants in batch; this engine SERVES one deployed variant
+(repro.stream.deploy) against many concurrent live event streams.
+
+Lifecycle of one stream (see docs/streaming.md):
+
+  1. the replay layer (``EventSource.iter_event_chunks``) turns one
+     labeled recording — AEDAT / N-MNIST file or the synthetic generator
+     — into timestamped raw ``(t, x, y, p)`` chunks;
+  2. ``refill`` admits the stream into a free lane of the shared
+     :class:`~repro.serve.slots.SlotManager` at a T_INTG window boundary
+     (the lane's charge/membrane state is zeroed — precharge);
+  3. every replay tick, each occupied lane's next chunk is binned onto
+     the fine sub-slot grid (repro.data.binning semantics, sensor →
+     model downscale included) and ONE jitted lane-batched ``fold``
+     advances every lane's leak ODE + conv deposit together;
+  4. at each T_INTG boundary one jitted ``readout`` comparator-reads
+     every lane, accumulates pooled spikes toward the backbone coarse
+     grid, and — per lane, whenever ITS coarse window completes — steps
+     the stateful spiking backbone and the rate-decoded logit average;
+  5. after the stream's full duration the lane's prediction is
+     finalized, the slot is released, and the queue refills it.
+
+All lanes advance on one shared replay clock (micro-batching), but
+admission/finalization are per-lane — classic continuous batching, the
+same ``SlotManager`` contract the LM decode server uses.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import asdict, dataclass, field
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.binning import bin_chunks, slot_us_for
+from repro.data.formats import EventChunk
+from repro.data.sources import EventSource
+from repro.serve.slots import SlotManager
+from repro.stream.accumulator import make_stream_fns
+from repro.stream.deploy import Deployment
+
+STATS_SCHEMA = "p2m-stream-serving/v1"
+
+
+@dataclass
+class StreamResult:
+    """Per-stream serving outcome."""
+    stream_id: int
+    label: int
+    prediction: int
+    correct: bool
+    n_events: int
+    n_readouts: int
+    n_coarse_frames: int
+    admitted_window: int      # global window tick the stream was admitted
+    finished_window: int
+    logits: list[float] = field(default_factory=list)  # rate-decoded mean
+
+
+@dataclass
+class _Lane:
+    """Host-side state of one admitted stream."""
+    stream_id: int
+    label: int
+    chunks: Iterator[EventChunk]
+    n_windows: int
+    admitted_window: int
+    windows_done: int = 0
+    n_events: int = 0
+    t_cursor_us: int = 0
+
+
+@dataclass
+class ServingReport:
+    """Everything one serve() run produced; ``to_artifact()`` is the
+    serving-stats JSON the CLI emits and CI schema-checks."""
+    results: list[StreamResult]
+    deployed: dict
+    capacity: int
+    chunks_per_window: int
+    t_intg_ms: float
+    wall_s: float
+    total_events: int
+    total_readouts: int
+    total_layer1_spikes: float
+    readout_s: list[float] = field(default_factory=list)
+    fold_s: list[float] = field(default_factory=list)
+
+    @property
+    def accuracy(self) -> float:
+        if not self.results:
+            return 0.0
+        return sum(r.correct for r in self.results) / len(self.results)
+
+    def to_artifact(self) -> dict:
+        lat = lambda xs, q: (float(np.percentile(xs, q) * 1e3)  # noqa: E731
+                             if xs else 0.0)
+        wall = max(self.wall_s, 1e-9)
+        return {
+            "schema": STATS_SCHEMA,
+            "deployed": self.deployed,
+            "n_streams": len(self.results),
+            "capacity": self.capacity,
+            "chunks_per_window": self.chunks_per_window,
+            "t_intg_ms": self.t_intg_ms,
+            "accuracy": self.accuracy,
+            "streams": [asdict(r) for r in self.results],
+            "latency_ms": {
+                "readout_p50": lat(self.readout_s, 50),
+                "readout_p99": lat(self.readout_s, 99),
+                "readout_mean": (float(np.mean(self.readout_s) * 1e3)
+                                 if self.readout_s else 0.0),
+                "fold_p50": lat(self.fold_s, 50),
+                "fold_p99": lat(self.fold_s, 99),
+            },
+            "throughput": {
+                "wall_s": self.wall_s,
+                "events_per_s": self.total_events / wall,
+                "readouts_per_s": self.total_readouts / wall,
+                "streams_per_s": len(self.results) / wall,
+                "layer1_spikes_per_s": self.total_layer1_spikes / wall,
+            },
+        }
+
+
+class StreamEngine:
+    """Continuous-batching online inference over one deployment.
+
+    ``capacity`` is the fixed lane count of the jitted steps (the decode
+    batch of LM serving); ``chunks_per_window`` sets the replay
+    granularity — how many raw-event chunks arrive per T_INTG window
+    (must divide ``n_sub``; default: one chunk per fine sub-slot, the
+    finest arrival granularity the binned contract expresses).
+    """
+
+    def __init__(self, dep: Deployment, *, capacity: int = 4,
+                 chunks_per_window: int | None = None):
+        cfg = dep.model_cfg.p2m
+        self.dep = dep
+        self.capacity = capacity
+        self.n_sub = cfg.n_sub
+        self.chunks_per_window = (self.n_sub if chunks_per_window is None
+                                  else chunks_per_window)
+        if self.n_sub % self.chunks_per_window:
+            raise ValueError(
+                f"chunks_per_window={self.chunks_per_window} must divide "
+                f"n_sub={self.n_sub}")
+        self.chunk_slots = self.n_sub // self.chunks_per_window
+        self.slot_us = slot_us_for(cfg.t_intg_ms, cfg.n_sub)
+        self.chunk_us = self.slot_us * self.chunk_slots
+        self.group = dep.model_cfg.coarsen_group()
+        self.fns = make_stream_fns(dep, capacity=capacity,
+                                   chunk_slots=self.chunk_slots)
+
+    # ------------------------------------------------------------------
+    def open_stream(self, source: EventSource, key: jax.Array,
+                    stream_id: int, window: int) -> _Lane:
+        """Admission-ready lane record for one replayed sample."""
+        h, w = self.fns.in_hw
+        if (source.height, source.width) != (h, w):
+            raise ValueError(
+                f"source resolution {(source.height, source.width)} does "
+                f"not match the deployed model's input {(h, w)}")
+        if source.n_classes > self.fns.n_classes:
+            raise ValueError(
+                f"source has {source.n_classes} classes but the deployed "
+                f"head predicts {self.fns.n_classes} — labels past the "
+                f"head are unservable")
+        n_windows = source.n_slots(self.dep.t_intg_ms)
+        if n_windows % self.group:
+            raise ValueError(
+                f"stream duration {source.duration_ms:g} ms yields "
+                f"{n_windows} T_INTG windows, not a multiple of the "
+                f"deployed coarse group {self.group} "
+                f"(coarse_window_ms={self.dep.model_cfg.coarse_window_ms:g})"
+                f" — the backbone would never step; deploy a record whose "
+                f"coarse window fits the stream")
+        label, chunks = source.iter_event_chunks(
+            key, chunk_us=self.chunk_us, slot_us=self.slot_us)
+        return _Lane(stream_id=stream_id, label=label, chunks=chunks,
+                     n_windows=n_windows, admitted_window=window)
+
+    def _bin_chunk(self, source: EventSource, lane: _Lane) -> np.ndarray:
+        """Next replay chunk of ``lane`` → fine sub-slot frames
+        [chunk_slots, H, W, 2] (offline-binner semantics: same slot grid,
+        same sensor → model downscale)."""
+        chunk = next(lane.chunks)
+        lane.n_events += len(chunk)
+        frames = bin_chunks([chunk], n_total=self.chunk_slots,
+                            slot_us=self.slot_us,
+                            sensor_hw=source.sensor_hw,
+                            out_hw=self.fns.in_hw,
+                            t0_us=lane.t_cursor_us)
+        lane.t_cursor_us += self.chunk_us
+        return frames
+
+    # ------------------------------------------------------------------
+    def serve(self, source: EventSource, n_streams: int, *, seed: int = 0,
+              log=None) -> ServingReport:
+        """Serve ``n_streams`` replayed samples of ``source`` to
+        completion and return the serving report."""
+        key = jax.random.PRNGKey(seed)
+        queue = [self.open_stream(source, jax.random.fold_in(key, i), i, 0)
+                 for i in range(n_streams)]
+        slots: SlotManager[_Lane] = SlotManager(self.capacity)
+        state = self.fns.init_state()
+        results: list[StreamResult] = []
+        report = ServingReport(
+            results=results, deployed=self.dep.deployed_meta(),
+            capacity=self.capacity,
+            chunks_per_window=self.chunks_per_window,
+            t_intg_ms=self.dep.t_intg_ms, wall_s=0.0, total_events=0,
+            total_readouts=0, total_layer1_spikes=0.0)
+        h, w = self.fns.in_hw
+        # warmup: compile fold/readout on a throwaway state so the
+        # latency percentiles measure steady-state serving, not jit
+        ws = self.fns.fold(self.fns.init_state(),
+                           jnp.zeros((self.capacity, self.chunk_slots,
+                                      h, w, 2)),
+                           jnp.zeros((self.capacity,), bool))
+        ws, _ = self.fns.readout(ws, jnp.zeros((self.capacity,), bool),
+                                 jnp.zeros((self.capacity,), bool))
+        jax.block_until_ready(ws["logits"])
+        window = 0
+        t_start = time.perf_counter()
+        while queue or not slots.is_empty():
+            # admit pending streams into free lanes (window boundary)
+            for lane_i, lane in slots.refill(queue):
+                lane.admitted_window = window
+                state = self.fns.reset_lane(state, lane_i)
+            active = jnp.asarray(slots.active_mask())
+            # one T_INTG window = chunks_per_window replay ticks
+            for _ in range(self.chunks_per_window):
+                frames = np.zeros(
+                    (self.capacity, self.chunk_slots, h, w, 2), np.float32)
+                for lane_i, lane in slots.occupied():
+                    frames[lane_i] = self._bin_chunk(source, lane)
+                t0 = time.perf_counter()
+                state = self.fns.fold(state, jnp.asarray(frames), active)
+                jax.block_until_ready(state["x"])
+                report.fold_s.append(time.perf_counter() - t0)
+            # readout at the T_INTG boundary; per-lane coarse boundaries
+            coarse_mask = np.zeros((self.capacity,), bool)
+            for lane_i, lane in slots.occupied():
+                coarse_mask[lane_i] = \
+                    (lane.windows_done + 1) % self.group == 0
+            t0 = time.perf_counter()
+            state, out = self.fns.readout(state, active,
+                                          jnp.asarray(coarse_mask))
+            jax.block_until_ready(state["logits"])
+            report.readout_s.append(time.perf_counter() - t0)
+            n_spikes = np.asarray(out["n_spikes"])
+            window += 1
+            for lane_i, lane in list(slots.occupied()):
+                lane.windows_done += 1
+                report.total_readouts += 1
+                report.total_layer1_spikes += float(n_spikes[lane_i])
+                if lane.windows_done < lane.n_windows:
+                    continue
+                # stream complete: finalize the rate-decoded prediction
+                n_c = int(state["n_coarse"][lane_i])
+                logits = np.asarray(state["logits"][lane_i]) / max(n_c, 1)
+                pred = int(np.argmax(logits))
+                report.total_events += lane.n_events
+                results.append(StreamResult(
+                    stream_id=lane.stream_id, label=lane.label,
+                    prediction=pred, correct=pred == lane.label,
+                    n_events=lane.n_events,
+                    n_readouts=lane.windows_done, n_coarse_frames=n_c,
+                    admitted_window=lane.admitted_window,
+                    finished_window=window,
+                    logits=[float(v) for v in logits]))
+                slots.release(lane_i)
+                if log is not None:
+                    log(f"[stream {lane.stream_id}] label={lane.label} "
+                        f"pred={pred} readouts={lane.windows_done} "
+                        f"events={lane.n_events}")
+        report.wall_s = time.perf_counter() - t_start
+        return report

@@ -1,0 +1,70 @@
+"""Unit tests for the shared continuous-batching slot manager
+(repro.serve.slots) — the lane table both the LM decode server
+(launch/serve.py) and the event-stream engine (repro.stream.engine)
+batch on."""
+import pytest
+
+from repro.serve.slots import SlotManager
+
+
+class TestSlotManager:
+    def test_admit_until_full(self):
+        m = SlotManager(3)
+        assert m.capacity == 3 and m.is_empty() and not m.is_full()
+        assert [m.admit(f"r{i}") for i in range(3)] == [0, 1, 2]
+        assert m.is_full() and m.n_free == 0 and m.n_occupied == 3
+        assert m.admit("overflow") is None          # full → rejected
+        assert m.active_mask() == [True, True, True]
+
+    def test_release_frees_lowest_lane_for_reuse(self):
+        m = SlotManager(2)
+        m.admit("a"), m.admit("b")
+        assert m.release(0) == "a"
+        assert m.active_mask() == [False, True]
+        assert m.admit("c") == 0                    # lowest free lane
+        assert m.get(0) == "c" and m.get(1) == "b"
+
+    def test_release_empty_lane_raises(self):
+        m = SlotManager(2)
+        with pytest.raises(ValueError, match="already free"):
+            m.release(1)
+
+    def test_admit_none_raises(self):
+        with pytest.raises(ValueError, match="None"):
+            SlotManager(1).admit(None)
+
+    def test_capacity_validation(self):
+        with pytest.raises(ValueError):
+            SlotManager(0)
+
+    def test_refill_pops_queue_in_order(self):
+        m = SlotManager(2)
+        queue = ["a", "b", "c"]
+        placed = m.refill(queue)
+        assert placed == [(0, "a"), (1, "b")]
+        assert queue == ["c"]                       # only admitted popped
+        assert m.refill(queue) == []                # full → no-op
+        m.release(1)
+        assert m.refill(queue) == [(1, "c")] and queue == []
+
+    def test_occupied_iterates_lane_order(self):
+        m = SlotManager(3)
+        m.admit("a"), m.admit("b"), m.admit("c")
+        m.release(1)
+        assert list(m.occupied()) == [(0, "a"), (2, "c")]
+
+    def test_continuous_recycling(self):
+        """More items than capacity complete via release+refill — the
+        serving pattern both consumers run."""
+        m = SlotManager(2)
+        queue = [f"r{i}" for i in range(7)]
+        done = []
+        steps = 0
+        while queue or not m.is_empty():
+            m.refill(queue)
+            # every occupied lane "finishes" this step
+            for lane, item in list(m.occupied()):
+                done.append(m.release(lane))
+            steps += 1
+            assert steps < 20
+        assert done == [f"r{i}" for i in range(7)]

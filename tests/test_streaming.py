@@ -1,0 +1,467 @@
+"""Online streaming inference subsystem tests (repro.stream).
+
+The load-bearing guarantee: replaying a fixture recording through the
+online leak-aware accumulator and reading out at every T_INTG boundary
+matches the offline path — ``data.binning.bin_chunks`` frames through
+the offline batched forward (``repro.stream.deploy.offline_forward``) —
+within tight tolerance, across ≥2 T_INTG values, ≥2 circuit variants,
+and BOTH phase-2 protocols' deployed checkpoints."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core.leakage import CircuitConfig  # noqa: E402
+from repro.data import fixtures, sources  # noqa: E402
+from repro.data.binning import bin_chunks, slot_us_for  # noqa: E402
+from repro.data.formats import concat_chunks  # noqa: E402
+from repro.stream import deploy as deploy_mod  # noqa: E402
+from repro.stream.engine import STATS_SCHEMA, StreamEngine  # noqa: E402
+
+HW = 16
+
+
+@pytest.fixture(scope="module")
+def fixture_root(tmp_path_factory):
+    root = tmp_path_factory.mktemp("dvs128-stream")
+    fixtures.make_dvs128_fixture(root, n_recordings=1,
+                                 trials_per_recording=4)
+    return root
+
+
+@pytest.fixture(scope="module")
+def file_source(fixture_root):
+    return sources.resolve_dataset("dvs128", hw=HW,
+                                   data_root=str(fixture_root), split="all")
+
+
+@pytest.fixture(scope="module")
+def trained(fixture_root, tmp_path_factory):
+    """One tiny sweep over 2 circuits × 2 T_INTG with keep_params, both
+    protocols — the deployment menu every parity case slices from."""
+    out = tmp_path_factory.mktemp("deploy")
+    return deploy_mod.train_and_deploy(
+        out, dataset="dvs128", data_root=str(fixture_root), hw=HW,
+        protocols=("frozen", "unfrozen"), smoke=True,
+        t_intg_grid_ms=(100.0, 1000.0),
+        circuits=(CircuitConfig.BASIC, CircuitConfig.NULLIFIED),
+        log=lambda *_: None)
+
+
+def _offline_frames(source, index: int, t_intg_ms: float, n_sub: int
+                    ) -> np.ndarray:
+    """The OFFLINE binning of one recording: [n_slots, n_sub, H, W, 2]."""
+    n_slots = source.n_slots(t_intg_ms)
+    slot_us = slot_us_for(t_intg_ms, n_sub)
+    frames = bin_chunks([source.sample_events(index)],
+                        n_total=n_slots * n_sub, slot_us=slot_us,
+                        sensor_hw=source.sensor_hw, out_hw=(HW, HW))
+    return frames.reshape(n_slots, n_sub, HW, HW, 2)
+
+
+class _PinnedSource:
+    """Source wrapper replaying a FIXED sample sequence (round-robin) —
+    so the parity tests know exactly which recording each serving lane
+    streamed."""
+
+    def __init__(self, src, indices):
+        self._src = src
+        self._indices = list(indices)
+        self._i = 0
+        for attr in ("name", "height", "width", "n_classes", "duration_ms",
+                     "sensor_hw"):
+            setattr(self, attr, getattr(src, attr))
+
+    def n_slots(self, t_intg_ms):
+        return self._src.n_slots(t_intg_ms)
+
+    def iter_event_chunks(self, key, *, chunk_us, slot_us=None):
+        idx = self._indices[self._i % len(self._indices)]
+        self._i += 1
+        return self._src.iter_event_chunks(key, chunk_us=chunk_us,
+                                           slot_us=slot_us, index=idx)
+
+
+# ---------------------------------------------------------------------------
+# replay layer
+# ---------------------------------------------------------------------------
+
+class TestReplay:
+    def test_file_replay_rebins_to_offline_frames(self, file_source):
+        """Chunk-by-chunk re-binning of the replayed stream reproduces
+        the offline binner's frames exactly (same slot grid, same
+        sensor→model downscale)."""
+        t_intg, n_sub = 100.0, 2
+        slot_us = slot_us_for(t_intg, n_sub)
+        chunk_us = slot_us  # one chunk per fine sub-slot
+        label, chunks = file_source.iter_event_chunks(
+            jax.random.PRNGKey(0), chunk_us=chunk_us, index=1)
+        assert label == file_source.samples[1].label
+        offline = _offline_frames(file_source, 1, t_intg, n_sub)
+        n_total = offline.shape[0] * n_sub
+        got = []
+        for i, c in enumerate(chunks):
+            got.append(bin_chunks([c], n_total=1, slot_us=slot_us,
+                                  sensor_hw=file_source.sensor_hw,
+                                  out_hw=(HW, HW), t0_us=i * chunk_us)[0])
+        assert len(got) == n_total          # empty chunks yielded too
+        np.testing.assert_array_equal(
+            np.stack(got).reshape(offline.shape), offline)
+
+    def test_file_replay_conserves_events(self, file_source):
+        ev = file_source.sample_events(0)
+        _, chunks = file_source.iter_event_chunks(
+            jax.random.PRNGKey(0), chunk_us=50_000, index=0)
+        replayed = concat_chunks(chunks)
+        dur_us = int(file_source.duration_ms * 1000)
+        in_window = int((ev.t < dur_us).sum())
+        assert len(replayed) == in_window > 0
+        assert (np.diff(replayed.t) >= 0).all()    # time-ordered replay
+
+    def test_synthetic_replay_chunks(self):
+        src = sources.resolve_dataset("synthetic-gesture", hw=HW)
+        label, chunks = src.iter_event_chunks(
+            jax.random.PRNGKey(3), chunk_us=100_000, slot_us=50_000)
+        chunks = list(chunks)
+        assert 0 <= label < src.n_classes
+        assert len(chunks) == 20            # 2000 ms / 100 ms
+        total = sum(len(c) for c in chunks)
+        assert total > 0
+        for i, c in enumerate(chunks):      # timestamps inside the chunk
+            if len(c):
+                assert c.t.min() >= i * 100_000
+                assert c.t.max() < (i + 1) * 100_000
+
+    def test_bad_chunk_width_raises(self, file_source):
+        with pytest.raises(ValueError, match="does not divide"):
+            file_source.iter_event_chunks(jax.random.PRNGKey(0),
+                                          chunk_us=300_000)
+
+
+# ---------------------------------------------------------------------------
+# backbone streaming step parity (snn)
+# ---------------------------------------------------------------------------
+
+def test_backbone_stream_step_matches_batched():
+    from repro.core import snn
+
+    cfg = snn.SpikingCNNConfig(channels=(8, 16, 16, 16), input_hw=(HW, HW),
+                               fc_hidden=32, n_classes=5,
+                               first_layer_external=True)
+    key = jax.random.PRNGKey(0)
+    params, state = snn.spiking_cnn_init(key, cfg)
+    B, T = 2, 6
+    x = jax.random.poisson(jax.random.PRNGKey(1),
+                           1.0, (B, T, HW // 2, HW // 2, 8)).astype(
+                               jnp.float32)
+    logits_ref, _, _ = snn.spiking_cnn_apply(params, state, x, cfg,
+                                             train=False)
+    mem = snn.spiking_cnn_stream_init(cfg, B)
+    acc = jnp.zeros((B, cfg.n_classes))
+    for t in range(T):
+        lt, mem = snn.spiking_cnn_stream_step(params, state, mem,
+                                              x[:, t], cfg)
+        acc = acc + lt
+    np.testing.assert_allclose(np.asarray(acc / T), np.asarray(logits_ref),
+                               rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# streaming vs offline parity — the acceptance bar
+# ---------------------------------------------------------------------------
+
+class TestStreamingOfflineParity:
+    def _parity_case(self, trained, file_source, tmp_path, protocol,
+                     record, capacity=2):
+        result = trained["results"][protocol]
+        ckpt = tmp_path / f"ckpt_{protocol}_{record['label']}_" \
+                          f"{record['t_intg_ms']:g}"
+        deploy_mod.deploy_from_sweep(result, _model_of(trained), record,
+                                     ckpt)
+        dep = deploy_mod.load_deployment(ckpt)
+        n_sub = dep.model_cfg.p2m.n_sub
+        indices = [0, 1, 2]
+        frames = np.stack([_offline_frames(file_source, i,
+                                           record["t_intg_ms"], n_sub)
+                           for i in indices])
+        off = deploy_mod.offline_forward(dep, jnp.asarray(frames))
+        off_logits = np.asarray(off["logits"])
+
+        engine = StreamEngine(dep, capacity=capacity)
+        report = engine.serve(_PinnedSource(file_source, indices),
+                              len(indices), seed=0)
+        assert len(report.results) == len(indices)
+        by_id = {r.stream_id: r for r in report.results}
+        for k, idx in enumerate(indices):
+            r = by_id[k]
+            assert r.label == file_source.samples[idx].label
+            np.testing.assert_allclose(
+                np.asarray(r.logits), off_logits[k], rtol=1e-5, atol=1e-5,
+                err_msg=f"{protocol} {record['label']} "
+                        f"T={record['t_intg_ms']} stream {k}")
+            assert r.prediction == int(np.argmax(off_logits[k]))
+            assert r.n_readouts == file_source.n_slots(record["t_intg_ms"])
+
+    @pytest.mark.parametrize("protocol", ["frozen", "unfrozen"])
+    def test_parity_all_cells(self, trained, file_source, tmp_path,
+                              protocol):
+        """Every (circuit, T_INTG) record of the trained grid — 2
+        circuits × 2 T_INTG — serves online with logits matching the
+        offline batched forward."""
+        records = trained["results"][protocol].records
+        assert len(records) == 4
+        assert {r["circuit"] for r in records} == {"a", "c"}
+        assert {r["t_intg_ms"] for r in records} == {100.0, 1000.0}
+        for record in records:
+            self._parity_case(trained, file_source, tmp_path, protocol,
+                              record)
+
+    def test_parity_capacity_one_recycles(self, trained, file_source,
+                                          tmp_path):
+        """Sequential lane reuse (capacity 1 < streams) must not leak
+        state across streams: parity still holds for every stream."""
+        record = trained["results"]["frozen"].records[0]
+        self._parity_case(trained, file_source, tmp_path / "c1", "frozen",
+                          record, capacity=1)
+
+    def test_spike_level_parity(self, trained, file_source, tmp_path):
+        """Window-by-window layer-1 spike maps from the online readout
+        equal the offline forward's bit-for-bit (one cell, driven through
+        the low-level fold/readout steps)."""
+        record = deploy_mod.select_record(
+            trained["results"]["frozen"].records, t_intg_ms=100.0,
+            label="c@m=0.06")
+        ckpt = tmp_path / "spike_ckpt"
+        deploy_mod.deploy_from_sweep(trained["results"]["frozen"],
+                                     _model_of(trained), record, ckpt)
+        dep = deploy_mod.load_deployment(ckpt)
+        n_sub = dep.model_cfg.p2m.n_sub
+        frames = _offline_frames(file_source, 0, 100.0, n_sub)
+        off = deploy_mod.offline_forward(dep, jnp.asarray(frames[None]))
+        off_spikes = np.asarray(off["spikes"][0])
+
+        engine = StreamEngine(dep, capacity=2)
+        fns = engine.fns
+        state = fns.init_state()
+        active = jnp.asarray([True, False])
+        group = dep.model_cfg.coarsen_group()
+        n_slots = frames.shape[0]
+        on_spikes = []
+        for t in range(n_slots):
+            for c in range(engine.chunks_per_window):
+                fr = np.zeros((2, engine.chunk_slots, HW, HW, 2),
+                              np.float32)
+                lo = c * engine.chunk_slots
+                fr[0] = frames[t, lo:lo + engine.chunk_slots]
+                state = fns.fold(state, jnp.asarray(fr), active)
+            cm = jnp.asarray([(t + 1) % group == 0, False])
+            state, out = fns.readout(state, active, cm)
+            on_spikes.append(np.asarray(out["spikes"][0]))
+        np.testing.assert_array_equal(np.stack(on_spikes), off_spikes)
+
+
+def _model_of(trained) -> object:
+    """The base model config the sweep trained (rebuild from any
+    checkpoint's embedded config — cell fields are re-pinned by
+    deploy_from_sweep)."""
+    dep = deploy_mod.load_deployment(
+        next(iter(trained["checkpoints"].values())))
+    return dep.model_cfg
+
+
+# ---------------------------------------------------------------------------
+# deployment handshake
+# ---------------------------------------------------------------------------
+
+class TestDeployment:
+    def test_checkpoint_roundtrip(self, trained):
+        for proto, ckpt in trained["checkpoints"].items():
+            dep = deploy_mod.load_deployment(ckpt, trained["artifact"])
+            assert dep.protocol == proto
+            assert dep.record == trained["records"][proto]
+            v = dep.record["variant"]
+            leak = dep.model_cfg.p2m.leak
+            assert leak.circuit.value == v["circuit"]
+            assert leak.v_threshold == v["v_threshold"]
+            assert dep.model_cfg.p2m.t_intg_ms == dep.record["t_intg_ms"]
+
+    def test_artifact_cross_check_rejects_foreign_record(self, trained,
+                                                         tmp_path):
+        import json
+        art = json.loads(trained["artifact"].read_text())
+        for r in art["records"]:
+            r["t_intg_ms"] = 7.0          # no record matches anymore
+        bad = tmp_path / "foreign.json"
+        bad.write_text(json.dumps(art))
+        ckpt = next(iter(trained["checkpoints"].values()))
+        with pytest.raises(ValueError, match="different runs"):
+            deploy_mod.load_deployment(ckpt, bad)
+
+    def test_select_record_filters_and_ranks(self, trained):
+        recs = trained["results"]["frozen"].records
+        best = deploy_mod.select_record(recs)
+        assert best["accuracy"] == max(r["accuracy"] for r in recs)
+        only_t = deploy_mod.select_record(recs, t_intg_ms=1000.0)
+        assert only_t["t_intg_ms"] == 1000.0
+        with pytest.raises(ValueError, match="no sweep record"):
+            deploy_mod.select_record(recs, t_intg_ms=123.0)
+
+    def test_non_deploy_checkpoint_rejected(self, tmp_path):
+        from repro.checkpoint import store
+        store.save_checkpoint(tmp_path, 0, {"w": np.zeros(3)}, {})
+        with pytest.raises(ValueError, match="not a streaming deployment"):
+            deploy_mod.load_deployment(tmp_path)
+
+
+# ---------------------------------------------------------------------------
+# engine lifecycle + serving-stats artifact
+# ---------------------------------------------------------------------------
+
+class TestEngineLifecycle:
+    def test_more_streams_than_lanes(self):
+        src = sources.resolve_dataset("synthetic-gesture", hw=HW)
+        dep = _fresh_dep(src)
+        engine = StreamEngine(dep, capacity=2)
+        report = engine.serve(src, 5, seed=0)
+        assert len(report.results) == 5 > engine.capacity
+        n_windows = src.n_slots(dep.t_intg_ms)
+        assert all(r.n_readouts == n_windows for r in report.results)
+        assert all(r.n_coarse_frames ==
+                   n_windows // dep.model_cfg.coarsen_group()
+                   for r in report.results)
+        # continuous batching: later streams admitted at later windows
+        assert max(r.admitted_window for r in report.results) > 0
+        assert report.total_readouts == 5 * n_windows
+
+    def test_stats_artifact_schema(self):
+        src = sources.resolve_dataset("synthetic-gesture", hw=HW)
+        dep = _fresh_dep(src)
+        report = StreamEngine(dep, capacity=2).serve(src, 2, seed=1)
+        art = report.to_artifact()
+        assert art["schema"] == STATS_SCHEMA
+        for key in ("deployed", "n_streams", "capacity", "accuracy",
+                    "streams", "latency_ms", "throughput"):
+            assert key in art
+        assert {"readout_p50", "readout_p99", "readout_mean", "fold_p50",
+                "fold_p99"} <= set(art["latency_ms"])
+        assert {"wall_s", "events_per_s", "readouts_per_s",
+                "streams_per_s"} <= set(art["throughput"])
+        for s in art["streams"]:
+            assert {"stream_id", "label", "prediction", "n_events",
+                    "n_readouts", "logits"} <= set(s)
+        assert art["throughput"]["events_per_s"] > 0
+
+    def test_resolution_mismatch_rejected(self):
+        src16 = sources.resolve_dataset("synthetic-gesture", hw=HW)
+        src20 = sources.resolve_dataset("synthetic-gesture", hw=20)
+        dep = _fresh_dep(src16)
+        with pytest.raises(ValueError, match="resolution"):
+            StreamEngine(dep, capacity=1).serve(src20, 1)
+
+    def test_coarse_group_mismatch_rejected(self):
+        """A stream too short for the deployed coarse window (its window
+        count not a multiple of the coarsen group) must be rejected, not
+        served to a vacuous all-zero prediction."""
+        src = sources.resolve_dataset("synthetic-gesture", hw=HW,
+                                      duration_ms=600.0)
+        dep = _fresh_dep(src)   # T_INTG=200 ms, coarse 1000 ms → group 5
+        with pytest.raises(ValueError, match="coarse group"):
+            StreamEngine(dep, capacity=1).serve(src, 1)
+
+    def test_bad_chunks_per_window_rejected(self):
+        src = sources.resolve_dataset("synthetic-gesture", hw=HW)
+        with pytest.raises(ValueError, match="divide"):
+            StreamEngine(_fresh_dep(src), capacity=1, chunks_per_window=3)
+
+    def test_strided_p2m_deployment_serves(self):
+        """The charge accumulator must live at the conv OUTPUT resolution
+        — a stride-2 in-pixel layer (with the matching backbone
+        first_stride) serves without shape errors."""
+        from repro.core.codesign import P2MModelConfig
+        from repro.core.leakage import LeakageConfig
+        from repro.core.p2m_layer import P2MConfig
+        from repro.core.snn import SpikingCNNConfig
+
+        src = sources.resolve_dataset("synthetic-gesture", hw=HW)
+        model = P2MModelConfig(
+            p2m=P2MConfig(out_channels=8, n_sub=2, t_intg_ms=200.0,
+                          stride=2,
+                          leak=LeakageConfig(
+                              circuit=CircuitConfig.NULLIFIED)),
+            backbone=SpikingCNNConfig(channels=(8, 16), input_hw=(HW, HW),
+                                      fc_hidden=32, n_classes=src.n_classes,
+                                      first_stride=2,
+                                      first_layer_external=True),
+            coarse_window_ms=1000.0)
+        dep = deploy_mod.fresh_deployment(model, seed=0)
+        report = StreamEngine(dep, capacity=2).serve(src, 2, seed=0)
+        assert len(report.results) == 2
+        assert all(r.n_coarse_frames == 2 for r in report.results)
+
+
+def _fresh_dep(src):
+    from repro.core.codesign import P2MModelConfig
+    from repro.core.leakage import LeakageConfig
+    from repro.core.p2m_layer import P2MConfig
+    from repro.core.snn import SpikingCNNConfig
+
+    model = P2MModelConfig(
+        p2m=P2MConfig(out_channels=8, n_sub=2, t_intg_ms=200.0,
+                      leak=LeakageConfig(circuit=CircuitConfig.NULLIFIED)),
+        backbone=SpikingCNNConfig(channels=(8, 16, 16, 16),
+                                  input_hw=(HW, HW), fc_hidden=64,
+                                  n_classes=src.n_classes,
+                                  first_layer_external=True),
+        coarse_window_ms=1000.0)
+    return deploy_mod.fresh_deployment(model, seed=0)
+
+
+# ---------------------------------------------------------------------------
+# CLI end-to-end (CI also drives this directly as the streaming smoke step)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_stream_cli_smoke(tmp_path):
+    """`launch/stream.py --smoke` end-to-end: fixture generation → tiny
+    train+deploy → serve → serving-stats artifact with the v1 schema."""
+    import json
+    import os
+    import subprocess
+    import sys
+    from pathlib import Path
+
+    src_dir = Path(__file__).resolve().parents[1] / "src"
+    env = dict(os.environ, PYTHONPATH=str(src_dir), JAX_PLATFORMS="cpu")
+    out = tmp_path / "stream"
+    cmd = [sys.executable, "-m", "repro.launch.stream", "--smoke",
+           "--streams", "4", "--capacity", "2", "--out", str(out)]
+    proc = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                          timeout=900)
+    assert proc.returncode == 0, proc.stderr
+    art = json.loads((out / "stream_serving_dvs128.json").read_text())
+    assert art["schema"] == STATS_SCHEMA
+    assert art["n_streams"] == 4
+    assert len(art["streams"]) == 4
+    assert art["deployed"]["protocol"] == "frozen"
+    assert (out / "deploy" / "ckpt_frozen").is_dir()
+
+
+# ---------------------------------------------------------------------------
+# keep_params seam (core/sweep.py)
+# ---------------------------------------------------------------------------
+
+def test_run_grid_keep_params_shapes(trained):
+    for proto, result in trained["results"].items():
+        assert set(result.final_params) == {(100.0, 2), (1000.0, 2)}
+        G = len(result.labels)
+        for cell in result.final_params.values():
+            bb_leaf = jax.tree.leaves(cell["backbone"])[0]
+            assert bb_leaf.shape[0] == G       # unpadded variant axis
+            p2m_w = cell["p2m"]["w"]
+            if proto == "unfrozen":
+                assert p2m_w.shape[0] == G     # per-variant layer 1
+            else:
+                assert p2m_w.ndim == 4         # shared layer 1

@@ -1,0 +1,81 @@
+#!/usr/bin/env python3
+"""Assert a serving-stats artifact matches the p2m-stream-serving/v1
+schema (docs/streaming.md). Stdlib only — the CI streaming-smoke step
+runs it against the artifact `launch/stream.py --smoke` just emitted.
+
+    python tools/check_stream_stats.py artifacts/stream/stream_serving_dvs128.json [--streams N]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+SCHEMA = "p2m-stream-serving/v1"
+TOP_KEYS = {"schema", "deployed", "n_streams", "capacity",
+            "chunks_per_window", "t_intg_ms", "accuracy", "streams",
+            "latency_ms", "throughput"}
+STREAM_KEYS = {"stream_id", "label", "prediction", "correct", "n_events",
+               "n_readouts", "n_coarse_frames", "logits"}
+LATENCY_KEYS = {"readout_p50", "readout_p99", "readout_mean", "fold_p50",
+                "fold_p99"}
+THROUGHPUT_KEYS = {"wall_s", "events_per_s", "readouts_per_s",
+                   "streams_per_s"}
+
+
+def check(art: dict, n_streams: int | None = None) -> list[str]:
+    errs = []
+    if art.get("schema") != SCHEMA:
+        errs.append(f"schema {art.get('schema')!r} != {SCHEMA!r}")
+    missing = TOP_KEYS - set(art)
+    if missing:
+        errs.append(f"missing top-level keys: {sorted(missing)}")
+    streams = art.get("streams", [])
+    if n_streams is not None and len(streams) != n_streams:
+        errs.append(f"expected {n_streams} streams, got {len(streams)}")
+    if art.get("n_streams") != len(streams):
+        errs.append("n_streams does not match len(streams)")
+    for i, s in enumerate(streams):
+        miss = STREAM_KEYS - set(s)
+        if miss:
+            errs.append(f"stream[{i}] missing {sorted(miss)}")
+            break
+        if s["n_events"] <= 0 or s["n_readouts"] <= 0:
+            errs.append(f"stream[{i}] has empty serving counters: {s}")
+        if s["n_coarse_frames"] <= 0:
+            errs.append(f"stream[{i}] produced no coarse backbone frames "
+                        f"— its prediction is vacuous")
+    if LATENCY_KEYS - set(art.get("latency_ms", {})):
+        errs.append(f"latency_ms missing "
+                    f"{sorted(LATENCY_KEYS - set(art.get('latency_ms', {})))}")
+    thr = art.get("throughput", {})
+    if THROUGHPUT_KEYS - set(thr):
+        errs.append(f"throughput missing {sorted(THROUGHPUT_KEYS - set(thr))}")
+    elif not thr["events_per_s"] > 0 or not thr["readouts_per_s"] > 0:
+        errs.append(f"throughput not positive: {thr}")
+    if not 0.0 <= art.get("accuracy", -1) <= 1.0:
+        errs.append(f"accuracy out of range: {art.get('accuracy')}")
+    return errs
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("path")
+    ap.add_argument("--streams", type=int, default=None,
+                    help="expected stream count")
+    args = ap.parse_args()
+    art = json.loads(open(args.path).read())
+    errs = check(art, args.streams)
+    for e in errs:
+        print(f"check_stream_stats: {e}", file=sys.stderr)
+    if not errs:
+        lat = art["latency_ms"]
+        print(f"check_stream_stats: OK — {art['n_streams']} streams, "
+              f"readout p50={lat['readout_p50']:.2f}ms "
+              f"p99={lat['readout_p99']:.2f}ms, "
+              f"{art['throughput']['events_per_s']:.0f} events/s")
+    return 1 if errs else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
