@@ -1,13 +1,31 @@
-"""Shared benchmark utilities."""
+"""Shared benchmark utilities.
+
+Two artifact tiers (docs/benchmarks.md):
+
+* ``save_json`` — full per-bench payloads under artifacts/bench/
+  (gitignored scratch, whatever shape each bench wants);
+* ``bench_record`` — the schema-versioned perf trajectory. One
+  ``BENCH_<name>.json`` per bench family at the **repo root**, committed,
+  so ``git log -p BENCH_kernels.json`` reads as a performance history.
+  ``tools/check_bench.py`` validates the schema and diffs a fresh record
+  against the committed one to flag regressions.
+"""
 from __future__ import annotations
 
+import datetime
 import json
+import subprocess
 import time
 from pathlib import Path
 
 import jax
 
 ARTIFACTS = Path("artifacts/bench")
+REPO = Path(__file__).resolve().parents[1]
+
+#: Version tag of the BENCH_*.json trajectory record layout. Bump on any
+#: backwards-incompatible change and teach tools/check_bench.py both.
+BENCH_SCHEMA = "p2m-bench/v1"
 
 
 def timed(fn, *args, warmup: int = 1, iters: int = 3) -> tuple[float, object]:
@@ -32,4 +50,51 @@ def save_json(name: str, payload: dict) -> Path:
     ARTIFACTS.mkdir(parents=True, exist_ok=True)
     p = ARTIFACTS / f"{name}.json"
     p.write_text(json.dumps(payload, indent=2, default=float))
+    return p
+
+
+def _git_commit() -> str:
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"], cwd=REPO, capture_output=True,
+            text=True, timeout=10)
+        sha = out.stdout.strip()
+        return sha if out.returncode == 0 and sha else "unknown"
+    except OSError:
+        return "unknown"
+
+
+def bench_entry(name: str, *, xla_us: float | None = None,
+                kernel_us: float | None = None,
+                max_err: float | None = None,
+                meta: dict | None = None) -> dict:
+    """One trajectory entry: oracle-path vs kernel-path timing + parity."""
+    return {"name": name, "xla_us": xla_us, "kernel_us": kernel_us,
+            "max_err": max_err, "meta": meta or {}}
+
+
+def bench_record(name: str, entries: list[dict],
+                 extra: dict | None = None, root: Path | None = None) -> Path:
+    """Write the ``BENCH_<name>.json`` perf-trajectory record at repo root.
+
+    ``entries`` come from :func:`bench_entry`. Timings are in µs per call;
+    ``max_err`` is the kernel-vs-oracle parity at benchmark scale (the
+    number CI gates on — timings on shared runners are context, not a
+    contract). ``extra`` lands under ``"context"`` for bench-specific
+    scalars (shapes, throughput).
+    """
+    record = {
+        "schema": BENCH_SCHEMA,
+        "name": name,
+        "commit": _git_commit(),
+        "backend": jax.default_backend(),
+        "interpret": jax.default_backend() != "tpu",
+        "generated": datetime.datetime.now(datetime.timezone.utc)
+        .isoformat(timespec="seconds"),
+        "entries": entries,
+    }
+    if extra:
+        record["context"] = extra
+    p = (root or REPO) / f"BENCH_{name}.json"
+    p.write_text(json.dumps(record, indent=2, default=float) + "\n")
     return p

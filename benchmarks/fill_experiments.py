@@ -1,5 +1,5 @@
-"""Fill EXPERIMENTS.md's <!-- DRYRUN_TABLE --> and <!-- ROOFLINE_TABLE -->
-markers from artifacts/dryrun/*.json.
+"""Fill docs/benchmarks.md's <!-- DRYRUN_TABLE --> / <!-- ROOFLINE_TABLE -->
+/ <!-- FLEET_TABLE --> markers from artifacts/dryrun/*.json.
 
     PYTHONPATH=src python -m benchmarks.fill_experiments
 """
@@ -9,7 +9,7 @@ import json
 from pathlib import Path
 
 DRYRUN = Path("artifacts/dryrun")
-EXP = Path("EXPERIMENTS.md")
+EXP = Path(__file__).resolve().parents[1] / "docs" / "benchmarks.md"
 
 _LEVER = {
     "compute": "more per-chip work (larger microbatch) / fuse small ops",
@@ -111,7 +111,7 @@ def main():
     text = text.replace("<!-- FLEET_TABLE -->",
                         "<!-- FLEET_TABLE -->\n\n" + fleet_table(), 1)
     EXP.write_text(text)
-    print("EXPERIMENTS.md updated")
+    print(f"{EXP.name} updated")
 
 
 if __name__ == "__main__":

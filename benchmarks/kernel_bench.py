@@ -3,8 +3,8 @@
 On this CPU container interpret-mode timings measure Python emulation, NOT
 TPU performance — the meaningful outputs are (i) allclose vs oracle at
 benchmark scale and (ii) the XLA-path timing (the production fallback).
-TPU performance claims live in EXPERIMENTS.md §Roofline from the compiled
-dry-run instead.
+How to read the numbers, the BENCH_kernels.json trajectory record this
+module emits, and the regression gate are documented in docs/benchmarks.md.
 """
 from __future__ import annotations
 
@@ -12,7 +12,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, save_json, timed
+from benchmarks.common import bench_entry, bench_record, emit, save_json, timed
 
 
 def bench_p2m(fast: bool = False) -> dict:
@@ -34,6 +34,99 @@ def bench_p2m(fast: bool = False) -> dict:
          f"max_err_vs_oracle={err:.2e}")
     assert err < 1e-4
     return {"xla_s": t_xla, "pallas_interpret_s": t_pal, "max_err": err}
+
+
+def bench_p2m_multi(fast: bool = False) -> dict:
+    """Fused multi-config launch vs n_cfg separate single-config launches.
+
+    The fusion claim of the circuit-grid axis (p2m_conv.py): all configs
+    revisit the same patch tiles in ONE pallas_call, so the fused path
+    should not cost n_cfg× the single-config path.
+    """
+    import dataclasses
+
+    from repro.core.leakage import CircuitConfig, LeakageConfig
+    from repro.core.p2m_layer import P2MConfig, p2m_init
+    from repro.kernels.p2m_conv import ops
+
+    hw = 16 if fast else 24
+    circuits = (CircuitConfig.BASIC, CircuitConfig.SWITCH,
+                CircuitConfig.NULLIFIED)
+    leak_cfgs = tuple(LeakageConfig(circuit=c) for c in circuits)
+    cfg = P2MConfig(out_channels=8, n_sub=4)
+    params = p2m_init(jax.random.PRNGKey(0), cfg)
+    ev = jax.random.poisson(jax.random.PRNGKey(1), 0.3,
+                            (2, 4, 4, hw, hw, 2)).astype(jnp.float32)
+
+    t_multi, (s_multi, v_multi) = timed(
+        lambda p, e: ops.p2m_conv_multi(p, e, cfg, leak_cfgs), params, ev)
+
+    def separate(p, e):
+        outs = [ops.p2m_conv(p, e, dataclasses.replace(cfg, leak=lc))
+                for lc in leak_cfgs]
+        return (jnp.stack([o[0] for o in outs]),
+                jnp.stack([o[1] for o in outs]))
+
+    t_sep, (s_sep, v_sep) = timed(separate, params, ev)
+    err = float(jnp.max(jnp.abs(v_multi - v_sep)))
+    emit("kernel/p2m_conv_multi/fused", t_multi * 1e6,
+         f"n_cfg={len(leak_cfgs)},hw={hw}")
+    emit("kernel/p2m_conv_multi/separate_launches", t_sep * 1e6,
+         f"max_err_vs_fused={err:.2e}")
+    assert err < 1e-5
+    assert bool(jnp.all(s_multi == s_sep))
+    return {"fused_s": t_multi, "separate_s": t_sep, "max_err": err,
+            "n_cfg": len(leak_cfgs)}
+
+
+def bench_stream_fold(fast: bool = False) -> dict:
+    """Serving fold: XLA scan (oracle) vs the fused stream_fold kernel.
+
+    ``deposit`` mode must be bit-exact with the scan — that is the
+    contract the streaming engine's ``use_kernel`` switch relies on
+    (tests/test_stream_fold.py). ``mac`` mode is the fully-fused variant,
+    parity-checked with tolerance.
+    """
+    from jax import lax
+
+    from repro.core.p2m_layer import _conv
+    from repro.kernels.stream_fold import ops as sf_ops
+
+    hw = 16 if fast else 24
+    B, S, F, k = (4, 4, 8, 3) if fast else (8, 8, 8, 3)
+    key = jax.random.PRNGKey(0)
+    frames = jax.random.poisson(key, 0.3, (B, S, hw, hw, 2)
+                                ).astype(jnp.float32)
+    w_q = jax.random.normal(jax.random.fold_in(key, 1), (k, k, 2, F)) * 0.1
+    a = jnp.exp(-jax.random.uniform(jax.random.fold_in(key, 2), (F,)))
+    x0 = jax.random.normal(jax.random.fold_in(key, 3), (B, hw, hw, F)) * 0.01
+    dv_unit = 0.01
+
+    def scan_fold(x, fr):
+        def sub(x, ev):
+            return x * a + _conv(ev, w_q, 1) * dv_unit, None
+        x, _ = lax.scan(sub, x, jnp.moveaxis(fr, 1, 0))
+        return x
+
+    t_xla, ref = timed(jax.jit(scan_fold), x0, frames)
+    t_dep, out_dep = timed(
+        jax.jit(lambda x, fr: sf_ops.fold_chunk(
+            x, fr, w_q, a, stride=1, dv_unit=dv_unit)), x0, frames)
+    t_mac, out_mac = timed(
+        jax.jit(lambda x, fr: sf_ops.fold_chunk(
+            x, fr, w_q, a, stride=1, dv_unit=dv_unit, mode="mac")),
+        x0, frames)
+    err = float(jnp.max(jnp.abs(out_dep - ref)))
+    mac_err = float(jnp.max(jnp.abs(out_mac - ref)))
+    emit("kernel/stream_fold/xla_scan", t_xla * 1e6, f"B={B},S={S},hw={hw}")
+    emit("kernel/stream_fold/pallas_deposit", t_dep * 1e6,
+         f"max_err_vs_oracle={err:.2e}")
+    emit("kernel/stream_fold/pallas_mac", t_mac * 1e6,
+         f"max_err_vs_oracle={mac_err:.2e}")
+    assert err == 0.0, f"deposit fold must be bit-exact, got {err}"
+    assert mac_err < 1e-4
+    return {"xla_s": t_xla, "pallas_interpret_s": t_dep, "mac_s": t_mac,
+            "max_err": err, "mac_err": mac_err}
 
 
 def bench_lif(fast: bool = False) -> dict:
@@ -103,9 +196,38 @@ def bench_flash(fast: bool = False) -> dict:
 
 
 def run(fast: bool = False) -> dict:
-    out = {"p2m": bench_p2m(fast), "lif": bench_lif(fast),
+    out = {"p2m": bench_p2m(fast), "p2m_multi": bench_p2m_multi(fast),
+           "lif": bench_lif(fast), "stream_fold": bench_stream_fold(fast),
            "ssd": bench_ssd(fast), "flash": bench_flash(fast)}
     save_json("kernels", out)
+
+    def us(s):
+        return None if s is None else s * 1e6
+
+    bench_record("kernels", [
+        bench_entry("p2m_conv", xla_us=us(out["p2m"]["xla_s"]),
+                    kernel_us=us(out["p2m"]["pallas_interpret_s"]),
+                    max_err=out["p2m"]["max_err"]),
+        bench_entry("p2m_conv_multi", xla_us=us(out["p2m_multi"]["separate_s"]),
+                    kernel_us=us(out["p2m_multi"]["fused_s"]),
+                    max_err=out["p2m_multi"]["max_err"],
+                    meta={"n_cfg": out["p2m_multi"]["n_cfg"]}),
+        bench_entry("lif", xla_us=us(out["lif"]["xla_s"]),
+                    kernel_us=us(out["lif"]["pallas_interpret_s"]),
+                    max_err=out["lif"]["max_err"]),
+        bench_entry("stream_fold", xla_us=us(out["stream_fold"]["xla_s"]),
+                    kernel_us=us(out["stream_fold"]["pallas_interpret_s"]),
+                    max_err=out["stream_fold"]["max_err"],
+                    meta={"mac_us": us(out["stream_fold"]["mac_s"]),
+                          "mac_err": out["stream_fold"]["mac_err"]}),
+        bench_entry("ssd", xla_us=us(out["ssd"]["xla_s"]),
+                    kernel_us=us(out["ssd"]["pallas_interpret_s"]),
+                    max_err=out["ssd"]["rel_err"],
+                    meta={"err_kind": "rel"}),
+        bench_entry("flash_attention", xla_us=us(out["flash"]["xla_s"]),
+                    kernel_us=us(out["flash"]["pallas_interpret_s"]),
+                    max_err=out["flash"]["max_err"]),
+    ], extra={"fast": fast})
     return out
 
 

@@ -20,8 +20,9 @@ def main() -> int:
     ap.add_argument("--fast", action="store_true",
                     help="reduced grids/steps (CI)")
     ap.add_argument("--only", type=str, default=None,
-                    help="run a single bench: "
-                         "table1|fig2|fig4|kernels|roofline|stream")
+                    help="comma-separated subset of benches to run, e.g. "
+                         "'kernels,stream' "
+                         "(table1|fig2|fig4|kernels|roofline|stream)")
     args = ap.parse_args()
 
     from benchmarks import (fig2_bandwidth_energy, fig4_leakage, kernel_bench,
@@ -37,7 +38,13 @@ def main() -> int:
         "stream": stream_serving.run,
     }
     if args.only:
-        benches = {args.only: benches[args.only]}
+        names = [n.strip() for n in args.only.split(",") if n.strip()]
+        unknown = [n for n in names if n not in benches]
+        if unknown:
+            print(f"error: unknown bench(es) {unknown}; choose from "
+                  f"{sorted(benches)}", file=sys.stderr)
+            return 2
+        benches = {n: benches[n] for n in names}
 
     print("name,us_per_call,derived")
     failures = 0

@@ -11,7 +11,7 @@ batch).
 """
 from __future__ import annotations
 
-from benchmarks.common import emit, save_json
+from benchmarks.common import bench_entry, bench_record, emit, save_json
 
 from repro.core.codesign import P2MModelConfig
 from repro.core.leakage import CircuitConfig, LeakageConfig
@@ -39,8 +39,10 @@ def run(fast: bool = False, hw: int = 16,
     dep = deploy_mod.fresh_deployment(
         _model(hw, source.n_classes, t_intg_ms), seed=0)
     n_streams = 8 if fast else 32
+    capacities = (2, 4) if fast else (4, 16)
     out = {}
-    for capacity in ((2, 4) if fast else (4, 16)):
+    entries = []
+    for capacity in capacities:
         engine = StreamEngine(dep, capacity=capacity)
         report = engine.serve(source, n_streams, seed=0)
         art = report.to_artifact()
@@ -55,7 +57,40 @@ def run(fast: bool = False, hw: int = 16,
              f"events_per_s={thr['events_per_s']:.0f};"
              f"streams_per_s={thr['streams_per_s']:.2f};"
              f"readouts_per_s={thr['readouts_per_s']:.1f}")
+        entries.append(bench_entry(
+            f"readout_c{capacity}", xla_us=lat["readout_p50"] * 1e3,
+            meta={"p99_us": lat["readout_p99"] * 1e3}))
+        entries.append(bench_entry(
+            f"fold_c{capacity}", xla_us=lat["fold_p50"] * 1e3,
+            meta={"p99_us": lat["fold_p99"] * 1e3,
+                  "events_per_s": thr["events_per_s"]}))
+
+    # same serve through the fused stream_fold kernel — the use_kernel
+    # switch must not change a single prediction (oracle check), and its
+    # fold latency lands next to the scan path's in the trajectory record
+    cap = capacities[0]
+    engine_k = StreamEngine(dep, capacity=cap, use_kernel=True)
+    report_k = engine_k.serve(source, n_streams, seed=0)
+    art_k = report_k.to_artifact()
+    out[f"capacity{cap}_kernel"] = art_k
+    lat_k = art_k["latency_ms"]
+    base = out[f"capacity{cap}"]
+    by_id = lambda art: {s["stream_id"]: s["prediction"]  # noqa: E731
+                         for s in art["streams"]}
+    p0, pk = by_id(base), by_id(art_k)
+    mismatch = sum(1 for sid in p0 if p0[sid] != pk.get(sid))
+    emit(f"stream/fold_kernel/c{cap}", lat_k["fold_p50"] * 1e3,
+         f"p50={lat_k['fold_p50']:.3f}ms;pred_mismatch={mismatch}")
+    entries.append(bench_entry(
+        f"fold_kernel_c{cap}", xla_us=base["latency_ms"]["fold_p50"] * 1e3,
+        kernel_us=lat_k["fold_p50"] * 1e3, max_err=float(mismatch),
+        meta={"p99_us": lat_k["fold_p99"] * 1e3}))
+    assert mismatch == 0, f"use_kernel changed {mismatch} predictions"
+
     save_json("stream_serving", out)
+    bench_record("stream_serving", entries,
+                 extra={"fast": fast, "n_streams": n_streams, "hw": hw,
+                        "t_intg_ms": t_intg_ms})
     return out
 
 

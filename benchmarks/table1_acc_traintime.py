@@ -3,7 +3,7 @@ DVS128-Gesture-like and NMNIST-like synthetic streams.
 
 Reduced scale (CPU, synthetic data): the deliverable is the TREND —
 accuracy non-decreasing and training time per step decreasing as T_INTG
-grows — not the paper's absolute percentages (DESIGN.md §1).
+grows — not the paper's absolute percentages (docs/architecture.md).
 """
 from __future__ import annotations
 

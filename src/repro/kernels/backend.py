@@ -1,0 +1,45 @@
+"""Shared backend plumbing for the Pallas kernels.
+
+Every kernel wrapper takes ``interpret: bool | None = None``:
+
+  * ``None``  — autodetect: compile on a real TPU backend, fall back to
+    Pallas interpret mode everywhere else (CPU CI, GPU containers).
+    This is what lets the SAME call sites run compiled on hardware
+    without plumbing a flag through every layer.
+  * ``True``/``False`` — explicit override (tests pin ``True``; a TPU
+    soak run may pin ``False`` to fail loudly if Mosaic rejects the
+    kernel instead of silently interpreting).
+
+Compiled TPU kernels also need hardware-aligned tiles: the last (lane)
+axis must be a multiple of 128 and the second-to-last (sublane) axis a
+multiple of 8 for f32 (see the Pallas TPU guide). ``lane_pad`` /
+``sublane_pad`` return the padded extent — identity in interpret mode,
+where padding would only burn emulation time.
+"""
+from __future__ import annotations
+
+import jax
+
+LANE = 128      # TPU lane width (last axis), f32
+SUBLANE = 8     # TPU sublane width (second-to-last axis), f32
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """``None`` → interpret everywhere except a real TPU backend."""
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
+
+
+def _round_up(n: int, m: int) -> int:
+    return -(-n // m) * m
+
+
+def lane_pad(n: int, interpret: bool) -> int:
+    """Padded lane-axis extent: next multiple of 128 when compiled."""
+    return n if interpret else _round_up(n, LANE)
+
+
+def sublane_pad(n: int, interpret: bool) -> int:
+    """Padded sublane-axis extent: next multiple of 8 when compiled."""
+    return n if interpret else _round_up(n, SUBLANE)

@@ -7,7 +7,7 @@ for a causal q block are skipped structurally by clamping the kv extent.
 
 Used for serving/prefill (forward). Training uses the chunked-jnp reference
 (ref.py) which autodiffs; a fused bwd kernel is future work — noted in
-DESIGN.md.
+docs/kernels.md.
 """
 from __future__ import annotations
 
@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax import lax
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.backend import resolve_interpret
 
 NEG_INF = -1e30
 
@@ -71,13 +73,14 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
 def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
                            causal: bool = True, block_q: int = 128,
                            block_k: int = 128, kv_len: int | None = None,
-                           interpret: bool = True) -> jax.Array:
+                           interpret: bool | None = None) -> jax.Array:
     """q [BH, Sq, d], k/v [BH, Skv, d] → o [BH, Sq, d].
 
     GQA handled by the caller (repeat kv heads / reshape). ``kv_len`` masks
     the cache tail during decode.
     """
     BH, Sq, d = q.shape
+    interpret = resolve_interpret(interpret)
     Skv = k.shape[1]
     kv_len = Skv if kv_len is None else kv_len
     block_q = min(block_q, Sq)

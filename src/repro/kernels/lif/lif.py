@@ -17,6 +17,8 @@ import jax.numpy as jnp
 from jax import lax
 from jax.experimental import pallas as pl
 
+from repro.kernels.backend import lane_pad, resolve_interpret
+
 
 def _lif_kernel(x_ref, out_ref, *, tau: float, v_th: float, soft_reset: bool):
     T = x_ref.shape[0]
@@ -38,10 +40,16 @@ def _lif_kernel(x_ref, out_ref, *, tau: float, v_th: float, soft_reset: bool):
 
 def lif_pallas(x: jax.Array, *, tau: float = 2.0, v_th: float = 1.0,
                soft_reset: bool = True, block_n: int = 512,
-               interpret: bool = True) -> jax.Array:
-    """x: [T, N] input currents → spikes [T, N] (forward only)."""
+               interpret: bool | None = None) -> jax.Array:
+    """x: [T, N] input currents → spikes [T, N] (forward only).
+
+    ``interpret=None`` autodetects the backend (compiled on TPU,
+    interpreted elsewhere); compiled mode rounds the N-tile up to the
+    TPU lane width so the membrane tile is hardware-aligned.
+    """
     T, N = x.shape
-    block_n = min(block_n, N)
+    interpret = resolve_interpret(interpret)
+    block_n = lane_pad(min(block_n, N), interpret)
     pad = (-N) % block_n
     if pad:
         x = jnp.pad(x, ((0, 0), (0, pad)))

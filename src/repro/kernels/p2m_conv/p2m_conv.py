@@ -1,6 +1,6 @@
 """Pallas TPU kernel for the P²M in-pixel analog convolution (paper §2/§4).
 
-TPU-native mapping of the in-pixel dataflow (DESIGN.md §2): the per-filter
+TPU-native mapping of the in-pixel dataflow (docs/kernels.md): the per-filter
 capacitor state lives in **VMEM** for the whole integration window — exactly
 like charge stays on C_K in the pixel — while event patches stream
 HBM→VMEM one sub-slot at a time. One fused pass computes
@@ -32,6 +32,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 from jax.experimental import pallas as pl
+
+from repro.kernels.backend import lane_pad, resolve_interpret
 
 
 def _p2m_kernel(patches_ref, w_ref, vinf_ref, decay_ref, theta_ref,
@@ -72,7 +74,7 @@ def p2m_conv_multi_pallas(patches: jax.Array, w: jax.Array, v_inf: jax.Array,
                           pv_gain: jax.Array, pv_offset: jax.Array, *,
                           dv_unit: float, half_swing: float, v_lo: float,
                           v_hi: float, nonlinear: bool = True,
-                          block_p: int = 256, interpret: bool = True
+                          block_p: int = 256, interpret: bool | None = None
                           ) -> tuple[jax.Array, jax.Array]:
     """Multi-circuit-config P²M conv.
 
@@ -82,12 +84,30 @@ def p2m_conv_multi_pallas(patches: jax.Array, w: jax.Array, v_inf: jax.Array,
     [1, F] per-config tile stream as the leak legs, so threshold variants
     cost no extra patch traffic). Returns (spikes, v_pre), both
     [n_cfg, T_out, P, F] f32.
+
+    ``interpret=None`` autodetects the backend (compiled on TPU,
+    interpreted elsewhere). Compiled mode pads the K and F lane axes to
+    the TPU lane width with zero weights / inert leak legs and crops the
+    outputs — zero-filled filters integrate nothing and never spike.
     """
     T, n_sub, P, K = patches.shape
     F = w.shape[1]
     n_cfg = v_inf.shape[0]
     assert decay.shape == (n_cfg, F), (decay.shape, (n_cfg, F))
     assert theta.shape == (n_cfg, F), (theta.shape, (n_cfg, F))
+    interpret = resolve_interpret(interpret)
+    Fp, Kp = lane_pad(F, interpret), lane_pad(K, interpret)
+    if Kp != K:
+        patches = jnp.pad(patches, ((0, 0), (0, 0), (0, 0), (0, Kp - K)))
+        w = jnp.pad(w, ((0, Kp - K), (0, 0)))
+    if Fp != F:
+        w = jnp.pad(w, ((0, 0), (0, Fp - F)))
+        cfgpad = ((0, 0), (0, Fp - F))
+        v_inf = jnp.pad(v_inf, cfgpad)
+        decay = jnp.pad(decay, cfgpad)
+        theta = jnp.pad(theta, cfgpad)
+        pv_gain = jnp.pad(pv_gain, (0, Fp - F))
+        pv_offset = jnp.pad(pv_offset, (0, Fp - F))
     block_p = min(block_p, P)
     if P % block_p != 0:
         pad = block_p - P % block_p
@@ -103,25 +123,26 @@ def p2m_conv_multi_pallas(patches: jax.Array, w: jax.Array, v_inf: jax.Array,
         kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, n_sub, block_p, K), lambda c, t, p: (t, 0, p, 0)),
-            pl.BlockSpec((K, F), lambda c, t, p: (0, 0)),
-            pl.BlockSpec((1, F), lambda c, t, p: (c, 0)),
-            pl.BlockSpec((1, F), lambda c, t, p: (c, 0)),
-            pl.BlockSpec((1, F), lambda c, t, p: (c, 0)),
-            pl.BlockSpec((1, F), lambda c, t, p: (0, 0)),
-            pl.BlockSpec((1, F), lambda c, t, p: (0, 0)),
+            pl.BlockSpec((1, n_sub, block_p, Kp),
+                         lambda c, t, p: (t, 0, p, 0)),
+            pl.BlockSpec((Kp, Fp), lambda c, t, p: (0, 0)),
+            pl.BlockSpec((1, Fp), lambda c, t, p: (c, 0)),
+            pl.BlockSpec((1, Fp), lambda c, t, p: (c, 0)),
+            pl.BlockSpec((1, Fp), lambda c, t, p: (c, 0)),
+            pl.BlockSpec((1, Fp), lambda c, t, p: (0, 0)),
+            pl.BlockSpec((1, Fp), lambda c, t, p: (0, 0)),
         ],
         out_specs=[
-            pl.BlockSpec((1, 1, block_p, F), lambda c, t, p: (c, t, p, 0)),
-            pl.BlockSpec((1, 1, block_p, F), lambda c, t, p: (c, t, p, 0)),
+            pl.BlockSpec((1, 1, block_p, Fp), lambda c, t, p: (c, t, p, 0)),
+            pl.BlockSpec((1, 1, block_p, Fp), lambda c, t, p: (c, t, p, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((n_cfg, T, P, F), jnp.float32),
-            jax.ShapeDtypeStruct((n_cfg, T, P, F), jnp.float32),
+            jax.ShapeDtypeStruct((n_cfg, T, P, Fp), jnp.float32),
+            jax.ShapeDtypeStruct((n_cfg, T, P, Fp), jnp.float32),
         ],
         interpret=interpret,
     )(patches, w, v_inf, decay, theta, pv_gain[None, :], pv_offset[None, :])
-    return spikes, vpre
+    return spikes[..., :F], vpre[..., :F]
 
 
 def p2m_conv_pallas(patches: jax.Array, w: jax.Array, v_inf: jax.Array,
@@ -129,7 +150,7 @@ def p2m_conv_pallas(patches: jax.Array, w: jax.Array, v_inf: jax.Array,
                     pv_gain: jax.Array, pv_offset: jax.Array,
                     *, dv_unit: float, half_swing: float, v_lo: float,
                     v_hi: float, nonlinear: bool = True,
-                    block_p: int = 256, interpret: bool = True
+                    block_p: int = 256, interpret: bool | None = None
                     ) -> tuple[jax.Array, jax.Array]:
     """Single-config wrapper over the multi-config kernel.
 

@@ -26,7 +26,7 @@ def ssd(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
 def ssd_trainable(x, dt, A, B, C):
     """Forward via the Pallas kernel, backward via the differentiable
     chunked-jnp path (standard interpret-mode pairing; a fused bwd kernel is
-    listed as future work in DESIGN.md)."""
+    listed as future work in docs/kernels.md)."""
     y, _ = ssd_pallas(x, dt, A, B, C)
     return y
 

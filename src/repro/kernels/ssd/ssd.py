@@ -1,6 +1,6 @@
 """Pallas TPU kernel for the Mamba-2 SSD scan (arXiv:2405.21060).
 
-TPU mapping (DESIGN.md §2): the running SSM state [p, n] per (batch, head)
+TPU mapping (docs/kernels.md): the running SSM state [p, n] per (batch, head)
 stays **resident in VMEM scratch** across the whole sequence, exactly like
 the recurrent state never leaves the register file in the CUDA version —
 only inputs stream in per chunk and only y leaves. The chunk axis is the
@@ -26,6 +26,8 @@ import jax.numpy as jnp
 from jax import lax
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.backend import resolve_interpret
 
 
 def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_ref,
@@ -81,7 +83,7 @@ def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_ref,
 
 
 def ssd_pallas(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
-               C: jax.Array, *, chunk: int = 128, interpret: bool = True
+               C: jax.Array, *, chunk: int = 128, interpret: bool | None = None
                ) -> tuple[jax.Array, jax.Array]:
     """SSD scan, Pallas grid over (batch·heads, seq chunks).
 
@@ -89,6 +91,7 @@ def ssd_pallas(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
     with h % g == 0. Returns (y [b,s,h,p], final state [b,h,p,n]).
     """
     b, s, h, p = x.shape
+    interpret = resolve_interpret(interpret)
     g, n = B.shape[2], B.shape[3]
     hr = h // g
     chunk = min(chunk, s)

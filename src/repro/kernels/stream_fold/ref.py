@@ -1,0 +1,34 @@
+"""Pure-jnp oracles for the streaming-fold kernel (the XLA sub-slot scan)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def stream_fold_ref(x0: jax.Array, deposits: jax.Array, a: jax.Array
+                    ) -> jax.Array:
+    """``lax.scan`` fold of ``x ← x·a + deposits[s]`` — the exact op
+    sequence the kernel fuses, so parity is bit-for-bit.
+
+    x0 [N, F]; deposits [S, N, F]; a [F] → [N, F].
+    """
+    def step(x, dep):
+        return x * a + dep, None
+
+    x, _ = lax.scan(step, x0, deposits)
+    return x
+
+
+def stream_fold_mac_ref(x0: jax.Array, patches: jax.Array, w: jax.Array,
+                        a: jax.Array, *, dv_unit: float) -> jax.Array:
+    """Patch-space oracle for the MAC variant (same matmul math).
+
+    x0 [N, F]; patches [S, N, K]; w [K, F]; a [F] → [N, F].
+    """
+    def step(x, patch):
+        dep = (patch.astype(jnp.float32) @ w.astype(jnp.float32)) * dv_unit
+        return x * a + dep, None
+
+    x, _ = lax.scan(step, x0, patches)
+    return x

@@ -75,6 +75,11 @@ def main() -> int:
     ap.add_argument("--chunks-per-window", type=int, default=None,
                     help="replay chunks per T_INTG window (must divide "
                          "n_sub; default: one chunk per fine sub-slot)")
+    ap.add_argument("--use-kernel", action="store_true",
+                    help="fold sub-slots through the fused Pallas "
+                         "stream_fold kernel instead of the XLA scan "
+                         "(bit-exact; compiled on TPU, interpreted "
+                         "elsewhere — see docs/kernels.md)")
     ap.add_argument("--protocol", type=str, default="frozen",
                     choices=["frozen", "unfrozen"],
                     help="which phase-2 protocol to train+deploy when no "
@@ -132,7 +137,8 @@ def main() -> int:
                                              data_root=data_root,
                                              split="all")
         engine = StreamEngine(dep, capacity=args.capacity,
-                              chunks_per_window=args.chunks_per_window)
+                              chunks_per_window=args.chunks_per_window,
+                              use_kernel=args.use_kernel)
         report = engine.serve(source, args.streams, seed=args.seed,
                               log=print)
     except (ValueError, OSError) as e:

@@ -42,6 +42,7 @@ from repro.core import analog, leakage, p2m_layer, snn
 # the SAME conv the offline curvefit forward runs — parity depends on
 # identical padding/dimension numbers, so it is imported, not copied
 from repro.core.p2m_layer import _conv
+from repro.kernels.stream_fold import ops as stream_fold_ops
 from repro.stream.deploy import Deployment
 
 
@@ -64,13 +65,16 @@ class StreamFns:
 
 
 def make_stream_fns(dep: Deployment, *, capacity: int,
-                    chunk_slots: int) -> StreamFns:
+                    chunk_slots: int, use_kernel: bool = False) -> StreamFns:
     """Build the jitted lane-batched fold/readout steps for ``dep``.
 
     ``chunk_slots`` is the number of fine sub-slots one replay chunk
     spans (``fold`` consumes frames ``[capacity, chunk_slots, H, W, 2]``);
     it must divide ``n_sub`` so T_INTG boundaries land on chunk
-    boundaries.
+    boundaries. ``use_kernel=True`` routes the sub-slot fold through the
+    fused Pallas stream_fold kernel (one launch per chunk, charge tile
+    VMEM-resident — see docs/kernels.md); the XLA ``lax.scan`` fold
+    below is its bit-exactness oracle and stays the default.
     """
     cfg = dep.model_cfg
     p2m_cfg = cfg.p2m
@@ -127,6 +131,12 @@ def make_stream_fns(dep: Deployment, *, capacity: int,
         Each sub-slot decays the standing charge by ``a`` and deposits
         its (dv_unit-scaled) conv — empty slots decay without deposit.
         """
+        if use_kernel:
+            x = stream_fold_ops.fold_chunk(
+                state["x"], frames, w_q, a, stride=p2m_cfg.stride,
+                dv_unit=p2m_cfg.analog.dv_unit)
+            return {**state, "x": _mask(active, x, state["x"])}
+
         def sub_step(x, ev_k):
             ideal = _conv(ev_k, w_q, p2m_cfg.stride) * p2m_cfg.analog.dv_unit
             return x * a + ideal, None

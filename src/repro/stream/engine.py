@@ -136,10 +136,14 @@ class StreamEngine:
     granularity — how many raw-event chunks arrive per T_INTG window
     (must divide ``n_sub``; default: one chunk per fine sub-slot, the
     finest arrival granularity the binned contract expresses).
+    ``use_kernel=True`` folds each chunk's sub-slots through the fused
+    Pallas stream_fold kernel instead of the XLA scan (bit-exact either
+    way — tests/test_stream_fold.py pins it).
     """
 
     def __init__(self, dep: Deployment, *, capacity: int = 4,
-                 chunks_per_window: int | None = None):
+                 chunks_per_window: int | None = None,
+                 use_kernel: bool = False):
         cfg = dep.model_cfg.p2m
         self.dep = dep
         self.capacity = capacity
@@ -154,8 +158,10 @@ class StreamEngine:
         self.slot_us = slot_us_for(cfg.t_intg_ms, cfg.n_sub)
         self.chunk_us = self.slot_us * self.chunk_slots
         self.group = dep.model_cfg.coarsen_group()
+        self.use_kernel = use_kernel
         self.fns = make_stream_fns(dep, capacity=capacity,
-                                   chunk_slots=self.chunk_slots)
+                                   chunk_slots=self.chunk_slots,
+                                   use_kernel=use_kernel)
 
     # ------------------------------------------------------------------
     def open_stream(self, source: EventSource, key: jax.Array,

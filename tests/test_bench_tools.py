@@ -1,0 +1,117 @@
+"""BENCH_*.json perf-trajectory plumbing: the bench_record writer
+(benchmarks/common.py) emits schema-valid records, and the
+tools/check_bench.py gate validates schema and flags regressions against
+a prior record."""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+import pytest
+
+jax = pytest.importorskip("jax")
+
+REPO = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(REPO / "tools"))
+sys.path.insert(0, str(REPO))
+
+import check_bench  # noqa: E402
+
+from benchmarks.common import BENCH_SCHEMA, bench_entry, bench_record  # noqa: E402
+
+
+def _write(tmp_path, name="t"):
+    return bench_record(name, [
+        bench_entry("k1", xla_us=100.0, kernel_us=50.0, max_err=0.0),
+        bench_entry("k2", xla_us=10.0, kernel_us=None, max_err=1e-6,
+                    meta={"note": "serving"}),
+    ], extra={"fast": True}, root=tmp_path)
+
+
+class TestBenchRecord:
+    def test_writes_valid_schema(self, tmp_path):
+        p = _write(tmp_path)
+        assert p.name == "BENCH_t.json"
+        rec = json.loads(p.read_text())
+        assert rec["schema"] == BENCH_SCHEMA
+        assert rec["backend"] == jax.default_backend()
+        assert isinstance(rec["interpret"], bool)
+        assert rec["context"] == {"fast": True}
+        assert check_bench.validate(rec, "t") == []
+
+    def test_entry_shape(self):
+        e = bench_entry("x", xla_us=1.0)
+        assert e == {"name": "x", "xla_us": 1.0, "kernel_us": None,
+                     "max_err": None, "meta": {}}
+
+
+class TestValidate:
+    def _rec(self, tmp_path):
+        return json.loads(_write(tmp_path).read_text())
+
+    def test_wrong_schema_rejected(self, tmp_path):
+        rec = self._rec(tmp_path)
+        rec["schema"] = "p2m-bench/v0"
+        assert any("schema" in e for e in check_bench.validate(rec, "t"))
+
+    def test_missing_key_rejected(self, tmp_path):
+        rec = self._rec(tmp_path)
+        del rec["commit"]
+        assert any("commit" in e for e in check_bench.validate(rec, "t"))
+
+    def test_empty_entries_rejected(self, tmp_path):
+        rec = self._rec(tmp_path)
+        rec["entries"] = []
+        assert any("non-empty" in e for e in check_bench.validate(rec, "t"))
+
+    def test_bad_timing_rejected(self, tmp_path):
+        rec = self._rec(tmp_path)
+        rec["entries"][0]["kernel_us"] = "fast"
+        rec["entries"][1]["xla_us"] = -1.0
+        errs = check_bench.validate(rec, "t")
+        assert any("kernel_us" in e for e in errs)
+        assert any(">= 0" in e for e in errs)
+
+    def test_duplicate_and_unknown_keys_rejected(self, tmp_path):
+        rec = self._rec(tmp_path)
+        rec["entries"][1]["name"] = "k1"
+        rec["entries"][0]["speedup"] = 2.0
+        errs = check_bench.validate(rec, "t")
+        assert any("duplicate" in e for e in errs)
+        assert any("unknown keys" in e for e in errs)
+
+
+class TestTrajectory:
+    def test_slowdowns_flagged(self, tmp_path):
+        prev = json.loads(_write(tmp_path).read_text())
+        fresh = json.loads(json.dumps(prev))
+        fresh["entries"][0]["kernel_us"] = 200.0      # 4x slower
+        regs = check_bench.diff_trajectory(fresh, prev)
+        assert [(r[0], r[3]) for r in regs] == [("k1.kernel_us", 4.0)]
+
+    def test_new_entries_ignored(self, tmp_path):
+        prev = json.loads(_write(tmp_path).read_text())
+        fresh = json.loads(json.dumps(prev))
+        fresh["entries"].append(bench_entry("k3", kernel_us=1.0))
+        assert check_bench.diff_trajectory(fresh, prev) == []
+
+
+class TestMain:
+    def test_valid_record_passes(self, tmp_path):
+        p = _write(tmp_path)
+        assert check_bench.main([str(p)]) == 0
+
+    def test_invalid_record_fails(self, tmp_path):
+        p = _write(tmp_path)
+        rec = json.loads(p.read_text())
+        rec["entries"] = []
+        p.write_text(json.dumps(rec))
+        assert check_bench.main([str(p)]) == 1
+
+    def test_committed_records_valid(self):
+        """The BENCH_*.json records committed at the repo root always
+        satisfy their own schema."""
+        records = sorted(REPO.glob("BENCH_*.json"))
+        assert records, "no BENCH_*.json committed at repo root"
+        assert check_bench.main([str(p) for p in records]) == 0

@@ -42,3 +42,45 @@ class TestChecker:
         md.write_text("# T\n\n```md\n[not a link](missing.md)\n```\n"
                       "and `[inline](also/missing.md)` too\n")
         assert check_docs.check_file(md) == []
+
+
+class TestDocstringRefs:
+    """The .md-reference scan over Python docstrings (satellite of the
+    BENCH/benchmarks work: benchmark docstrings rot quietly)."""
+
+    def _py(self, tmp_path, doc):
+        p = tmp_path / "mod.py"
+        p.write_text(f'"""{doc}"""\n')
+        return p
+
+    def test_missing_md_detected(self, tmp_path):
+        p = self._py(tmp_path, "Tables live in EXPERIMENTS.md here.")
+        errs = check_docs.check_py_docstrings(p)
+        assert len(errs) == 1 and "EXPERIMENTS.md" in errs[0]
+
+    def test_existing_md_ok(self, tmp_path):
+        p = self._py(tmp_path, "See docs/benchmarks.md and README.md.")
+        assert check_docs.check_py_docstrings(p) == []
+
+    def test_function_and_class_docstrings_scanned(self, tmp_path):
+        p = tmp_path / "mod.py"
+        p.write_text('def f():\n    """see gone/missing.md"""\n\n'
+                     'class C:\n    """see also/absent.md §X"""\n')
+        errs = check_docs.check_py_docstrings(p)
+        assert len(errs) == 2
+
+    def test_section_suffix_checked(self, tmp_path):
+        ok = self._py(tmp_path, "See docs/sweep.md §Sharding for details.")
+        assert check_docs.check_py_docstrings(ok) == []
+        bad = self._py(tmp_path, "See docs/sweep.md §Roofline instead.")
+        errs = check_docs.check_py_docstrings(bad)
+        assert len(errs) == 1 and "no such heading" in errs[0]
+
+    def test_code_literals_skipped(self, tmp_path):
+        p = self._py(tmp_path, "Pass ``path.md#section`` as the target.")
+        assert check_docs.check_py_docstrings(p) == []
+
+    def test_repo_py_docstrings_clean(self):
+        errs = [e for f in check_docs.py_files()
+                for e in check_docs.check_py_docstrings(f)]
+        assert errs == []

@@ -175,7 +175,7 @@ def test_backbone_stream_step_matches_batched():
 
 class TestStreamingOfflineParity:
     def _parity_case(self, trained, file_source, tmp_path, protocol,
-                     record, capacity=2):
+                     record, capacity=2, use_kernel=False):
         result = trained["results"][protocol]
         ckpt = tmp_path / f"ckpt_{protocol}_{record['label']}_" \
                           f"{record['t_intg_ms']:g}"
@@ -190,7 +190,8 @@ class TestStreamingOfflineParity:
         off = deploy_mod.offline_forward(dep, jnp.asarray(frames))
         off_logits = np.asarray(off["logits"])
 
-        engine = StreamEngine(dep, capacity=capacity)
+        engine = StreamEngine(dep, capacity=capacity,
+                              use_kernel=use_kernel)
         report = engine.serve(_PinnedSource(file_source, indices),
                               len(indices), seed=0)
         assert len(report.results) == len(indices)
@@ -218,6 +219,17 @@ class TestStreamingOfflineParity:
         for record in records:
             self._parity_case(trained, file_source, tmp_path, protocol,
                               record)
+
+    def test_parity_use_kernel_all_cells(self, trained, file_source,
+                                         tmp_path):
+        """The fused stream_fold kernel path (use_kernel=True) holds the
+        SAME offline-parity contract across the full 2 circuits ×
+        2 T_INTG grid — the kernel is bit-exact with the scan fold, so
+        the telescoping to the offline curve-fit forward survives."""
+        records = trained["results"]["frozen"].records
+        for record in records:
+            self._parity_case(trained, file_source, tmp_path / "kern",
+                              "frozen", record, use_kernel=True)
 
     def test_parity_capacity_one_recycles(self, trained, file_source,
                                           tmp_path):

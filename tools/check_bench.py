@@ -1,0 +1,179 @@
+#!/usr/bin/env python3
+"""Validate BENCH_*.json perf-trajectory records and flag regressions.
+
+Two jobs (docs/benchmarks.md):
+
+  * **schema gate** (always): every record must carry
+    ``schema == "p2m-bench/v1"``, the required top-level keys, and
+    well-formed entries (name + numeric-or-null timings + oracle
+    ``max_err``). Exit 1 on any violation — CI gates on this.
+  * **trajectory diff** (when the file is tracked): compare each entry's
+    ``kernel_us`` against the committed record (``git show
+    HEAD:BENCH_<name>.json``). Slowdowns beyond ``--max-regression``
+    (ratio, default 0 = report only) are flagged; with the flag set they
+    fail the run. Timings on shared runners are noisy, so the default is
+    advisory — ``max_err`` drift is what the kernels' own asserts gate.
+
+    python tools/check_bench.py                 # all BENCH_*.json at root
+    python tools/check_bench.py BENCH_kernels.json --max-regression 3.0
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+
+SCHEMA = "p2m-bench/v1"
+REQUIRED_KEYS = ("schema", "name", "commit", "backend", "interpret",
+                 "generated", "entries")
+ENTRY_KEYS = ("name", "xla_us", "kernel_us", "max_err", "meta")
+
+
+def _is_num(x) -> bool:
+    return isinstance(x, (int, float)) and not isinstance(x, bool)
+
+
+def validate(record: dict, label: str) -> list[str]:
+    """Schema violations for one parsed record (empty list = valid)."""
+    errs = []
+    if not isinstance(record, dict):
+        return [f"{label}: record is not a JSON object"]
+    for k in REQUIRED_KEYS:
+        if k not in record:
+            errs.append(f"{label}: missing key '{k}'")
+    if record.get("schema") != SCHEMA:
+        errs.append(f"{label}: schema {record.get('schema')!r} != {SCHEMA!r}")
+    if errs:
+        return errs
+    if not isinstance(record["interpret"], bool):
+        errs.append(f"{label}: 'interpret' must be a bool")
+    for k in ("name", "commit", "backend", "generated"):
+        if not isinstance(record[k], str) or not record[k]:
+            errs.append(f"{label}: '{k}' must be a non-empty string")
+    entries = record["entries"]
+    if not isinstance(entries, list) or not entries:
+        return errs + [f"{label}: 'entries' must be a non-empty list"]
+    seen = set()
+    for i, e in enumerate(entries):
+        tag = f"{label}: entries[{i}]"
+        if not isinstance(e, dict):
+            errs.append(f"{tag} is not an object")
+            continue
+        name = e.get("name")
+        if not isinstance(name, str) or not name:
+            errs.append(f"{tag}: 'name' must be a non-empty string")
+        elif name in seen:
+            errs.append(f"{tag}: duplicate entry name {name!r}")
+        else:
+            seen.add(name)
+        for k in ("xla_us", "kernel_us", "max_err"):
+            if k not in e:
+                errs.append(f"{tag}: missing key '{k}'")
+            elif e[k] is not None and not _is_num(e[k]):
+                errs.append(f"{tag}: '{k}' must be numeric or null")
+            elif _is_num(e.get(k)) and e[k] < 0:
+                errs.append(f"{tag}: '{k}' must be >= 0")
+        if not isinstance(e.get("meta", {}), dict):
+            errs.append(f"{tag}: 'meta' must be an object")
+        unknown = set(e) - set(ENTRY_KEYS)
+        if unknown:
+            errs.append(f"{tag}: unknown keys {sorted(unknown)}")
+    return errs
+
+
+def committed_record(path: Path) -> dict | None:
+    """The record as of HEAD, or None if untracked/new/outside the repo."""
+    try:
+        rel = path.resolve().relative_to(REPO).as_posix()
+    except ValueError:
+        return None
+    try:
+        out = subprocess.run(["git", "show", f"HEAD:{rel}"], cwd=REPO,
+                             capture_output=True, text=True, timeout=20)
+    except OSError:
+        return None
+    if out.returncode != 0:
+        return None
+    try:
+        return json.loads(out.stdout)
+    except json.JSONDecodeError:
+        return None
+
+
+def diff_trajectory(fresh: dict, prev: dict
+                    ) -> list[tuple[str, float, float, float]]:
+    """(entry, prev_us, new_us, ratio) for entries slower than before."""
+    prev_by = {e["name"]: e for e in prev.get("entries", [])
+               if isinstance(e, dict)}
+    regressions = []
+    for e in fresh["entries"]:
+        p = prev_by.get(e["name"])
+        if not p:
+            continue
+        for k in ("kernel_us", "xla_us"):
+            new, old = e.get(k), p.get(k)
+            if _is_num(new) and _is_num(old) and old > 0 and new > old:
+                regressions.append(
+                    (f"{e['name']}.{k}", old, new, new / old))
+    return regressions
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("records", nargs="*", type=Path,
+                    help="BENCH_*.json files (default: all at repo root)")
+    ap.add_argument("--max-regression", type=float, default=0.0,
+                    help="fail when kernel_us/xla_us grows by more than "
+                         "this ratio vs the committed record (e.g. 3.0 = "
+                         "3x slower); 0 = report only")
+    args = ap.parse_args(argv)
+
+    paths = args.records or sorted(REPO.glob("BENCH_*.json"))
+    if not paths:
+        print("check_bench: no BENCH_*.json records found", file=sys.stderr)
+        return 1
+
+    errors: list[str] = []
+    gated: list[str] = []
+    for path in paths:
+        label = path.name
+        try:
+            record = json.loads(path.read_text(encoding="utf-8"))
+        except (OSError, json.JSONDecodeError) as e:
+            errors.append(f"{label}: unreadable ({e})")
+            continue
+        errs = validate(record, label)
+        errors.extend(errs)
+        if errs:
+            continue
+        prev = committed_record(path)
+        if prev is None or validate(prev, label):
+            print(f"check_bench: {label}: no committed baseline "
+                  f"(new record) — schema OK")
+            continue
+        regs = diff_trajectory(record, prev)
+        for name, old, new, ratio in regs:
+            line = (f"{label}: {name} {old:.1f}us → {new:.1f}us "
+                    f"({ratio:.2f}x)")
+            if args.max_regression and ratio > args.max_regression:
+                gated.append(f"REGRESSION {line}")
+            else:
+                print(f"check_bench: slower: {line}")
+        if not regs:
+            print(f"check_bench: {label}: no slowdowns vs "
+                  f"{prev['commit'][:10]}")
+
+    for e in errors + gated:
+        print(e, file=sys.stderr)
+    n_bad = len(errors) + len(gated)
+    print(f"check_bench: {len(paths)} records, "
+          f"{'OK' if not n_bad else f'{n_bad} problems'}")
+    return 1 if n_bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,5 +1,5 @@
 #!/usr/bin/env python3
-"""Link-check the repo docs: README.md + docs/*.md.
+"""Link-check the repo docs: README.md + docs/*.md + Python docstrings.
 
 Verifies, offline and with no third-party deps:
 
@@ -9,7 +9,12 @@ Verifies, offline and with no third-party deps:
     ``path.md#section``) match a real heading, using GitHub's
     slugification (lowercase, strip punctuation, spaces → hyphens);
   * inline code spans are ignored; external http(s)/mailto links are
-    skipped (no network in CI).
+    skipped (no network in CI);
+  * ``.md`` files name-dropped in Python docstrings (module / class /
+    function level) under ``benchmarks/`` and ``tools/`` exist at the
+    repo root — docstrings rot quietly when a doc is renamed
+    (a ``kernel_bench.py`` docstring once pointed at a §Roofline
+    section of a file that no longer carried it).
 
 Exit code 1 with one line per broken reference. Run from the repo root
 (CI: the docs job) or anywhere — paths resolve relative to this file.
@@ -18,6 +23,7 @@ Exit code 1 with one line per broken reference. Run from the repo root
 """
 from __future__ import annotations
 
+import ast
 import re
 import sys
 from pathlib import Path
@@ -83,15 +89,76 @@ def check_file(md: Path) -> list[str]:
     return errors
 
 
+MD_REF_RE = re.compile(r"(?<![\w/])([\w./-]+\.md)(?:\s+§([\w.-]+))?")
+
+
+def py_files() -> list[Path]:
+    files = []
+    for d in ("benchmarks", "tools"):
+        root = REPO / d
+        if root.is_dir():
+            files += sorted(root.glob("*.py"))
+    return files
+
+
+def _docstrings(tree: ast.Module) -> list[str]:
+    out = []
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.Module, ast.ClassDef, ast.FunctionDef,
+                             ast.AsyncFunctionDef)):
+            doc = ast.get_docstring(node, clean=False)
+            if doc:
+                out.append(doc)
+    return out
+
+
+RST_LITERAL_RE = re.compile(r"``[^`]*``")
+
+
+def check_py_docstrings(py: Path) -> list[str]:
+    """Broken ``.md`` references (path or § section) in ``py``'s docstrings.
+
+    Paths resolve against the repo root, then against the file's own
+    directory. A ``§Section`` suffix must match a heading of the target
+    doc (substring, case-insensitive) — this is what catches a docstring
+    pointing at a section that moved to another file.
+    """
+    try:
+        tree = ast.parse(py.read_text(encoding="utf-8"))
+    except SyntaxError as e:
+        return [f"{_rel(py)}: unparseable ({e})"]
+    errors = []
+    for doc in _docstrings(tree):
+        doc = RST_LITERAL_RE.sub("", doc)     # skip ``code`` literals
+        for ref, section in MD_REF_RE.findall(doc):
+            dest = REPO / ref
+            if not dest.exists():
+                dest = py.parent / ref
+            if not dest.exists():
+                errors.append(f"{_rel(py)}: docstring references "
+                              f"missing doc '{ref}'")
+                continue
+            if section:
+                text = CODE_FENCE_RE.sub("", dest.read_text(encoding="utf-8"))
+                heads = [h.lower() for h in HEADING_RE.findall(text)]
+                if not any(section.lower() in h for h in heads):
+                    errors.append(
+                        f"{_rel(py)}: docstring references '{ref} "
+                        f"§{section}' but {_rel(dest)} has no such heading")
+    return errors
+
+
 def main() -> int:
     files = doc_files()
     if not files:
         print("check_docs: no README.md / docs/*.md found", file=sys.stderr)
         return 1
+    pys = py_files()
     errors = [e for f in files for e in check_file(f)]
+    errors += [e for f in pys for e in check_py_docstrings(f)]
     for e in errors:
         print(e, file=sys.stderr)
-    print(f"check_docs: {len(files)} files, "
+    print(f"check_docs: {len(files)} docs + {len(pys)} py files, "
           f"{'OK' if not errors else f'{len(errors)} broken references'}")
     return 1 if errors else 0
 
