@@ -16,6 +16,7 @@ from __future__ import annotations
 import argparse
 import sys
 import time
+from collections import deque
 from dataclasses import dataclass, field
 
 import jax
@@ -131,17 +132,18 @@ def main() -> int:
         server.load(params)
 
         key = jax.random.PRNGKey(1)
-        queue = [Request(i, jax.random.randint(jax.random.fold_in(key, i),
-                                               (args.prompt_len,), 0,
-                                               scfg.vocab_size),
-                         max_new=args.gen)
-                 for i in range(args.requests)]
+        queue = deque(
+            Request(i, jax.random.randint(jax.random.fold_in(key, i),
+                                          (args.prompt_len,), 0,
+                                          scfg.vocab_size),
+                    max_new=args.gen)
+            for i in range(args.requests))
         done: list[Request] = []
         t0 = time.perf_counter()
         steps = 0
         while len(done) < args.requests:
             while queue and server.admit(queue[0]):
-                queue.pop(0)
+                queue.popleft()
             done.extend(server.step())
             steps += 1
             if steps > args.requests * args.gen + 64:

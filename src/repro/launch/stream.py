@@ -16,13 +16,15 @@ Three ways in:
     dataset is generated first (repro.data.fixtures), then the tiny
     train → deploy → serve pipeline runs end-to-end on CPU.
 
-Emits one serving-stats JSON artifact (schema ``p2m-stream-serving/v1``):
-per-stream predictions, p50/p99 readout latency, events/s.
+Emits one serving-stats JSON artifact (schema ``p2m-stream-serving/v2``):
+per-stream predictions, p50/p99 readout latency, events/s, admission
+(shed/deferred) counters and — under ``--paced`` — deadline-miss
+accounting (docs/streaming.md).
 
   PYTHONPATH=src python -m repro.launch.stream --smoke --streams 8
   PYTHONPATH=src python -m repro.launch.stream --dataset dvs128 \\
       --data-root /data/DvsGesture --checkpoint artifacts/stream/ckpt_frozen \\
-      --streams 64 --capacity 16
+      --streams 64 --capacity 16 --paced --offered-rate 32 --max-pending 128
 """
 from __future__ import annotations
 
@@ -72,6 +74,19 @@ def main() -> int:
                     help="number of event streams to serve")
     ap.add_argument("--capacity", type=int, default=4,
                     help="concurrent serving lanes (the jitted batch)")
+    ap.add_argument("--paced", action="store_true",
+                    help="real-time replay: hold each T_INTG window to "
+                         "its wall-clock boundary and record deadline "
+                         "misses (readouts landing after t_admit + "
+                         "k*t_intg); predictions stay bit-identical to "
+                         "unpaced replay")
+    ap.add_argument("--offered-rate", type=float, default=None,
+                    help="offered load, streams/s on the replay clock "
+                         "(default: offer all streams up front)")
+    ap.add_argument("--max-pending", type=int, default=None,
+                    help="bound on the pending admission queue; offers "
+                         "beyond capacity + max-pending are shed "
+                         "(default: unbounded, no shedding)")
     ap.add_argument("--chunks-per-window", type=int, default=None,
                     help="replay chunks per T_INTG window (must divide "
                          "n_sub; default: one chunk per fine sub-slot)")
@@ -140,7 +155,9 @@ def main() -> int:
                               chunks_per_window=args.chunks_per_window,
                               use_kernel=args.use_kernel)
         report = engine.serve(source, args.streams, seed=args.seed,
-                              log=print)
+                              paced=args.paced,
+                              offered_rate=args.offered_rate,
+                              max_pending=args.max_pending, log=print)
     except (ValueError, OSError) as e:
         print(f"error: {e}", file=sys.stderr)
         return 2
@@ -156,16 +173,26 @@ def main() -> int:
     path.write_text(json.dumps(art, indent=2, default=float))
 
     lat, thr = art["latency_ms"], art["throughput"]
+    adm, ddl = art["admission"], art["deadlines"]
     print(f"\n=== stream serving ({art['n_streams']} streams, "
           f"{report.capacity} lanes, T_INTG={art['t_intg_ms']:g}ms, "
           f"variant {art['deployed']['label']}/{art['deployed']['protocol']}"
-          f") ===")
+          f"{', paced' if art['paced'] else ''}) ===")
     print(f"accuracy       {art['accuracy']:.3f}")
     print(f"readout p50    {lat['readout_p50']:.2f} ms   "
           f"p99 {lat['readout_p99']:.2f} ms")
     print(f"throughput     {thr['events_per_s']:.0f} events/s   "
           f"{thr['readouts_per_s']:.1f} readouts/s   "
           f"{thr['streams_per_s']:.2f} streams/s")
+    print(f"admission      offered {adm['n_offered']}  admitted "
+          f"{adm['n_admitted']}  shed {adm['n_shed']}  deferred "
+          f"{adm['n_deferred']}  max open {adm['max_open_streams']}")
+    if art["paced"]:
+        mg = ddl["margin_ms"]
+        print(f"deadlines      {ddl['n_misses']}/{ddl['n_deadlines']} "
+              f"missed ({ddl['miss_rate']:.2%})   margin p50 "
+              f"{mg['p50']:.2f} ms  p99 {mg['p99']:.2f} ms  max "
+              f"{mg['max']:.2f} ms")
     print(f"artifact: {path}")
     return 0
 

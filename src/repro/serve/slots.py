@@ -19,6 +19,7 @@ consumer's job, keyed by the lane index this class hands out.
 """
 from __future__ import annotations
 
+from collections import deque
 from typing import Generic, Iterator, TypeVar
 
 T = TypeVar("T")
@@ -84,14 +85,24 @@ class SlotManager(Generic[T]):
         self._items[slot] = None
         return item
 
-    def refill(self, queue: list[T]) -> list[tuple[int, T]]:
-        """Admit items from the head of ``queue`` (in order, popping them)
-        until the queue is empty or every lane is full. Returns the
-        (lane, item) placements so the consumer can initialize per-lane
-        model state."""
+    def refill(self, queue: deque[T]) -> list[tuple[int, T]]:
+        """Admit items from the head of ``queue`` (in order, popping them
+        via ``popleft``) until the queue is empty or every lane is full.
+        Returns the (lane, item) placements so the consumer can
+        initialize per-lane model state.
+
+        ``queue`` must be a :class:`collections.deque` (or anything with
+        ``popleft``): the saturation harness queues thousands of pending
+        streams, and popping a Python list's head is O(n) per admit —
+        O(n²) over a long backlog."""
+        if not hasattr(queue, "popleft"):
+            raise TypeError(
+                f"refill requires a deque-like queue with popleft "
+                f"(got {type(queue).__name__}); list-head pops are "
+                f"quadratic over long pending queues")
         placed: list[tuple[int, T]] = []
         while queue and not self.is_full():
-            item = queue.pop(0)
+            item = queue.popleft()
             slot = self.admit(item)
             assert slot is not None
             placed.append((slot, item))

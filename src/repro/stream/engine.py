@@ -1,4 +1,5 @@
-"""Online event-stream serving with continuous batching.
+"""Online event-stream serving with continuous batching, admission
+control, and (optionally) paced real-time replay.
 
 The missing half of the offline reproduction: the sweep engine measures
 circuit variants in batch; this engine SERVES one deployed variant
@@ -6,30 +7,53 @@ circuit variants in batch; this engine SERVES one deployed variant
 
 Lifecycle of one stream (see docs/streaming.md):
 
-  1. the replay layer (``EventSource.iter_event_chunks``) turns one
-     labeled recording — AEDAT / N-MNIST file or the synthetic generator
-     — into timestamped raw ``(t, x, y, p)`` chunks;
-  2. ``refill`` admits the stream into a free lane of the shared
-     :class:`~repro.serve.slots.SlotManager` at a T_INTG window boundary
-     (the lane's charge/membrane state is zeroed — precharge);
+  1. the stream is OFFERED (all at once, or trickled at
+     ``offered_rate`` streams/s on the replay clock) and enters the
+     bounded pending queue — or is SHED when the queue is full
+     (backpressure: offered load beyond ``capacity + max_pending`` is
+     rejected, not buffered without bound);
+  2. when a lane of the shared :class:`~repro.serve.slots.SlotManager`
+     frees up at a T_INTG window boundary, the stream is ADMITTED: only
+     now is its replay iterator opened
+     (``EventSource.iter_event_chunks`` — AEDAT / N-MNIST file or the
+     synthetic generator, replayed as timestamped raw ``(t, x, y, p)``
+     chunks) and the lane's charge/membrane state zeroed (precharge) —
+     resident iterators never exceed the lane capacity;
   3. every replay tick, each occupied lane's next chunk is binned onto
      the fine sub-slot grid (repro.data.binning semantics, sensor →
-     model downscale included) and ONE jitted lane-batched ``fold``
-     advances every lane's leak ODE + conv deposit together;
+     model downscale included) by a host-side worker thread that runs
+     one chunk ahead of the device, and ONE jitted lane-batched ``fold``
+     advances every lane's leak ODE + conv deposit together — no
+     per-tick host sync; the window's only sync point is its readout;
   4. at each T_INTG boundary one jitted ``readout`` comparator-reads
      every lane, accumulates pooled spikes toward the backbone coarse
      grid, and — per lane, whenever ITS coarse window completes — steps
      the stateful spiking backbone and the rate-decoded logit average;
   5. after the stream's full duration the lane's prediction is
-     finalized, the slot is released, and the queue refills it.
+     finalized, the slot is released, and the pending queue refills it.
 
 All lanes advance on one shared replay clock (micro-batching), but
 admission/finalization are per-lane — classic continuous batching, the
 same ``SlotManager`` contract the LM decode server uses.
+
+**Paced mode** (``serve(..., paced=True)``) turns the replayer into a
+real-time server: the scheduler holds window ``k`` until wall clock
+``t_admit + k·t_intg`` and records a *deadline miss* whenever a readout
+completes after its boundary ``t_admit + (k+1)·t_intg`` — in a physical
+P²M sensor the passive capacitor's charge-retention bounds T_INTG, so a
+late readout reads leaked charge; it is a correctness event, not just a
+latency sample. Predictions are bit-identical to unpaced replay on the
+same seed (pacing only inserts sleeps); per-lane and fleet-wide miss
+counters plus the miss-margin histogram land in the
+``p2m-stream-serving/v2`` stats artifact.
 """
 from __future__ import annotations
 
+import math
+import queue as queue_mod
+import threading
 import time
+from collections import deque
 from dataclasses import asdict, dataclass, field
 from typing import Iterator
 
@@ -44,7 +68,7 @@ from repro.serve.slots import SlotManager
 from repro.stream.accumulator import make_stream_fns
 from repro.stream.deploy import Deployment
 
-STATS_SCHEMA = "p2m-stream-serving/v1"
+STATS_SCHEMA = "p2m-stream-serving/v2"
 
 
 @dataclass
@@ -57,8 +81,13 @@ class StreamResult:
     n_events: int
     n_readouts: int
     n_coarse_frames: int
+    offered_window: int       # global window tick the stream was offered
     admitted_window: int      # global window tick the stream was admitted
     finished_window: int
+    n_misses: int = 0         # paced mode: readouts past their deadline
+    # worst (largest) miss margin over the stream's readouts, ms;
+    # negative = every readout beat its deadline; None = unpaced run
+    miss_margin_max_ms: float | None = None
     logits: list[float] = field(default_factory=list)  # rate-decoded mean
 
 
@@ -69,10 +98,54 @@ class _Lane:
     label: int
     chunks: Iterator[EventChunk]
     n_windows: int
-    admitted_window: int
+    offered_window: int = 0
+    admitted_window: int = 0
     windows_done: int = 0
     n_events: int = 0
     t_cursor_us: int = 0
+    n_misses: int = 0
+    worst_margin_ms: float | None = None
+
+
+class _BinWorker:
+    """Single host-side worker thread binning replay chunks ahead of the
+    device fold (async host binning: while the device folds chunk ``c``,
+    the worker bins chunk ``c+1``). Jobs are executed strictly in
+    submission order — replay iterators are only ever advanced on this
+    thread, so chunk order per lane is preserved. Exceptions propagate to
+    the consumer at ``get()``."""
+
+    _STOP = object()
+
+    def __init__(self):
+        self._tasks: queue_mod.Queue = queue_mod.Queue()
+        self._results: queue_mod.Queue = queue_mod.Queue()
+        self._thread = threading.Thread(
+            target=self._run, name="stream-bin-worker", daemon=True)
+        self._thread.start()
+
+    def _run(self):
+        while True:
+            job = self._tasks.get()
+            if job is self._STOP:
+                return
+            try:
+                self._results.put((job(), None))
+            except BaseException as e:  # surfaced at get()
+                self._results.put((None, e))
+
+    def submit(self, job) -> None:
+        self._tasks.put(job)
+
+    def get(self):
+        frames, err = self._results.get()
+        if err is not None:
+            raise err
+        return frames
+
+    def close(self) -> None:
+        self._tasks.put(self._STOP)
+        self._thread.join(timeout=10)
 
 
 @dataclass
@@ -88,6 +161,18 @@ class ServingReport:
     total_events: int
     total_readouts: int
     total_layer1_spikes: float
+    paced: bool = False
+    offered_rate: float | None = None
+    max_pending: int | None = None
+    n_offered: int = 0
+    n_admitted: int = 0
+    n_shed: int = 0               # rejected: pending queue was full
+    n_deferred: int = 0           # admitted later than their offer window
+    max_open_streams: int = 0     # peak concurrently-open replay iterators
+    n_misses: int = 0             # fleet-wide deadline misses (paced)
+    # one margin per (occupied lane, window) readout in paced mode:
+    # readout completion − deadline, ms (positive = missed)
+    miss_margin_ms: list[float] = field(default_factory=list)
     readout_s: list[float] = field(default_factory=list)
     fold_s: list[float] = field(default_factory=list)
 
@@ -96,6 +181,30 @@ class ServingReport:
         if not self.results:
             return 0.0
         return sum(r.correct for r in self.results) / len(self.results)
+
+    @property
+    def miss_rate(self) -> float:
+        n = len(self.miss_margin_ms)
+        return self.n_misses / n if n else 0.0
+
+    def deadline_stats(self) -> dict:
+        """Fleet-wide deadline accounting: counters, miss-margin
+        percentiles, and a coarse margin histogram (empty on unpaced
+        runs, where no readout carries a deadline)."""
+        m = np.asarray(self.miss_margin_ms, dtype=float)
+        if m.size:
+            pct = {q: float(np.percentile(m, int(q[1:])))
+                   for q in ("p50", "p90", "p99")}
+            pct["max"] = float(m.max())
+            counts, edges = np.histogram(m, bins=8)
+            hist = {"edges_ms": [float(e) for e in edges],
+                    "counts": [int(c) for c in counts]}
+        else:
+            pct = {"p50": 0.0, "p90": 0.0, "p99": 0.0, "max": 0.0}
+            hist = {"edges_ms": [], "counts": []}
+        return {"n_deadlines": int(m.size), "n_misses": self.n_misses,
+                "miss_rate": self.miss_rate, "margin_ms": pct,
+                "histogram": hist}
 
     def to_artifact(self) -> dict:
         lat = lambda xs, q: (float(np.percentile(xs, q) * 1e3)  # noqa: E731
@@ -109,6 +218,17 @@ class ServingReport:
             "chunks_per_window": self.chunks_per_window,
             "t_intg_ms": self.t_intg_ms,
             "accuracy": self.accuracy,
+            "paced": self.paced,
+            "admission": {
+                "offered_rate": self.offered_rate,
+                "max_pending": self.max_pending,
+                "n_offered": self.n_offered,
+                "n_admitted": self.n_admitted,
+                "n_shed": self.n_shed,
+                "n_deferred": self.n_deferred,
+                "max_open_streams": self.max_open_streams,
+            },
+            "deadlines": self.deadline_stats(),
             "streams": [asdict(r) for r in self.results],
             "latency_ms": {
                 "readout_p50": lat(self.readout_s, 50),
@@ -138,12 +258,14 @@ class StreamEngine:
     finest arrival granularity the binned contract expresses).
     ``use_kernel=True`` folds each chunk's sub-slots through the fused
     Pallas stream_fold kernel instead of the XLA scan (bit-exact either
-    way — tests/test_stream_fold.py pins it).
+    way — tests/test_stream_fold.py pins it). ``prefetch=False`` turns
+    off the async host-binning worker thread and bins chunks inline on
+    the serving thread (debug aid; the folded numbers are identical).
     """
 
     def __init__(self, dep: Deployment, *, capacity: int = 4,
                  chunks_per_window: int | None = None,
-                 use_kernel: bool = False):
+                 use_kernel: bool = False, prefetch: bool = True):
         cfg = dep.model_cfg.p2m
         self.dep = dep
         self.capacity = capacity
@@ -159,14 +281,21 @@ class StreamEngine:
         self.chunk_us = self.slot_us * self.chunk_slots
         self.group = dep.model_cfg.coarsen_group()
         self.use_kernel = use_kernel
+        self.prefetch = prefetch
         self.fns = make_stream_fns(dep, capacity=capacity,
                                    chunk_slots=self.chunk_slots,
                                    use_kernel=use_kernel)
 
     # ------------------------------------------------------------------
     def open_stream(self, source: EventSource, key: jax.Array,
-                    stream_id: int, window: int) -> _Lane:
-        """Admission-ready lane record for one replayed sample."""
+                    stream_id: int) -> _Lane:
+        """Open one replayed sample into an admission-ready lane record.
+
+        Called at ADMISSION time, not at offer time: an open lane holds a
+        live replay iterator (and, for file-backed sources, its buffers),
+        so opening lazily bounds resident iterators by the lane capacity
+        instead of the offered stream count. Admission time itself is
+        stamped by ``serve`` when the lane is placed."""
         h, w = self.fns.in_hw
         if (source.height, source.width) != (h, w):
             raise ValueError(
@@ -189,7 +318,7 @@ class StreamEngine:
         label, chunks = source.iter_event_chunks(
             key, chunk_us=self.chunk_us, slot_us=self.slot_us)
         return _Lane(stream_id=stream_id, label=label, chunks=chunks,
-                     n_windows=n_windows, admitted_window=window)
+                     n_windows=n_windows)
 
     def _bin_chunk(self, source: EventSource, lane: _Lane) -> np.ndarray:
         """Next replay chunk of ``lane`` → fine sub-slot frames
@@ -205,15 +334,52 @@ class StreamEngine:
         lane.t_cursor_us += self.chunk_us
         return frames
 
+    def _bin_tick(self, source: EventSource,
+                  occupied: list[tuple[int, _Lane]]) -> np.ndarray:
+        """One replay tick's host work: every occupied lane's next chunk,
+        binned into the fold's [capacity, chunk_slots, H, W, 2] batch.
+        Runs on the bin worker thread when prefetching."""
+        h, w = self.fns.in_hw
+        frames = np.zeros((self.capacity, self.chunk_slots, h, w, 2),
+                          np.float32)
+        for lane_i, lane in occupied:
+            frames[lane_i] = self._bin_chunk(source, lane)
+        return frames
+
     # ------------------------------------------------------------------
     def serve(self, source: EventSource, n_streams: int, *, seed: int = 0,
-              log=None) -> ServingReport:
-        """Serve ``n_streams`` replayed samples of ``source`` to
-        completion and return the serving report."""
+              paced: bool = False, offered_rate: float | None = None,
+              max_pending: int | None = None, log=None) -> ServingReport:
+        """Serve ``n_streams`` replayed samples of ``source`` and return
+        the serving report.
+
+        ``offered_rate`` trickles the offers at that many streams/s on
+        the replay clock (window ``w`` ↔ ``w·t_intg`` of stream time;
+        under ``paced=True`` that is wall time too); default offers all
+        streams up front. ``max_pending`` bounds the pending queue:
+        offers arriving when ``pending + free lanes`` is exhausted are
+        SHED and counted (``None`` = unbounded, no shedding). Offers,
+        admission, and shedding are all driven by the deterministic
+        window counter — never by the wall clock — so paced and unpaced
+        runs of the same seed serve identical streams with bit-identical
+        predictions; pacing only decides *when* each window runs and
+        whether its readout missed its deadline."""
+        if offered_rate is not None and offered_rate <= 0:
+            raise ValueError(f"offered_rate must be > 0 streams/s, got "
+                             f"{offered_rate}")
+        if max_pending is not None and max_pending < 0:
+            raise ValueError(f"max_pending must be >= 0, got {max_pending}")
         key = jax.random.PRNGKey(seed)
-        queue = [self.open_stream(source, jax.random.fold_in(key, i), i, 0)
-                 for i in range(n_streams)]
+        t_intg_s = self.dep.t_intg_ms * 1e-3
+        offers_per_window = (None if offered_rate is None
+                             else offered_rate * t_intg_s)
+
+        def offer_window(i: int) -> int:
+            return (0 if offers_per_window is None
+                    else int(math.floor(i / offers_per_window)))
+
         slots: SlotManager[_Lane] = SlotManager(self.capacity)
+        pending: deque[tuple[int, int]] = deque()  # (stream_id, offered_w)
         state = self.fns.init_state()
         results: list[StreamResult] = []
         report = ServingReport(
@@ -221,7 +387,8 @@ class StreamEngine:
             capacity=self.capacity,
             chunks_per_window=self.chunks_per_window,
             t_intg_ms=self.dep.t_intg_ms, wall_s=0.0, total_events=0,
-            total_readouts=0, total_layer1_spikes=0.0)
+            total_readouts=0, total_layer1_spikes=0.0, paced=paced,
+            offered_rate=offered_rate, max_pending=max_pending)
         h, w = self.fns.in_hw
         # warmup: compile fold/readout on a throwaway state so the
         # latency percentiles measure steady-state serving, not jit
@@ -232,59 +399,119 @@ class StreamEngine:
         ws, _ = self.fns.readout(ws, jnp.zeros((self.capacity,), bool),
                                  jnp.zeros((self.capacity,), bool))
         jax.block_until_ready(ws["logits"])
+        binner = _BinWorker() if self.prefetch else None
+        next_offer = 0
         window = 0
         t_start = time.perf_counter()
-        while queue or not slots.is_empty():
-            # admit pending streams into free lanes (window boundary)
-            for lane_i, lane in slots.refill(queue):
-                lane.admitted_window = window
-                state = self.fns.reset_lane(state, lane_i)
-            active = jnp.asarray(slots.active_mask())
-            # one T_INTG window = chunks_per_window replay ticks
-            for _ in range(self.chunks_per_window):
-                frames = np.zeros(
-                    (self.capacity, self.chunk_slots, h, w, 2), np.float32)
-                for lane_i, lane in slots.occupied():
-                    frames[lane_i] = self._bin_chunk(source, lane)
+        try:
+            while (next_offer < n_streams or pending
+                   or not slots.is_empty()):
+                # ---- offers arriving at this window boundary ----------
+                while (next_offer < n_streams
+                       and offer_window(next_offer) <= window):
+                    report.n_offered += 1
+                    if (max_pending is not None
+                            and len(pending) >= max_pending + slots.n_free):
+                        report.n_shed += 1
+                        if log is not None:
+                            log(f"[admission] shed stream {next_offer} at "
+                                f"window {window} (pending full)")
+                    else:
+                        pending.append((next_offer, window))
+                    next_offer += 1
+                # ---- lazy admission into free lanes (window boundary) -
+                while pending and not slots.is_full():
+                    sid, offered_w = pending.popleft()
+                    lane = self.open_stream(
+                        source, jax.random.fold_in(key, sid), sid)
+                    lane.offered_window = offered_w
+                    lane.admitted_window = window
+                    if window > offered_w:
+                        report.n_deferred += 1
+                    lane_i = slots.admit(lane)
+                    assert lane_i is not None
+                    state = self.fns.reset_lane(state, lane_i)
+                    report.n_admitted += 1
+                report.max_open_streams = max(report.max_open_streams,
+                                              slots.n_occupied)
+                occupied = list(slots.occupied())
+                active = jnp.asarray(slots.active_mask())
+                # ---- paced: hold until this window's wall-clock start -
+                if paced:
+                    delay = (t_start + window * t_intg_s
+                             - time.perf_counter())
+                    if delay > 0:
+                        time.sleep(delay)
+                # ---- fold the window's replay chunks ------------------
+                # binning runs one chunk ahead on the worker thread and
+                # the fold dispatches are left in flight — the window's
+                # only host↔device sync is the readout below
+                if binner is not None:
+                    for _ in range(self.chunks_per_window):
+                        binner.submit(
+                            lambda occ=occupied: self._bin_tick(source, occ))
+                for _ in range(self.chunks_per_window):
+                    t0 = time.perf_counter()
+                    frames = (binner.get() if binner is not None
+                              else self._bin_tick(source, occupied))
+                    state = self.fns.fold(state, jnp.asarray(frames), active)
+                    report.fold_s.append(time.perf_counter() - t0)
+                # ---- readout at the T_INTG boundary -------------------
+                coarse_mask = np.zeros((self.capacity,), bool)
+                for lane_i, lane in occupied:
+                    coarse_mask[lane_i] = \
+                        (lane.windows_done + 1) % self.group == 0
                 t0 = time.perf_counter()
-                state = self.fns.fold(state, jnp.asarray(frames), active)
-                jax.block_until_ready(state["x"])
-                report.fold_s.append(time.perf_counter() - t0)
-            # readout at the T_INTG boundary; per-lane coarse boundaries
-            coarse_mask = np.zeros((self.capacity,), bool)
-            for lane_i, lane in slots.occupied():
-                coarse_mask[lane_i] = \
-                    (lane.windows_done + 1) % self.group == 0
-            t0 = time.perf_counter()
-            state, out = self.fns.readout(state, active,
-                                          jnp.asarray(coarse_mask))
-            jax.block_until_ready(state["logits"])
-            report.readout_s.append(time.perf_counter() - t0)
-            n_spikes = np.asarray(out["n_spikes"])
-            window += 1
-            for lane_i, lane in list(slots.occupied()):
-                lane.windows_done += 1
-                report.total_readouts += 1
-                report.total_layer1_spikes += float(n_spikes[lane_i])
-                if lane.windows_done < lane.n_windows:
-                    continue
-                # stream complete: finalize the rate-decoded prediction
-                n_c = int(state["n_coarse"][lane_i])
-                logits = np.asarray(state["logits"][lane_i]) / max(n_c, 1)
-                pred = int(np.argmax(logits))
-                report.total_events += lane.n_events
-                results.append(StreamResult(
-                    stream_id=lane.stream_id, label=lane.label,
-                    prediction=pred, correct=pred == lane.label,
-                    n_events=lane.n_events,
-                    n_readouts=lane.windows_done, n_coarse_frames=n_c,
-                    admitted_window=lane.admitted_window,
-                    finished_window=window,
-                    logits=[float(v) for v in logits]))
-                slots.release(lane_i)
-                if log is not None:
-                    log(f"[stream {lane.stream_id}] label={lane.label} "
-                        f"pred={pred} readouts={lane.windows_done} "
-                        f"events={lane.n_events}")
+                state, out = self.fns.readout(state, active,
+                                              jnp.asarray(coarse_mask))
+                n_spikes = np.asarray(out["n_spikes"])  # window sync point
+                t_done = time.perf_counter()
+                report.readout_s.append(t_done - t0)
+                # paced: every occupied lane's readout k carries deadline
+                # t_admit + k·t_intg; on the shared replay clock that is
+                # the window boundary t_start + (window+1)·t_intg
+                margin_ms = ((t_done - (t_start + (window + 1) * t_intg_s))
+                             * 1e3 if paced else None)
+                window += 1
+                for lane_i, lane in occupied:
+                    lane.windows_done += 1
+                    report.total_readouts += 1
+                    report.total_layer1_spikes += float(n_spikes[lane_i])
+                    if margin_ms is not None:
+                        report.miss_margin_ms.append(margin_ms)
+                        lane.worst_margin_ms = (
+                            margin_ms if lane.worst_margin_ms is None
+                            else max(lane.worst_margin_ms, margin_ms))
+                        if margin_ms > 0:
+                            lane.n_misses += 1
+                            report.n_misses += 1
+                    if lane.windows_done < lane.n_windows:
+                        continue
+                    # stream complete: finalize rate-decoded prediction
+                    n_c = int(state["n_coarse"][lane_i])
+                    logits = (np.asarray(state["logits"][lane_i])
+                              / max(n_c, 1))
+                    pred = int(np.argmax(logits))
+                    report.total_events += lane.n_events
+                    results.append(StreamResult(
+                        stream_id=lane.stream_id, label=lane.label,
+                        prediction=pred, correct=pred == lane.label,
+                        n_events=lane.n_events,
+                        n_readouts=lane.windows_done, n_coarse_frames=n_c,
+                        offered_window=lane.offered_window,
+                        admitted_window=lane.admitted_window,
+                        finished_window=window,
+                        n_misses=lane.n_misses,
+                        miss_margin_max_ms=lane.worst_margin_ms,
+                        logits=[float(v) for v in logits]))
+                    slots.release(lane_i)
+                    if log is not None:
+                        log(f"[stream {lane.stream_id}] label={lane.label} "
+                            f"pred={pred} readouts={lane.windows_done} "
+                            f"events={lane.n_events}"
+                            + (f" misses={lane.n_misses}" if paced else ""))
+        finally:
+            if binner is not None:
+                binner.close()
         report.wall_s = time.perf_counter() - t_start
         return report

@@ -2,6 +2,8 @@
 (repro.serve.slots) — the lane table both the LM decode server
 (launch/serve.py) and the event-stream engine (repro.stream.engine)
 batch on."""
+from collections import deque
+
 import pytest
 
 from repro.serve.slots import SlotManager
@@ -39,13 +41,46 @@ class TestSlotManager:
 
     def test_refill_pops_queue_in_order(self):
         m = SlotManager(2)
-        queue = ["a", "b", "c"]
+        queue = deque(["a", "b", "c"])
         placed = m.refill(queue)
         assert placed == [(0, "a"), (1, "b")]
-        assert queue == ["c"]                       # only admitted popped
+        assert list(queue) == ["c"]                 # only admitted popped
         assert m.refill(queue) == []                # full → no-op
         m.release(1)
-        assert m.refill(queue) == [(1, "c")] and queue == []
+        assert m.refill(queue) == [(1, "c")] and not queue
+
+    def test_refill_rejects_list_queue(self):
+        """The queue contract is deque.popleft — a Python list's head pop
+        is O(n) per admit, O(n²) over the long backlogs the saturation
+        harness builds, so lists are rejected loudly instead of silently
+        going quadratic."""
+        m = SlotManager(2)
+        with pytest.raises(TypeError, match="popleft"):
+            m.refill(["a", "b"])
+
+    def test_refill_deque_matches_old_list_semantics(self):
+        """The deque-based refill places exactly the items in exactly the
+        lanes the old list-head-pop implementation did, across admit /
+        release / refill rounds."""
+        items = [f"r{i}" for i in range(9)]
+
+        def old_refill(m, q):                 # the pre-deque reference
+            placed = []
+            while q and not m.is_full():
+                item = q.pop(0)
+                slot = m.admit(item)
+                placed.append((slot, item))
+            return placed
+
+        m_old, q_old = SlotManager(3), list(items)
+        m_new, q_new = SlotManager(3), deque(items)
+        for round_ in range(5):
+            assert m_new.refill(q_new) == old_refill(m_old, q_old)
+            assert list(q_new) == q_old
+            assert m_new.active_mask() == m_old.active_mask()
+            # release a varying subset each round
+            for lane in [i for i, _ in m_old.occupied()][round_ % 2::2]:
+                assert m_old.release(lane) == m_new.release(lane)
 
     def test_occupied_iterates_lane_order(self):
         m = SlotManager(3)
@@ -57,7 +92,7 @@ class TestSlotManager:
         """More items than capacity complete via release+refill — the
         serving pattern both consumers run."""
         m = SlotManager(2)
-        queue = [f"r{i}" for i in range(7)]
+        queue = deque(f"r{i}" for i in range(7))
         done = []
         steps = 0
         while queue or not m.is_empty():

@@ -431,6 +431,216 @@ def _fresh_dep(src):
     return deploy_mod.fresh_deployment(model, seed=0)
 
 
+def _fast_dep(src, t_intg_ms=100.0, coarse_ms=200.0):
+    """Small deployment with a short T_INTG so paced runs finish fast."""
+    from repro.core.codesign import P2MModelConfig
+    from repro.core.leakage import LeakageConfig
+    from repro.core.p2m_layer import P2MConfig
+    from repro.core.snn import SpikingCNNConfig
+
+    model = P2MModelConfig(
+        p2m=P2MConfig(out_channels=8, n_sub=2, t_intg_ms=t_intg_ms,
+                      leak=LeakageConfig(circuit=CircuitConfig.NULLIFIED)),
+        backbone=SpikingCNNConfig(channels=(8, 16), input_hw=(HW, HW),
+                                  fc_hidden=32, n_classes=src.n_classes,
+                                  first_layer_external=True),
+        coarse_window_ms=coarse_ms)
+    return deploy_mod.fresh_deployment(model, seed=0)
+
+
+# ---------------------------------------------------------------------------
+# admission control, pacing, and the v2 stats contract
+# ---------------------------------------------------------------------------
+
+def _check_stream_stats():
+    import sys
+    from pathlib import Path
+    tools = Path(__file__).resolve().parents[1] / "tools"
+    if str(tools) not in sys.path:
+        sys.path.insert(0, str(tools))
+    import check_stream_stats
+    return check_stream_stats
+
+
+class _CountingSource:
+    """Source wrapper tracking how many replay iterators are OPEN
+    (returned by iter_event_chunks and not yet fully consumed) — the
+    lazy-admission regression: eager opening would put every offered
+    stream live at once."""
+
+    def __init__(self, src):
+        self._src = src
+        self.n_opened = 0
+        self._live = 0
+        self.max_live = 0
+        for attr in ("name", "height", "width", "n_classes", "duration_ms",
+                     "sensor_hw"):
+            setattr(self, attr, getattr(src, attr))
+
+    def n_slots(self, t_intg_ms):
+        return self._src.n_slots(t_intg_ms)
+
+    def iter_event_chunks(self, key, *, chunk_us, slot_us=None):
+        label, chunks = self._src.iter_event_chunks(
+            key, chunk_us=chunk_us, slot_us=slot_us)
+        n_chunks = int(round(self.duration_ms * 1000 / chunk_us))
+        self.n_opened += 1
+        self._live += 1
+        self.max_live = max(self.max_live, self._live)
+
+        def tracked():
+            for i, c in enumerate(chunks):
+                if i + 1 == n_chunks:
+                    self._live -= 1
+                yield c
+
+        return label, tracked()
+
+
+class TestAdmissionControl:
+    def test_lazy_admission_bounds_open_streams(self):
+        """Streams are opened at ADMISSION, not offer: with 6 streams on
+        2 lanes, at most 2 replay iterators are ever live (the eager bug
+        opened all 6 up front)."""
+        src = _CountingSource(sources.resolve_dataset(
+            "synthetic-gesture", hw=HW, duration_ms=400.0))
+        dep = _fast_dep(src, t_intg_ms=100.0, coarse_ms=200.0)
+        engine = StreamEngine(dep, capacity=2)
+        report = engine.serve(src, 6, seed=0)
+        assert len(report.results) == 6
+        assert src.n_opened == 6
+        assert src.max_live <= engine.capacity
+        assert report.max_open_streams <= engine.capacity
+
+    def test_shed_and_deferred_accounting(self):
+        """A bounded pending queue sheds offered load beyond
+        capacity + max_pending and defers the rest; the artifact ledger
+        balances (offered = admitted + shed, admitted all served)."""
+        src = sources.resolve_dataset("synthetic-gesture", hw=HW,
+                                      duration_ms=400.0)
+        dep = _fast_dep(src, t_intg_ms=100.0, coarse_ms=200.0)
+        engine = StreamEngine(dep, capacity=1)
+        report = engine.serve(src, 5, seed=0, max_pending=1)
+        # window 0: 1 admitted + 1 pending, the other 3 offers shed
+        assert report.n_offered == 5
+        assert report.n_admitted == 2
+        assert report.n_shed == 3
+        assert report.n_deferred == 1
+        assert len(report.results) == 2
+        art = report.to_artifact()
+        assert _check_stream_stats().check(art, 2) == []
+        deferred = [s for s in art["streams"]
+                    if s["admitted_window"] > s["offered_window"]]
+        assert len(deferred) == 1
+
+    def test_offered_rate_staggers_offers(self):
+        """offered_rate trickles offers on the replay clock: at 1 stream
+        per T_INTG window, stream i is offered at window i; with an
+        unbounded pending queue every late offer waits instead of being
+        shed."""
+        src = sources.resolve_dataset("synthetic-gesture", hw=HW,
+                                      duration_ms=400.0)
+        dep = _fast_dep(src, t_intg_ms=100.0, coarse_ms=200.0)
+        rate = 10.0  # streams/s → exactly 1 offer per 100 ms window
+        engine = StreamEngine(dep, capacity=2)
+        report = engine.serve(src, 4, seed=0, offered_rate=rate)
+        by_id = sorted(report.results, key=lambda r: r.stream_id)
+        assert [r.offered_window for r in by_id] == [0, 1, 2, 3]
+        assert all(r.admitted_window >= r.offered_window for r in by_id)
+        assert report.n_shed == 0 and len(report.results) == 4
+
+    def test_bad_admission_args_rejected(self):
+        src = sources.resolve_dataset("synthetic-gesture", hw=HW,
+                                      duration_ms=400.0)
+        dep = _fast_dep(src)
+        engine = StreamEngine(dep, capacity=1)
+        with pytest.raises(ValueError, match="offered_rate"):
+            engine.serve(src, 1, offered_rate=0.0)
+        with pytest.raises(ValueError, match="max_pending"):
+            engine.serve(src, 1, max_pending=-1)
+
+
+class TestPacedServing:
+    def test_paced_predictions_bit_exact_vs_unpaced(self):
+        """Pacing only inserts sleeps: a paced serve of the same seed
+        produces bit-identical logits, predictions, event counts, and
+        admission/finish windows as the unpaced replay."""
+        src = sources.resolve_dataset("synthetic-gesture", hw=HW,
+                                      duration_ms=400.0)
+        dep = _fast_dep(src, t_intg_ms=100.0, coarse_ms=200.0)
+        r_fast = StreamEngine(dep, capacity=2).serve(src, 3, seed=0)
+        r_paced = StreamEngine(dep, capacity=2).serve(src, 3, seed=0,
+                                                      paced=True)
+        key = lambda r: r.stream_id  # noqa: E731
+        for a, b in zip(sorted(r_fast.results, key=key),
+                        sorted(r_paced.results, key=key)):
+            assert a.label == b.label
+            assert a.prediction == b.prediction
+            assert a.n_events == b.n_events
+            assert a.admitted_window == b.admitted_window
+            assert a.finished_window == b.finished_window
+            np.testing.assert_array_equal(np.asarray(a.logits),
+                                          np.asarray(b.logits))
+        # unpaced runs carry no deadlines; paced ones one per readout
+        assert not r_fast.miss_margin_ms
+        assert len(r_paced.miss_margin_ms) == r_paced.total_readouts
+        # paced replay holds each window to the wall clock: 3 streams of
+        # 4 windows on 2 lanes run windows 0..7, and window 7 cannot
+        # start before t_start + 7·t_intg = 0.7 s
+        assert r_paced.wall_s >= 7 * 0.1
+
+    def test_paced_artifact_v2_schema_and_zero_misses_unloaded(self):
+        """The paced stats artifact passes the v2 schema gate, and an
+        UNLOADED run (2 lanes, 200 ms windows, trivial compute) misses no
+        deadline."""
+        css = _check_stream_stats()
+        src = sources.resolve_dataset("synthetic-gesture", hw=HW,
+                                      duration_ms=400.0)
+        dep = _fast_dep(src, t_intg_ms=200.0, coarse_ms=400.0)
+        engine = StreamEngine(dep, capacity=2)
+        # warm the per-stream event-generation jit outside the paced run
+        engine.serve(src, 2, seed=0)
+        report = engine.serve(src, 2, seed=0, paced=True)
+        art = report.to_artifact()
+        assert art["schema"] == STATS_SCHEMA == "p2m-stream-serving/v2"
+        assert css.check(art, 2, paced=True, max_miss_rate=0.0) == []
+        ddl = art["deadlines"]
+        assert ddl["n_misses"] == 0 and ddl["miss_rate"] == 0.0
+        assert ddl["n_deadlines"] == report.total_readouts > 0
+        assert ddl["margin_ms"]["max"] <= 0.0
+        assert sum(ddl["histogram"]["counts"]) == ddl["n_deadlines"]
+        assert all(s["n_misses"] == 0 for s in art["streams"])
+        assert all(s["miss_margin_max_ms"] <= 0.0 for s in art["streams"])
+
+    def test_unpaced_artifact_passes_v2_schema(self):
+        css = _check_stream_stats()
+        src = sources.resolve_dataset("synthetic-gesture", hw=HW)
+        dep = _fresh_dep(src)
+        report = StreamEngine(dep, capacity=2).serve(src, 2, seed=1)
+        art = report.to_artifact()
+        assert css.check(art, 2) == []
+        assert art["paced"] is False
+        assert art["deadlines"]["n_deadlines"] == 0
+        # paced gate must reject an unpaced artifact
+        assert css.check(art, 2, paced=True) != []
+
+    def test_prefetch_off_matches_prefetch_on(self):
+        """The async host-binning worker is a pure pipeline change: the
+        inline (prefetch=False) fold produces identical results."""
+        src = sources.resolve_dataset("synthetic-gesture", hw=HW,
+                                      duration_ms=400.0)
+        dep = _fast_dep(src, t_intg_ms=100.0, coarse_ms=200.0)
+        r_on = StreamEngine(dep, capacity=2).serve(src, 3, seed=0)
+        r_off = StreamEngine(dep, capacity=2,
+                             prefetch=False).serve(src, 3, seed=0)
+        key = lambda r: r.stream_id  # noqa: E731
+        for a, b in zip(sorted(r_on.results, key=key),
+                        sorted(r_off.results, key=key)):
+            assert a.prediction == b.prediction
+            np.testing.assert_array_equal(np.asarray(a.logits),
+                                          np.asarray(b.logits))
+
+
 # ---------------------------------------------------------------------------
 # CLI end-to-end (CI also drives this directly as the streaming smoke step)
 # ---------------------------------------------------------------------------

@@ -8,7 +8,7 @@ Two jobs (docs/benchmarks.md):
     well-formed entries (name + numeric-or-null timings + oracle
     ``max_err``). Exit 1 on any violation — CI gates on this.
   * **trajectory diff** (when the file is tracked): compare each entry's
-    ``kernel_us`` against the committed record (``git show
+    ``kernel_us`` AND ``xla_us`` against the committed record (``git show
     HEAD:BENCH_<name>.json``). Slowdowns beyond ``--max-regression``
     (ratio, default 0 = report only) are flagged; with the flag set they
     fail the run. Timings on shared runners are noisy, so the default is

@@ -1,9 +1,11 @@
 #!/usr/bin/env python3
-"""Assert a serving-stats artifact matches the p2m-stream-serving/v1
+"""Assert a serving-stats artifact matches the p2m-stream-serving/v2
 schema (docs/streaming.md). Stdlib only — the CI streaming-smoke step
-runs it against the artifact `launch/stream.py --smoke` just emitted.
+runs it against the artifacts `launch/stream.py --smoke` just emitted
+(one unpaced, one ``--paced``).
 
     python tools/check_stream_stats.py artifacts/stream/stream_serving_dvs128.json [--streams N]
+    python tools/check_stream_stats.py --paced --max-miss-rate 1.0 paced.json
 """
 from __future__ import annotations
 
@@ -11,19 +13,27 @@ import argparse
 import json
 import sys
 
-SCHEMA = "p2m-stream-serving/v1"
+SCHEMA = "p2m-stream-serving/v2"
 TOP_KEYS = {"schema", "deployed", "n_streams", "capacity",
-            "chunks_per_window", "t_intg_ms", "accuracy", "streams",
-            "latency_ms", "throughput"}
+            "chunks_per_window", "t_intg_ms", "accuracy", "paced",
+            "admission", "deadlines", "streams", "latency_ms",
+            "throughput"}
 STREAM_KEYS = {"stream_id", "label", "prediction", "correct", "n_events",
-               "n_readouts", "n_coarse_frames", "logits"}
+               "n_readouts", "n_coarse_frames", "offered_window",
+               "admitted_window", "finished_window", "n_misses", "logits"}
+ADMISSION_KEYS = {"offered_rate", "max_pending", "n_offered", "n_admitted",
+                  "n_shed", "n_deferred", "max_open_streams"}
+DEADLINE_KEYS = {"n_deadlines", "n_misses", "miss_rate", "margin_ms",
+                 "histogram"}
+MARGIN_KEYS = {"p50", "p90", "p99", "max"}
 LATENCY_KEYS = {"readout_p50", "readout_p99", "readout_mean", "fold_p50",
                 "fold_p99"}
 THROUGHPUT_KEYS = {"wall_s", "events_per_s", "readouts_per_s",
                    "streams_per_s"}
 
 
-def check(art: dict, n_streams: int | None = None) -> list[str]:
+def check(art: dict, n_streams: int | None = None, paced: bool = False,
+          max_miss_rate: float | None = None) -> list[str]:
     errs = []
     if art.get("schema") != SCHEMA:
         errs.append(f"schema {art.get('schema')!r} != {SCHEMA!r}")
@@ -45,6 +55,51 @@ def check(art: dict, n_streams: int | None = None) -> list[str]:
         if s["n_coarse_frames"] <= 0:
             errs.append(f"stream[{i}] produced no coarse backbone frames "
                         f"— its prediction is vacuous")
+        if not 0 <= s["n_misses"] <= s["n_readouts"]:
+            errs.append(f"stream[{i}] miss counter out of range: "
+                        f"{s['n_misses']} of {s['n_readouts']} readouts")
+    adm = art.get("admission", {})
+    if ADMISSION_KEYS - set(adm):
+        errs.append(f"admission missing "
+                    f"{sorted(ADMISSION_KEYS - set(adm))}")
+    else:
+        if adm["n_offered"] != adm["n_admitted"] + adm["n_shed"]:
+            errs.append(f"admission ledger does not balance: offered "
+                        f"{adm['n_offered']} != admitted "
+                        f"{adm['n_admitted']} + shed {adm['n_shed']}")
+        if adm["n_admitted"] != len(streams):
+            errs.append(f"n_admitted {adm['n_admitted']} != "
+                        f"{len(streams)} served streams (every admitted "
+                        f"stream must finish)")
+        cap = art.get("capacity", 0)
+        if adm["max_open_streams"] > cap:
+            errs.append(f"max_open_streams {adm['max_open_streams']} "
+                        f"exceeds capacity {cap} — streams were opened "
+                        f"before a lane was free (eager admission)")
+    ddl = art.get("deadlines", {})
+    if DEADLINE_KEYS - set(ddl):
+        errs.append(f"deadlines missing {sorted(DEADLINE_KEYS - set(ddl))}")
+    else:
+        if MARGIN_KEYS - set(ddl.get("margin_ms", {})):
+            errs.append(f"deadlines.margin_ms missing "
+                        f"{sorted(MARGIN_KEYS - set(ddl['margin_ms']))}")
+        if not 0.0 <= ddl["miss_rate"] <= 1.0:
+            errs.append(f"miss_rate out of range: {ddl['miss_rate']}")
+        if ddl["n_misses"] > ddl["n_deadlines"]:
+            errs.append(f"n_misses {ddl['n_misses']} > n_deadlines "
+                        f"{ddl['n_deadlines']}")
+        if art.get("paced"):
+            if ddl["n_deadlines"] <= 0:
+                errs.append("paced run recorded no deadlines")
+        elif ddl["n_deadlines"] != 0:
+            errs.append(f"unpaced run carries {ddl['n_deadlines']} "
+                        f"deadlines — only paced readouts have them")
+        if (max_miss_rate is not None
+                and ddl["miss_rate"] * 100.0 > max_miss_rate):
+            errs.append(f"miss rate {ddl['miss_rate']:.2%} exceeds "
+                        f"--max-miss-rate {max_miss_rate}%")
+    if paced and not art.get("paced"):
+        errs.append("--paced: artifact is not a paced run")
     if LATENCY_KEYS - set(art.get("latency_ms", {})):
         errs.append(f"latency_ms missing "
                     f"{sorted(LATENCY_KEYS - set(art.get('latency_ms', {})))}")
@@ -62,18 +117,28 @@ def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("path")
     ap.add_argument("--streams", type=int, default=None,
-                    help="expected stream count")
+                    help="expected served stream count")
+    ap.add_argument("--paced", action="store_true",
+                    help="require a paced run (deadline accounting "
+                         "populated)")
+    ap.add_argument("--max-miss-rate", type=float, default=None,
+                    help="fail when the deadline-miss rate exceeds this "
+                         "percentage (e.g. 1.0 = 1%%)")
     args = ap.parse_args()
     art = json.loads(open(args.path).read())
-    errs = check(art, args.streams)
+    errs = check(art, args.streams, paced=args.paced,
+                 max_miss_rate=args.max_miss_rate)
     for e in errs:
         print(f"check_stream_stats: {e}", file=sys.stderr)
     if not errs:
-        lat = art["latency_ms"]
+        lat, ddl = art["latency_ms"], art["deadlines"]
+        paced_note = (f", {ddl['n_misses']}/{ddl['n_deadlines']} deadline "
+                      f"misses" if art["paced"] else "")
         print(f"check_stream_stats: OK — {art['n_streams']} streams, "
               f"readout p50={lat['readout_p50']:.2f}ms "
               f"p99={lat['readout_p99']:.2f}ms, "
-              f"{art['throughput']['events_per_s']:.0f} events/s")
+              f"{art['throughput']['events_per_s']:.0f} events/s"
+              f"{paced_note}")
     return 1 if errs else 0
 
 
