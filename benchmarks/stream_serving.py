@@ -14,11 +14,20 @@ The **saturation sweep** serves under ``paced=True`` with a short
 T_INTG deployment and doubles the concurrent-stream count (lane
 capacity, every lane kept full) until the deadline-miss rate crosses 1%
 — i.e. until the p99 readout lands past its T_INTG boundary. The knee
-point (max concurrent streams at <1% miss) and its events/s land in
-``BENCH_stream_serving.json`` so ``tools/check_bench.py`` tracks the
-capacity trajectory across commits (docs/benchmarks.md).
+point (max concurrent streams at <1% miss) and its events/s (total and
+per device) land in ``BENCH_stream_serving.json`` so
+``tools/check_bench.py`` tracks the capacity trajectory — and flags
+throughput drops — across commits (docs/benchmarks.md).
+
+When more than one device is visible (real accelerators, or CPU CI's
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``), the sweep runs
+a second time with the lane axis mesh-sharded (repro.stream.shard) and a
+multi-worker binning pool; those entries carry a ``_d{N}`` suffix so the
+single-device trajectory stays comparable commit-to-commit.
 """
 from __future__ import annotations
+
+import jax
 
 from benchmarks.common import bench_entry, bench_record, emit, save_json
 
@@ -29,6 +38,7 @@ from repro.core.snn import SpikingCNNConfig
 from repro.data import sources as sources_mod
 from repro.stream import deploy as deploy_mod
 from repro.stream.engine import StreamEngine
+from repro.stream.shard import make_lane_executor
 
 
 def _model(hw: int, n_classes: int, t_intg_ms: float) -> P2MModelConfig:
@@ -42,71 +52,98 @@ def _model(hw: int, n_classes: int, t_intg_ms: float) -> P2MModelConfig:
         coarse_window_ms=1000.0)
 
 
-def _saturation_sweep(fast: bool, hw: int) -> tuple[dict, list[dict]]:
+def _saturation_sweep(fast: bool, hw: int, devices: int = 1,
+                      bin_workers: int | None = None
+                      ) -> tuple[dict, list[dict]]:
     """Paced load test: sweep concurrent streams (capacity, lanes kept
     full) until >=1% of readouts miss their T_INTG deadline; report the
     knee. The per-lane host cost (event generation + binning) is a
     near-constant fraction of stream real time, so a T_INTG long enough
     to amortize the fixed fold/readout dispatch (50 ms) saturates at a
     lane count any runner can reach — small on CPU, larger where the
-    host keeps more lanes real-time."""
+    host keeps more lanes real-time.
+
+    ``devices > 1`` runs the same sweep with the lane axis mesh-sharded
+    and the binning pool multi-worker; entries/artifacts gain a
+    ``_d{devices}`` suffix so the unsharded trajectory keeps its names.
+    """
     t_intg_ms = 50.0
+    tag = f"_d{devices}" if devices > 1 else ""
+    executor = make_lane_executor(devices)
     source = sources_mod.resolve_dataset("synthetic-gesture", hw=hw,
                                          duration_ms=8 * t_intg_ms)
     base = _model(hw, source.n_classes, t_intg_ms)
     model = P2MModelConfig(p2m=base.p2m, backbone=base.backbone,
                            coarse_window_ms=4 * t_intg_ms)
     dep = deploy_mod.fresh_deployment(model, seed=0)
+    # same capacity ladder sharded or not (small caps pad up to the mesh
+    # width), so knee{tag} entries stay comparable across device counts
     caps = (1, 2, 4) if fast else (1, 2, 4, 8, 16)
     out = {}
     entries = []
     knee = None          # (streams, artifact) of the last <1%-miss run
     saturated = False
     for cap in caps:
-        engine = StreamEngine(dep, capacity=cap)
-        # unpaced warmup: pay the per-capacity jit compiles (fold /
-        # readout / event generation) before the clock is load-bearing,
-        # so misses measure steady-state serving, not compilation
-        engine.serve(source, cap, seed=0)
+        engine = StreamEngine(dep, capacity=cap, executor=executor,
+                              bin_workers=bin_workers)
+        # unpaced warmup at the measured stream count: pay the
+        # per-capacity jit compiles (fold / readout / event generation)
+        # AND the mid-serve admission path (the second stream cohort)
+        # before the clock is load-bearing, so misses measure
+        # steady-state serving, not compilation or first-touch costs
+        engine.serve(source, 2 * cap, seed=0)
         report = engine.serve(source, 2 * cap, seed=0, paced=True)
         art = report.to_artifact()
-        out[f"paced_c{cap}"] = art
+        out[f"paced_c{cap}{tag}"] = art
         ddl = art["deadlines"]
         thr = art["throughput"]
-        emit(f"stream/saturation/c{cap}", None,
+        adm = art["admission"]
+        emit(f"stream/saturation/c{cap}{tag}", None,
              f"streams={cap};miss_rate={ddl['miss_rate']:.4f};"
              f"p99_margin_ms={ddl['margin_ms']['p99']:.3f};"
-             f"events_per_s={thr['events_per_s']:.0f}")
+             f"events_per_s={thr['events_per_s']:.0f};"
+             f"per_device={thr['events_per_s_per_device']:.0f}")
         entries.append(bench_entry(
-            f"paced_c{cap}",
+            f"paced_c{cap}{tag}",
             xla_us=art["latency_ms"]["readout_p50"] * 1e3,
             meta={"concurrent_streams": cap,
                   "miss_rate": ddl["miss_rate"],
                   "p99_margin_ms": ddl["margin_ms"]["p99"],
-                  "events_per_s": thr["events_per_s"]}))
+                  "events_per_s": thr["events_per_s"],
+                  "events_per_s_per_device":
+                      thr["events_per_s_per_device"],
+                  "devices": devices,
+                  "bin_workers": art["sharding"]["bin_workers"],
+                  "n_shed": adm["n_shed"],
+                  "n_deferred": adm["n_deferred"]}))
         if ddl["miss_rate"] < 0.01:
             knee = (cap, art)
         else:
             saturated = True
             break
     if knee is None:
-        knee_streams, knee_events, knee_p99, knee_p50_us = 0, 0.0, 0.0, None
+        knee_streams, knee_p99, knee_p50_us = 0, 0.0, None
+        knee_events = knee_events_dev = 0.0
     else:
         knee_streams = knee[0]
         knee_events = knee[1]["throughput"]["events_per_s"]
+        knee_events_dev = knee[1]["throughput"]["events_per_s_per_device"]
         knee_p99 = knee[1]["deadlines"]["margin_ms"]["p99"]
         knee_p50_us = knee[1]["latency_ms"]["readout_p50"] * 1e3
     if not saturated:
-        emit("stream/saturation/not_saturated", None,
+        emit(f"stream/saturation/not_saturated{tag}", None,
              f"no >=1%-miss capacity within sweep (max {caps[-1]}); knee "
              f"is a lower bound")
-    emit("stream/saturation/knee", None,
+    emit(f"stream/saturation/knee{tag}", None,
          f"max_streams_lt1pct_miss={knee_streams};"
-         f"events_per_s={knee_events:.0f};t_intg_ms={t_intg_ms}")
+         f"events_per_s={knee_events:.0f};"
+         f"per_device={knee_events_dev:.0f};t_intg_ms={t_intg_ms}")
     entries.append(bench_entry(
-        "saturation_knee", xla_us=knee_p50_us,
+        f"saturation_knee{tag}", xla_us=knee_p50_us,
         meta={"max_streams_lt1pct_miss": knee_streams,
               "events_per_s": knee_events,
+              "events_per_s_per_device": knee_events_dev,
+              "devices": devices,
               "p99_margin_ms": knee_p99,
               "t_intg_ms": t_intg_ms,
               "saturated": saturated}))
@@ -171,6 +208,16 @@ def run(fast: bool = False, hw: int = 16,
     sat_out, sat_entries = _saturation_sweep(fast, hw)
     out.update(sat_out)
     entries.extend(sat_entries)
+
+    # mesh-sharded variant of the same sweep, when a mesh is available
+    # (accelerators, or forced host devices on CPU CI) — per-device knee
+    # next to the single-device one
+    n_dev = min(8, jax.device_count())
+    if n_dev > 1:
+        sat_out_d, sat_entries_d = _saturation_sweep(
+            fast, hw, devices=n_dev, bin_workers=max(2, n_dev))
+        out.update(sat_out_d)
+        entries.extend(sat_entries_d)
 
     save_json("stream_serving", out)
     bench_record("stream_serving", entries,

@@ -1,18 +1,23 @@
-"""Mesh-sharded execution of the sweep engine's stacked variant axis.
+"""Mesh-sharded execution of stacked embarrassingly-parallel axes.
 
-The circuit-variant axis of the batched finetune/eval steps is
-embarrassingly parallel: every variant runs the same program on the same
-batch with different numeric coefficients. :class:`SweepExecutor` maps
-that stacked ``[n_cfg]`` axis onto a 1-D ``"cfg"`` device mesh with
-``shard_map`` — each device finetunes/evaluates ``n_cfg / n_devices``
-variants, events and the shared layer-1 params are replicated, and all
-stacked outputs come back sharded on the same axis.
+Two batched axes in this repo are embarrassingly parallel — every element
+runs the same program with different numerics — and both shard the same
+way, so one executor abstraction serves both:
 
-``n_cfg`` is padded up to a multiple of the device count by repeating the
-last variant (the padded lanes compute real-but-discarded work); the
-engine reads back only the first ``n_cfg`` lanes when it builds
-``GridResult`` records, so sharded and single-device runs produce
-record-for-record identical artifacts.
+  * the sweep engine's stacked ``[n_cfg]`` circuit-variant axis
+    (:class:`SweepExecutor`, 1-D ``"cfg"`` mesh) — each device
+    finetunes/evaluates ``n_cfg / n_devices`` variants, events and the
+    shared layer-1 params are replicated;
+  * the serving engine's ``[capacity]`` lane axis
+    (``repro.stream.shard.LaneExecutor``, 1-D ``"lane"`` mesh) — each
+    device folds/reads out ``capacity / n_devices`` serving lanes.
+
+:class:`MeshExecutor` holds the shared machinery: the 1-D mesh over the
+first ``devices`` local devices, ``shard_map`` wrapping with pytree-prefix
+in/out specs, and leading-axis padding up to a device multiple (padded
+lanes compute real-but-discarded work; callers read back only the first
+``n`` lanes, so sharded and single-device runs stay bit-for-bit
+identical).
 
 On CPU CI the mesh comes from forced host devices::
 
@@ -44,13 +49,14 @@ P_REP = PartitionSpec()
 
 
 @dataclass(frozen=True)
-class SweepExecutor:
-    """Execution policy for the stacked variant axis.
+class MeshExecutor:
+    """Execution policy for one stacked embarrassingly-parallel axis.
 
     ``devices=1`` → single-device (no shard_map, no padding). ``devices=n``
-    → 1-D ``"cfg"`` mesh over the first n local devices.
+    → 1-D ``axis`` mesh over the first n local devices.
     """
     devices: int = 1
+    axis: str = CFG_AXIS
 
     def __post_init__(self):
         if self.devices < 1:
@@ -59,6 +65,16 @@ class SweepExecutor:
     @property
     def is_sharded(self) -> bool:
         return self.devices > 1
+
+    @property
+    def p_axis(self) -> PartitionSpec:
+        """Spec for leaves stacked on this executor's axis."""
+        return PartitionSpec(self.axis)
+
+    @property
+    def p_rep(self) -> PartitionSpec:
+        """Spec for replicated leaves."""
+        return P_REP
 
     @cached_property
     def mesh(self) -> Mesh:
@@ -69,7 +85,7 @@ class SweepExecutor:
                 f"{len(avail)} are visible; on CPU force host devices with "
                 f"XLA_FLAGS=--xla_force_host_platform_device_count="
                 f"{self.devices}")
-        return Mesh(np.asarray(avail[: self.devices]), (CFG_AXIS,))
+        return Mesh(np.asarray(avail[: self.devices]), (self.axis,))
 
     def padded_size(self, n_cfg: int) -> int:
         """Smallest multiple of the device count >= n_cfg."""
@@ -86,17 +102,23 @@ class SweepExecutor:
                 [x, jnp.repeat(x[-1:], pad, axis=0)], axis=0), tree)
 
     def shard(self, fn, in_specs: Sequence, out_specs):
-        """shard_map ``fn`` over the cfg mesh (identity when devices=1).
+        """shard_map ``fn`` over the 1-D mesh (identity when devices=1).
 
         ``in_specs``/``out_specs`` are pytree prefixes of
-        :data:`P_CFG` / :data:`P_REP`. The body is already differentiated
-        (the engine's steps take grads inside), so no shard_map transpose
-        is ever needed and replication checking is disabled.
+        :attr:`p_axis` / :attr:`p_rep`. The body is already differentiated
+        (the sweep engine's steps take grads inside), so no shard_map
+        transpose is ever needed and replication checking is disabled.
         """
         if not self.is_sharded:
             return fn
         return shard_map(fn, mesh=self.mesh, in_specs=tuple(in_specs),
                          out_specs=out_specs, check_rep=False)
+
+
+@dataclass(frozen=True)
+class SweepExecutor(MeshExecutor):
+    """The sweep engine's executor: the stacked circuit-variant axis on
+    the 1-D ``"cfg"`` mesh (the :class:`MeshExecutor` defaults)."""
 
 
 def make_executor(devices: int | None) -> SweepExecutor:

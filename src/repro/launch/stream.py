@@ -16,15 +16,22 @@ Three ways in:
     dataset is generated first (repro.data.fixtures), then the tiny
     train → deploy → serve pipeline runs end-to-end on CPU.
 
-Emits one serving-stats JSON artifact (schema ``p2m-stream-serving/v2``):
-per-stream predictions, p50/p99 readout latency, events/s, admission
-(shed/deferred) counters and — under ``--paced`` — deadline-miss
-accounting (docs/streaming.md).
+Emits one serving-stats JSON artifact (schema ``p2m-stream-serving/v3``):
+per-stream predictions, p50/p99 readout latency, events/s (total and
+per-device), the mesh ``sharding`` block, admission (shed/deferred)
+counters and — under ``--paced`` — deadline-miss accounting
+(docs/streaming.md).
+
+``--devices N`` shards the lane axis over a 1-D device mesh
+(repro.stream.shard) — bit-identical to ``--devices 1``; ``--bin-workers``
+sizes the host binning pool (defaults to the device count). On CPU boxes,
+force host devices first: ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
 
   PYTHONPATH=src python -m repro.launch.stream --smoke --streams 8
   PYTHONPATH=src python -m repro.launch.stream --dataset dvs128 \\
       --data-root /data/DvsGesture --checkpoint artifacts/stream/ckpt_frozen \\
-      --streams 64 --capacity 16 --paced --offered-rate 32 --max-pending 128
+      --streams 64 --capacity 16 --devices 4 --bin-workers 4 \\
+      --paced --offered-rate 32 --max-pending 128
 """
 from __future__ import annotations
 
@@ -74,6 +81,14 @@ def main() -> int:
                     help="number of event streams to serve")
     ap.add_argument("--capacity", type=int, default=4,
                     help="concurrent serving lanes (the jitted batch)")
+    ap.add_argument("--devices", type=int, default=None,
+                    help="shard the lane axis over this many devices on a "
+                         "1-D mesh (capacity is padded up to a multiple; "
+                         "bit-identical to --devices 1). Default: "
+                         "unsharded")
+    ap.add_argument("--bin-workers", type=int, default=None,
+                    help="host binning worker threads, each owning a "
+                         "contiguous lane slice (default: one per device)")
     ap.add_argument("--paced", action="store_true",
                     help="real-time replay: hold each T_INTG window to "
                          "its wall-clock boundary and record deadline "
@@ -114,6 +129,7 @@ def main() -> int:
     from repro.data import sources as sources_mod
     from repro.stream import deploy as deploy_mod
     from repro.stream.engine import StreamEngine
+    from repro.stream.shard import make_lane_executor
 
     dataset = args.dataset or ("dvs128" if args.smoke
                                else "synthetic-gesture")
@@ -153,7 +169,9 @@ def main() -> int:
                                              split="all")
         engine = StreamEngine(dep, capacity=args.capacity,
                               chunks_per_window=args.chunks_per_window,
-                              use_kernel=args.use_kernel)
+                              use_kernel=args.use_kernel,
+                              executor=make_lane_executor(args.devices),
+                              bin_workers=args.bin_workers)
         report = engine.serve(source, args.streams, seed=args.seed,
                               paced=args.paced,
                               offered_rate=args.offered_rate,
@@ -184,6 +202,11 @@ def main() -> int:
     print(f"throughput     {thr['events_per_s']:.0f} events/s   "
           f"{thr['readouts_per_s']:.1f} readouts/s   "
           f"{thr['streams_per_s']:.2f} streams/s")
+    sh = art["sharding"]
+    print(f"sharding       {sh['devices']} device(s) x "
+          f"{sh['lanes_per_shard']} lanes  (padded capacity "
+          f"{sh['padded_capacity']}, {sh['bin_workers']} bin worker(s))   "
+          f"{thr['events_per_s_per_device']:.0f} events/s/device")
     print(f"admission      offered {adm['n_offered']}  admitted "
           f"{adm['n_admitted']}  shed {adm['n_shed']}  deferred "
           f"{adm['n_deferred']}  max open {adm['max_open_streams']}")

@@ -16,6 +16,12 @@ both servers follow:
 The manager only does the bookkeeping (which lane holds what); resetting
 per-lane model state (KV rows, charge accumulators, LIF membranes) is the
 consumer's job, keyed by the lane index this class hands out.
+
+When the jitted step's batch axis is sharded over a device mesh
+(repro.stream.shard), :class:`ShardedSlots` stacks one ``SlotManager``
+per mesh shard behind the same surface: a single admission front fills
+the lowest free lane across ALL shards, and the global lane index maps
+contiguously onto the sharded batch axis.
 """
 from __future__ import annotations
 
@@ -107,3 +113,114 @@ class SlotManager(Generic[T]):
             assert slot is not None
             placed.append((slot, item))
         return placed
+
+
+class ShardedSlots(Generic[T]):
+    """Per-shard :class:`SlotManager` table presenting one global lane
+    space ``[0, capacity)`` embedded in a padded axis
+    ``[0, padded_capacity)``.
+
+    Built for a jitted batch axis sharded over ``devices`` mesh shards
+    (repro.stream.shard): shard ``s`` owns the contiguous global lanes
+    ``[s·L, (s+1)·L)`` — the block ``shard_map`` places on device ``s``,
+    with ``L = padded_capacity / devices`` — of which only the first
+    ``capacity`` global lanes are REAL (admittable). The
+    ``padded_capacity − capacity`` tail lanes exist solely to make the
+    lane axis divide the mesh; they are never admitted, so they run the
+    batched step masked inactive. With ``devices=1`` this degenerates to
+    exactly one plain ``SlotManager``.
+
+    Admission stays a SINGLE front: ``admit`` fills the lowest free
+    global lane across all shards, so a lane freed on any shard can take
+    the head of the one pending queue, and sharded placement matches a
+    devices=1 ``SlotManager`` lane-for-lane.
+    """
+
+    def __init__(self, capacity: int, devices: int = 1):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        if devices < 1:
+            raise ValueError(f"devices must be >= 1, got {devices}")
+        self._capacity = capacity
+        self.devices = devices
+        self.padded_capacity = -(-capacity // devices) * devices
+        self.lanes_per_shard = self.padded_capacity // devices
+        # shard s's manager covers its REAL lanes only (None when the
+        # shard is pure padding, i.e. capacity <= s·L)
+        self._shards: list[SlotManager[T] | None] = []
+        for s in range(devices):
+            real = min(self.lanes_per_shard,
+                       max(0, capacity - s * self.lanes_per_shard))
+            self._shards.append(SlotManager(real) if real else None)
+
+    # -- capacity bookkeeping (mirrors the SlotManager surface) ---------
+    @property
+    def capacity(self) -> int:
+        return self._capacity
+
+    @property
+    def n_occupied(self) -> int:
+        return sum(m.n_occupied for m in self._shards if m is not None)
+
+    @property
+    def n_free(self) -> int:
+        return self._capacity - self.n_occupied
+
+    def is_empty(self) -> bool:
+        return self.n_occupied == 0
+
+    def is_full(self) -> bool:
+        return self.n_free == 0
+
+    # -- global-lane addressing -----------------------------------------
+    def shard_of(self, lane: int) -> int:
+        """The mesh shard (device index) global lane ``lane`` lives on."""
+        if not 0 <= lane < self.padded_capacity:
+            raise ValueError(f"lane {lane} outside padded capacity "
+                             f"{self.padded_capacity}")
+        return lane // self.lanes_per_shard
+
+    def admit(self, item: T) -> int | None:
+        """Place ``item`` into the lowest free REAL global lane (shards
+        scanned in order, so placement matches a single devices=1
+        ``SlotManager`` exactly). Returns the global lane index, or None
+        when every real lane is occupied."""
+        for s, mgr in enumerate(self._shards):
+            if mgr is None or mgr.is_full():
+                continue
+            local = mgr.admit(item)
+            assert local is not None
+            return s * self.lanes_per_shard + local
+        return None
+
+    def release(self, lane: int) -> T:
+        """Free global lane ``lane`` and return the item it held."""
+        s = self.shard_of(lane)
+        mgr = self._shards[s]
+        local = lane - s * self.lanes_per_shard
+        if mgr is None or local >= mgr.capacity:
+            raise ValueError(f"lane {lane} is a padding lane")
+        return mgr.release(local)
+
+    def occupied(self) -> Iterator[tuple[int, T]]:
+        """(global lane, item) pairs in global lane order — the iteration
+        the batched fold/readout masks follow."""
+        for s, mgr in enumerate(self._shards):
+            if mgr is None:
+                continue
+            base = s * self.lanes_per_shard
+            for local, item in mgr.occupied():
+                yield base + local, item
+
+    def active_mask(self) -> list[bool]:
+        """Per-lane occupancy over the FULL padded axis (padding lanes
+        always False), aligned with the sharded batch axis."""
+        mask = [False] * self.padded_capacity
+        for lane, _ in self.occupied():
+            mask[lane] = True
+        return mask
+
+    def per_shard_occupied(self) -> list[int]:
+        """Occupied-lane count per shard (the artifact's load-balance
+        view of the mesh)."""
+        return [0 if m is None else m.n_occupied for m in self._shards]

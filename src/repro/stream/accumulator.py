@@ -28,6 +28,15 @@ fixed-shape jitted step serves a continuously-batched lane table whose
 streams start, progress, and finish independently. Numerical parity with
 the offline batched forward (repro.stream.deploy.offline_forward) is
 pinned by tests/test_streaming.py.
+
+The lane axis is also *mesh-shardable* (repro.stream.shard): pass a
+sharded :class:`~repro.stream.shard.LaneExecutor` and the fold/readout
+bodies run under ``shard_map`` over a 1-D ``"lane"`` mesh — one
+contiguous lane block per device, the deployed weights replicated. Every
+lane's numerics are independent of its neighbours (no cross-lane
+reduction anywhere in the serving forward), which is what makes sharded
+and single-device serving bit-for-bit identical
+(tests/test_stream_shard.py).
 """
 from __future__ import annotations
 
@@ -44,6 +53,7 @@ from repro.core import analog, leakage, p2m_layer, snn
 from repro.core.p2m_layer import _conv
 from repro.kernels.stream_fold import ops as stream_fold_ops
 from repro.stream.deploy import Deployment
+from repro.stream.shard import P_LANE, P_REP, LaneExecutor  # noqa: F401
 
 
 def _mask(m: jax.Array, new: jax.Array, old: jax.Array) -> jax.Array:
@@ -65,7 +75,8 @@ class StreamFns:
 
 
 def make_stream_fns(dep: Deployment, *, capacity: int,
-                    chunk_slots: int, use_kernel: bool = False) -> StreamFns:
+                    chunk_slots: int, use_kernel: bool = False,
+                    executor: LaneExecutor | None = None) -> StreamFns:
     """Build the jitted lane-batched fold/readout steps for ``dep``.
 
     ``chunk_slots`` is the number of fine sub-slots one replay chunk
@@ -75,7 +86,23 @@ def make_stream_fns(dep: Deployment, *, capacity: int,
     fused Pallas stream_fold kernel (one launch per chunk, charge tile
     VMEM-resident — see docs/kernels.md); the XLA ``lax.scan`` fold
     below is its bit-exactness oracle and stays the default.
+
+    A sharded ``executor`` (repro.stream.shard.LaneExecutor) partitions
+    the lane axis over the 1-D ``"lane"`` mesh: ``capacity`` must then be
+    a multiple of ``executor.devices`` (the engine pads it —
+    ``LaneExecutor.padded_size``), fold/readout bodies run under
+    ``shard_map`` with the state/frames/masks split into contiguous
+    per-device lane blocks and the deployed weights replicated, and
+    ``init_state``/``reset_lane`` stay global (admission is host-side and
+    touches one lane at a time). ``executor=None`` (or ``devices=1``) is
+    the exact unsharded path.
     """
+    ex = executor or LaneExecutor()
+    if capacity % ex.devices:
+        raise ValueError(
+            f"capacity={capacity} must be a multiple of "
+            f"executor.devices={ex.devices} — pad the lane axis first "
+            f"(LaneExecutor.padded_size)")
     cfg = dep.model_cfg
     p2m_cfg = cfg.p2m
     bb_cfg = cfg.backbone
@@ -122,14 +149,16 @@ def make_stream_fns(dep: Deployment, *, capacity: int,
         return jax.tree.map(
             lambda v: v.at[lane].set(jnp.zeros_like(v[lane])), state)
 
-    @jax.jit
-    def fold(state: dict, frames: jax.Array, active: jax.Array) -> dict:
+    def fold_body(state: dict, frames: jax.Array, active: jax.Array
+                  ) -> dict:
         """Advance the charge ODE through one replay chunk.
 
         ``frames`` [capacity, chunk_slots, H, W, 2] — the chunk's events
         binned on the fine sub-slot grid; ``active`` [capacity] bool.
         Each sub-slot decays the standing charge by ``a`` and deposits
         its (dv_unit-scaled) conv — empty slots decay without deposit.
+        Under a sharded executor this body sees one device's contiguous
+        lane block (capacity / devices lanes).
         """
         if use_kernel:
             x = stream_fold_ops.fold_chunk(
@@ -144,9 +173,8 @@ def make_stream_fns(dep: Deployment, *, capacity: int,
         x, _ = lax.scan(sub_step, state["x"], jnp.moveaxis(frames, 1, 0))
         return {**state, "x": _mask(active, x, state["x"])}
 
-    @jax.jit
-    def readout(state: dict, active: jax.Array, coarse_mask: jax.Array
-                ) -> tuple[dict, dict]:
+    def readout_body(state: dict, active: jax.Array,
+                     coarse_mask: jax.Array) -> tuple[dict, dict]:
         """T_INTG-boundary readout for every lane at once.
 
         ``active`` gates which lanes read out (and precharge);
@@ -177,6 +205,16 @@ def make_stream_fns(dep: Deployment, *, capacity: int,
                "n_spikes": jnp.sum(pooled, axis=(1, 2, 3))
                * active.astype(pooled.dtype)}
         return new_state, out
+
+    # shard the lane axis over the mesh (identity when devices=1): every
+    # input/output leaf is lane-leading, the closed-over deployed weights
+    # replicate. jit wraps the shard_map, as in the sweep engine.
+    fold = jax.jit(ex.shard(fold_body,
+                            in_specs=(P_LANE, P_LANE, P_LANE),
+                            out_specs=P_LANE))
+    readout = jax.jit(ex.shard(readout_body,
+                               in_specs=(P_LANE, P_LANE, P_LANE),
+                               out_specs=(P_LANE, P_LANE)))
 
     return StreamFns(init_state=init_state, reset_lane=reset_lane,
                      fold=fold, readout=readout, in_hw=(H, W),

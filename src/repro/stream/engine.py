@@ -45,7 +45,22 @@ late readout reads leaked charge; it is a correctness event, not just a
 latency sample. Predictions are bit-identical to unpaced replay on the
 same seed (pacing only inserts sleeps); per-lane and fleet-wide miss
 counters plus the miss-margin histogram land in the
-``p2m-stream-serving/v2`` stats artifact.
+``p2m-stream-serving/v3`` stats artifact.
+
+**Sharded mode** (``StreamEngine(executor=LaneExecutor(devices=n))``,
+CLI ``--devices``) maps the lane axis onto a 1-D ``"lane"`` device mesh
+(repro.stream.shard): the capacity pads up to a device multiple, each
+device folds/reads out its contiguous lane block under ``shard_map``,
+and per-shard :class:`~repro.serve.slots.ShardedSlots` bookkeeping sits
+behind the SAME single admission front — one bounded pending deque feeds
+a lane freed on any shard. Host binning scales with it: ``bin_workers``
+:class:`_BinWorker` threads each own a disjoint slice of the lane axis
+(aligned with the mesh shards when ``bin_workers == devices``) and bin
+their lanes one chunk ahead of the device — the multi-worker attack on
+the host-bound saturation knee. Sharded serving, any worker count, and
+``prefetch=False`` (the bit-identical inline oracle) all produce
+bit-for-bit identical predictions and ledgers to the ``devices=1``
+single-worker path.
 """
 from __future__ import annotations
 
@@ -64,11 +79,12 @@ import numpy as np
 from repro.data.binning import bin_chunks, slot_us_for
 from repro.data.formats import EventChunk
 from repro.data.sources import EventSource
-from repro.serve.slots import SlotManager
+from repro.serve.slots import ShardedSlots
 from repro.stream.accumulator import make_stream_fns
 from repro.stream.deploy import Deployment
+from repro.stream.shard import LaneExecutor
 
-STATS_SCHEMA = "p2m-stream-serving/v2"
+STATS_SCHEMA = "p2m-stream-serving/v3"
 
 
 @dataclass
@@ -111,17 +127,18 @@ class _BinWorker:
     """Single host-side worker thread binning replay chunks ahead of the
     device fold (async host binning: while the device folds chunk ``c``,
     the worker bins chunk ``c+1``). Jobs are executed strictly in
-    submission order — replay iterators are only ever advanced on this
-    thread, so chunk order per lane is preserved. Exceptions propagate to
-    the consumer at ``get()``."""
+    submission order — a lane's replay iterator is only ever advanced on
+    the ONE worker that owns that lane, so chunk order per lane is
+    preserved. Exceptions propagate to the consumer at ``get()``."""
 
     _STOP = object()
 
-    def __init__(self):
+    def __init__(self, index: int = 0):
         self._tasks: queue_mod.Queue = queue_mod.Queue()
         self._results: queue_mod.Queue = queue_mod.Queue()
         self._thread = threading.Thread(
-            target=self._run, name="stream-bin-worker", daemon=True)
+            target=self._run, name=f"stream-bin-worker-{index}",
+            daemon=True)
         self._thread.start()
 
     def _run(self):
@@ -144,8 +161,52 @@ class _BinWorker:
         return frames
 
     def close(self) -> None:
+        """Drain-and-join: cancel every not-yet-started job, stop the
+        thread, and drop queued results. On the serve loop's exception
+        path this releases the job closures' references to live replay
+        iterators instead of leaking them to a parked daemon thread."""
+        try:
+            while True:
+                self._tasks.get_nowait()
+        except queue_mod.Empty:
+            pass
         self._tasks.put(self._STOP)
         self._thread.join(timeout=10)
+        try:
+            while True:
+                self._results.get_nowait()
+        except queue_mod.Empty:
+            pass
+
+    @property
+    def alive(self) -> bool:
+        return self._thread.is_alive()
+
+
+class _BinPool:
+    """Fixed pool of :class:`_BinWorker` threads, one per lane partition
+    (the engine assigns each worker a contiguous slice of the lane axis —
+    mesh-shard-aligned when ``bin_workers == devices``). The consumer
+    submits one job per worker per replay tick and gathers them in worker
+    order, so assembly — and therefore the folded frames — is
+    deterministic for any worker count."""
+
+    def __init__(self, n: int):
+        self.workers = [_BinWorker(i) for i in range(n)]
+
+    def submit(self, worker: int, job) -> None:
+        self.workers[worker].submit(job)
+
+    def get(self, worker: int):
+        return self.workers[worker].get()
+
+    def close(self) -> None:
+        for w in self.workers:
+            w.close()
+
+    @property
+    def any_alive(self) -> bool:
+        return any(w.alive for w in self.workers)
 
 
 @dataclass
@@ -164,6 +225,11 @@ class ServingReport:
     paced: bool = False
     offered_rate: float | None = None
     max_pending: int | None = None
+    devices: int = 1              # lane-mesh shards (1 = unsharded)
+    bin_workers: int = 1          # host binning worker threads
+    padded_capacity: int = 0      # lane axis after mesh padding
+    lanes_per_shard: int = 0
+    per_shard_admitted: list[int] = field(default_factory=list)
     n_offered: int = 0
     n_admitted: int = 0
     n_shed: int = 0               # rejected: pending queue was full
@@ -219,6 +285,13 @@ class ServingReport:
             "t_intg_ms": self.t_intg_ms,
             "accuracy": self.accuracy,
             "paced": self.paced,
+            "sharding": {
+                "devices": self.devices,
+                "bin_workers": self.bin_workers,
+                "padded_capacity": self.padded_capacity,
+                "lanes_per_shard": self.lanes_per_shard,
+                "per_shard_admitted": list(self.per_shard_admitted),
+            },
             "admission": {
                 "offered_rate": self.offered_rate,
                 "max_pending": self.max_pending,
@@ -241,6 +314,10 @@ class ServingReport:
             "throughput": {
                 "wall_s": self.wall_s,
                 "events_per_s": self.total_events / wall,
+                # the fleet-scale metric: what ONE device of the lane
+                # mesh sustains (events_per_s / devices)
+                "events_per_s_per_device": (self.total_events / wall
+                                            / max(self.devices, 1)),
                 "readouts_per_s": self.total_readouts / wall,
                 "streams_per_s": len(self.results) / wall,
                 "layer1_spikes_per_s": self.total_layer1_spikes / wall,
@@ -259,16 +336,35 @@ class StreamEngine:
     ``use_kernel=True`` folds each chunk's sub-slots through the fused
     Pallas stream_fold kernel instead of the XLA scan (bit-exact either
     way — tests/test_stream_fold.py pins it). ``prefetch=False`` turns
-    off the async host-binning worker thread and bins chunks inline on
-    the serving thread (debug aid; the folded numbers are identical).
+    off the async host-binning workers and bins chunks inline on the
+    serving thread (debug aid; the folded numbers are identical).
+
+    ``executor`` (repro.stream.shard.LaneExecutor) shards the lane axis
+    over a 1-D ``"lane"`` device mesh: the capacity pads up to a multiple
+    of ``executor.devices`` (padding lanes are never admitted) and the
+    jitted steps run under ``shard_map`` — bit-for-bit identical to the
+    default single-device executor. ``bin_workers`` sets the host binning
+    pool width (default: one worker per mesh shard, so ``devices=1``
+    keeps the single-worker pipeline); each worker owns a fixed disjoint
+    slice of the lane axis, which keeps per-lane chunk order — and the
+    binned frames — deterministic for any worker count.
     """
 
     def __init__(self, dep: Deployment, *, capacity: int = 4,
                  chunks_per_window: int | None = None,
-                 use_kernel: bool = False, prefetch: bool = True):
+                 use_kernel: bool = False, prefetch: bool = True,
+                 executor: LaneExecutor | None = None,
+                 bin_workers: int | None = None):
         cfg = dep.model_cfg.p2m
         self.dep = dep
         self.capacity = capacity
+        self.executor = executor or LaneExecutor()
+        self.padded_capacity = self.executor.padded_size(capacity)
+        self.lanes_per_shard = self.padded_capacity // self.executor.devices
+        if bin_workers is not None and bin_workers < 1:
+            raise ValueError(f"bin_workers must be >= 1, got {bin_workers}")
+        self.bin_workers = (self.executor.devices if bin_workers is None
+                            else bin_workers)
         self.n_sub = cfg.n_sub
         self.chunks_per_window = (self.n_sub if chunks_per_window is None
                                   else chunks_per_window)
@@ -282,9 +378,10 @@ class StreamEngine:
         self.group = dep.model_cfg.coarsen_group()
         self.use_kernel = use_kernel
         self.prefetch = prefetch
-        self.fns = make_stream_fns(dep, capacity=capacity,
+        self.fns = make_stream_fns(dep, capacity=self.padded_capacity,
                                    chunk_slots=self.chunk_slots,
-                                   use_kernel=use_kernel)
+                                   use_kernel=use_kernel,
+                                   executor=self.executor)
 
     # ------------------------------------------------------------------
     def open_stream(self, source: EventSource, key: jax.Array,
@@ -334,16 +431,43 @@ class StreamEngine:
         lane.t_cursor_us += self.chunk_us
         return frames
 
-    def _bin_tick(self, source: EventSource,
-                  occupied: list[tuple[int, _Lane]]) -> np.ndarray:
-        """One replay tick's host work: every occupied lane's next chunk,
-        binned into the fold's [capacity, chunk_slots, H, W, 2] batch.
-        Runs on the bin worker thread when prefetching."""
-        h, w = self.fns.in_hw
-        frames = np.zeros((self.capacity, self.chunk_slots, h, w, 2),
-                          np.float32)
+    def _worker_of(self, lane: int) -> int:
+        """Owning bin worker of a global lane: contiguous balanced slices
+        of the padded lane axis, exactly shard-aligned when
+        ``bin_workers == devices`` (worker w bins mesh shard w). A lane
+        is owned by ONE worker for its whole lifetime, so its replay
+        iterator only ever advances on that worker's thread."""
+        return lane * self.bin_workers // self.padded_capacity
+
+    def _partition(self, occupied: list[tuple[int, _Lane]]
+                   ) -> list[list[tuple[int, _Lane]]]:
+        """Split the occupied lanes by owning bin worker."""
+        parts: list[list[tuple[int, _Lane]]] = [
+            [] for _ in range(self.bin_workers)]
         for lane_i, lane in occupied:
-            frames[lane_i] = self._bin_chunk(source, lane)
+            parts[self._worker_of(lane_i)].append((lane_i, lane))
+        return parts
+
+    def _bin_part(self, source: EventSource,
+                  lanes: list[tuple[int, _Lane]]
+                  ) -> list[tuple[int, np.ndarray]]:
+        """One worker's share of a replay tick: each owned occupied
+        lane's next chunk, binned to [chunk_slots, H, W, 2]. Runs on the
+        owning :class:`_BinWorker` thread when prefetching."""
+        return [(lane_i, self._bin_chunk(source, lane))
+                for lane_i, lane in lanes]
+
+    def _assemble(self, parts: list[list[tuple[int, np.ndarray]]]
+                  ) -> np.ndarray:
+        """Workers' per-lane blocks → the fold's full
+        [padded_capacity, chunk_slots, H, W, 2] batch (unoccupied and
+        mesh-padding lanes stay zero; they fold masked-inactive)."""
+        h, w = self.fns.in_hw
+        frames = np.zeros((self.padded_capacity, self.chunk_slots, h, w, 2),
+                          np.float32)
+        for part in parts:
+            for lane_i, block in part:
+                frames[lane_i] = block
         return frames
 
     # ------------------------------------------------------------------
@@ -378,7 +502,8 @@ class StreamEngine:
             return (0 if offers_per_window is None
                     else int(math.floor(i / offers_per_window)))
 
-        slots: SlotManager[_Lane] = SlotManager(self.capacity)
+        slots: ShardedSlots[_Lane] = ShardedSlots(self.capacity,
+                                                  self.executor.devices)
         pending: deque[tuple[int, int]] = deque()  # (stream_id, offered_w)
         state = self.fns.init_state()
         results: list[StreamResult] = []
@@ -388,18 +513,23 @@ class StreamEngine:
             chunks_per_window=self.chunks_per_window,
             t_intg_ms=self.dep.t_intg_ms, wall_s=0.0, total_events=0,
             total_readouts=0, total_layer1_spikes=0.0, paced=paced,
-            offered_rate=offered_rate, max_pending=max_pending)
+            offered_rate=offered_rate, max_pending=max_pending,
+            devices=self.executor.devices, bin_workers=self.bin_workers,
+            padded_capacity=self.padded_capacity,
+            lanes_per_shard=self.lanes_per_shard,
+            per_shard_admitted=[0] * self.executor.devices)
         h, w = self.fns.in_hw
         # warmup: compile fold/readout on a throwaway state so the
         # latency percentiles measure steady-state serving, not jit
         ws = self.fns.fold(self.fns.init_state(),
-                           jnp.zeros((self.capacity, self.chunk_slots,
-                                      h, w, 2)),
-                           jnp.zeros((self.capacity,), bool))
-        ws, _ = self.fns.readout(ws, jnp.zeros((self.capacity,), bool),
-                                 jnp.zeros((self.capacity,), bool))
+                           jnp.zeros((self.padded_capacity,
+                                      self.chunk_slots, h, w, 2)),
+                           jnp.zeros((self.padded_capacity,), bool))
+        ws, _ = self.fns.readout(ws,
+                                 jnp.zeros((self.padded_capacity,), bool),
+                                 jnp.zeros((self.padded_capacity,), bool))
         jax.block_until_ready(ws["logits"])
-        binner = _BinWorker() if self.prefetch else None
+        pool = _BinPool(self.bin_workers) if self.prefetch else None
         next_offer = 0
         window = 0
         t_start = time.perf_counter()
@@ -432,6 +562,7 @@ class StreamEngine:
                     assert lane_i is not None
                     state = self.fns.reset_lane(state, lane_i)
                     report.n_admitted += 1
+                    report.per_shard_admitted[slots.shard_of(lane_i)] += 1
                 report.max_open_streams = max(report.max_open_streams,
                                               slots.n_occupied)
                 occupied = list(slots.occupied())
@@ -443,21 +574,28 @@ class StreamEngine:
                     if delay > 0:
                         time.sleep(delay)
                 # ---- fold the window's replay chunks ------------------
-                # binning runs one chunk ahead on the worker thread and
+                # binning runs one chunk ahead on the worker pool (each
+                # worker bins only its own lane slice, in parallel) and
                 # the fold dispatches are left in flight — the window's
                 # only host↔device sync is the readout below
-                if binner is not None:
+                parts_by_worker = self._partition(occupied)
+                if pool is not None:
                     for _ in range(self.chunks_per_window):
-                        binner.submit(
-                            lambda occ=occupied: self._bin_tick(source, occ))
+                        for wi, lanes in enumerate(parts_by_worker):
+                            pool.submit(wi, lambda ls=lanes:
+                                        self._bin_part(source, ls))
                 for _ in range(self.chunks_per_window):
                     t0 = time.perf_counter()
-                    frames = (binner.get() if binner is not None
-                              else self._bin_tick(source, occupied))
+                    parts = ([pool.get(wi)
+                              for wi in range(self.bin_workers)]
+                             if pool is not None else
+                             [self._bin_part(source, ls)
+                              for ls in parts_by_worker])
+                    frames = self._assemble(parts)
                     state = self.fns.fold(state, jnp.asarray(frames), active)
                     report.fold_s.append(time.perf_counter() - t0)
                 # ---- readout at the T_INTG boundary -------------------
-                coarse_mask = np.zeros((self.capacity,), bool)
+                coarse_mask = np.zeros((self.padded_capacity,), bool)
                 for lane_i, lane in occupied:
                     coarse_mask[lane_i] = \
                         (lane.windows_done + 1) % self.group == 0
@@ -511,7 +649,10 @@ class StreamEngine:
                             f"events={lane.n_events}"
                             + (f" misses={lane.n_misses}" if paced else ""))
         finally:
-            if binner is not None:
-                binner.close()
+            # runs on the exception path too: a failed readout/fold must
+            # drain-and-join every bin worker (cancelling queued jobs) so
+            # no daemon thread leaks holding an open stream iterator
+            if pool is not None:
+                pool.close()
         report.wall_s = time.perf_counter() - t_start
         return report

@@ -96,6 +96,36 @@ class TestTrajectory:
         fresh["entries"].append(bench_entry("k3", kernel_us=1.0))
         assert check_bench.diff_trajectory(fresh, prev) == []
 
+    def test_throughput_meta_drop_flagged(self, tmp_path):
+        """meta.events_per_s(_per_device) are rates — LOWER is the
+        regression, and the reported ratio is old/new so >1 always means
+        'worse'."""
+        prev = json.loads(_write(tmp_path).read_text())
+        prev["entries"][1]["meta"] = {"events_per_s": 1000.0,
+                                      "events_per_s_per_device": 500.0}
+        fresh = json.loads(json.dumps(prev))
+        fresh["entries"][1]["meta"]["events_per_s"] = 250.0       # 4x drop
+        fresh["entries"][1]["meta"]["events_per_s_per_device"] = 500.0
+        regs = check_bench.diff_trajectory(fresh, prev)
+        assert [(r[0], r[3]) for r in regs] == [("k2.meta.events_per_s",
+                                                 4.0)]
+
+    def test_throughput_meta_gain_not_flagged(self, tmp_path):
+        prev = json.loads(_write(tmp_path).read_text())
+        prev["entries"][1]["meta"] = {"events_per_s_per_device": 100.0}
+        fresh = json.loads(json.dumps(prev))
+        fresh["entries"][1]["meta"]["events_per_s_per_device"] = 400.0
+        assert check_bench.diff_trajectory(fresh, prev) == []
+
+    def test_non_rate_meta_ignored(self, tmp_path):
+        """Arbitrary meta fields (miss_rate, counts, notes) never enter
+        the trajectory diff — only the declared rate keys do."""
+        prev = json.loads(_write(tmp_path).read_text())
+        prev["entries"][1]["meta"] = {"miss_rate": 0.0, "n_shed": 0}
+        fresh = json.loads(json.dumps(prev))
+        fresh["entries"][1]["meta"] = {"miss_rate": 0.5, "n_shed": 7}
+        assert check_bench.diff_trajectory(fresh, prev) == []
+
 
 class TestMain:
     def test_valid_record_passes(self, tmp_path):

@@ -359,8 +359,13 @@ class TestEngineLifecycle:
             assert key in art
         assert {"readout_p50", "readout_p99", "readout_mean", "fold_p50",
                 "fold_p99"} <= set(art["latency_ms"])
-        assert {"wall_s", "events_per_s", "readouts_per_s",
-                "streams_per_s"} <= set(art["throughput"])
+        assert {"wall_s", "events_per_s", "events_per_s_per_device",
+                "readouts_per_s", "streams_per_s"} <= set(art["throughput"])
+        # unsharded serve still carries the v3 sharding block (1 device)
+        assert art["sharding"] == {"devices": 1, "bin_workers": 1,
+                                   "padded_capacity": 2,
+                                   "lanes_per_shard": 2,
+                                   "per_shard_admitted": [2]}
         for s in art["streams"]:
             assert {"stream_id", "label", "prediction", "n_events",
                     "n_readouts", "logits"} <= set(s)
@@ -449,7 +454,7 @@ def _fast_dep(src, t_intg_ms=100.0, coarse_ms=200.0):
 
 
 # ---------------------------------------------------------------------------
-# admission control, pacing, and the v2 stats contract
+# admission control, pacing, and the v3 stats contract
 # ---------------------------------------------------------------------------
 
 def _check_stream_stats():
@@ -589,8 +594,8 @@ class TestPacedServing:
         # start before t_start + 7·t_intg = 0.7 s
         assert r_paced.wall_s >= 7 * 0.1
 
-    def test_paced_artifact_v2_schema_and_zero_misses_unloaded(self):
-        """The paced stats artifact passes the v2 schema gate, and an
+    def test_paced_artifact_v3_schema_and_zero_misses_unloaded(self):
+        """The paced stats artifact passes the v3 schema gate, and an
         UNLOADED run (2 lanes, 200 ms windows, trivial compute) misses no
         deadline."""
         css = _check_stream_stats()
@@ -602,7 +607,7 @@ class TestPacedServing:
         engine.serve(src, 2, seed=0)
         report = engine.serve(src, 2, seed=0, paced=True)
         art = report.to_artifact()
-        assert art["schema"] == STATS_SCHEMA == "p2m-stream-serving/v2"
+        assert art["schema"] == STATS_SCHEMA == "p2m-stream-serving/v3"
         assert css.check(art, 2, paced=True, max_miss_rate=0.0) == []
         ddl = art["deadlines"]
         assert ddl["n_misses"] == 0 and ddl["miss_rate"] == 0.0
@@ -612,7 +617,7 @@ class TestPacedServing:
         assert all(s["n_misses"] == 0 for s in art["streams"])
         assert all(s["miss_margin_max_ms"] <= 0.0 for s in art["streams"])
 
-    def test_unpaced_artifact_passes_v2_schema(self):
+    def test_unpaced_artifact_passes_v3_schema(self):
         css = _check_stream_stats()
         src = sources.resolve_dataset("synthetic-gesture", hw=HW)
         dep = _fresh_dep(src)
@@ -639,6 +644,103 @@ class TestPacedServing:
             assert a.prediction == b.prediction
             np.testing.assert_array_equal(np.asarray(a.logits),
                                           np.asarray(b.logits))
+
+
+# ---------------------------------------------------------------------------
+# multi-worker host binning pool: determinism + lifecycle
+# ---------------------------------------------------------------------------
+
+def _assert_reports_identical(ref, got):
+    """Bit-for-bit serving parity: per-stream outcomes and the fleet
+    ledger (the binning-pool / sharding determinism contract)."""
+    key = lambda r: r.stream_id  # noqa: E731
+    assert len(ref.results) == len(got.results)
+    for a, b in zip(sorted(ref.results, key=key),
+                    sorted(got.results, key=key)):
+        assert a.label == b.label
+        assert a.prediction == b.prediction
+        assert a.n_events == b.n_events
+        assert a.n_readouts == b.n_readouts
+        assert a.offered_window == b.offered_window
+        assert a.admitted_window == b.admitted_window
+        assert a.finished_window == b.finished_window
+        np.testing.assert_array_equal(np.asarray(a.logits),
+                                      np.asarray(b.logits))
+    for k in ("n_offered", "n_admitted", "n_shed", "n_deferred",
+              "total_events", "total_readouts", "total_layer1_spikes"):
+        assert getattr(ref, k) == getattr(got, k), k
+
+
+class TestBinningPool:
+    @pytest.mark.parametrize("paced", [False, True])
+    def test_multi_worker_binning_bit_identical(self, paced):
+        """2- and 4-worker binning pools produce bit-identical frames →
+        predictions, logits, and admission ledger vs the single-worker
+        pipeline AND vs the inline prefetch=False oracle, paced and
+        unpaced."""
+        src = sources.resolve_dataset("synthetic-gesture", hw=HW,
+                                      duration_ms=400.0)
+        dep = _fast_dep(src, t_intg_ms=100.0, coarse_ms=200.0)
+        base = StreamEngine(dep, capacity=4).serve(src, 6, seed=0,
+                                                   paced=paced)
+        oracle = StreamEngine(dep, capacity=4, prefetch=False).serve(
+            src, 6, seed=0, paced=paced)
+        _assert_reports_identical(base, oracle)
+        for workers in (2, 4):
+            engine = StreamEngine(dep, capacity=4, bin_workers=workers)
+            assert engine.bin_workers == workers
+            got = engine.serve(src, 6, seed=0, paced=paced)
+            _assert_reports_identical(base, got)
+            _assert_reports_identical(oracle, got)
+            assert got.to_artifact()["sharding"]["bin_workers"] == workers
+
+    def test_worker_partition_is_contiguous_and_total(self):
+        """Every lane is owned by exactly one worker, ownership is
+        contiguous (a lane slice per worker), and all workers get lanes
+        when capacity >= workers — the single-owner rule that keeps
+        per-lane chunk order deterministic."""
+        src = sources.resolve_dataset("synthetic-gesture", hw=HW,
+                                      duration_ms=400.0)
+        dep = _fast_dep(src, t_intg_ms=100.0, coarse_ms=200.0)
+        engine = StreamEngine(dep, capacity=4, bin_workers=3)
+        owners = [engine._worker_of(i) for i in range(4)]
+        assert owners == sorted(owners)          # contiguous slices
+        assert set(owners) == {0, 1, 2}          # no idle worker
+        with_cap1 = StreamEngine(dep, capacity=1, bin_workers=4)
+        assert with_cap1._worker_of(0) == 0
+
+    def test_worker_threads_join_on_serve_exception(self):
+        """A readout failure mid-serve must drain-and-join every bin
+        worker on the way out (try/finally): no daemon thread may leak
+        holding an open stream iterator."""
+        import dataclasses
+        import threading
+
+        src = sources.resolve_dataset("synthetic-gesture", hw=HW,
+                                      duration_ms=400.0)
+        dep = _fast_dep(src, t_intg_ms=100.0, coarse_ms=200.0)
+        engine = StreamEngine(dep, capacity=2, bin_workers=2)
+        real_readout = engine.fns.readout
+        calls = {"n": 0}
+
+        def boom(state, active, coarse_mask):
+            calls["n"] += 1
+            if calls["n"] >= 2:   # let the warmup call through
+                raise RuntimeError("injected readout failure")
+            return real_readout(state, active, coarse_mask)
+
+        engine.fns = dataclasses.replace(engine.fns, readout=boom)
+        with pytest.raises(RuntimeError, match="injected readout"):
+            engine.serve(src, 4, seed=0)
+        leaked = [t for t in threading.enumerate()
+                  if t.name.startswith("stream-bin-worker")]
+        assert leaked == []
+
+    def test_bad_bin_workers_rejected(self):
+        src = sources.resolve_dataset("synthetic-gesture", hw=HW,
+                                      duration_ms=400.0)
+        with pytest.raises(ValueError, match="bin_workers"):
+            StreamEngine(_fast_dep(src), capacity=2, bin_workers=0)
 
 
 # ---------------------------------------------------------------------------

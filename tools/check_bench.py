@@ -9,10 +9,12 @@ Two jobs (docs/benchmarks.md):
     ``max_err``). Exit 1 on any violation — CI gates on this.
   * **trajectory diff** (when the file is tracked): compare each entry's
     ``kernel_us`` AND ``xla_us`` against the committed record (``git show
-    HEAD:BENCH_<name>.json``). Slowdowns beyond ``--max-regression``
-    (ratio, default 0 = report only) are flagged; with the flag set they
-    fail the run. Timings on shared runners are noisy, so the default is
-    advisory — ``max_err`` drift is what the kernels' own asserts gate.
+    HEAD:BENCH_<name>.json``), plus the throughput meta fields
+    (``meta.events_per_s``, ``meta.events_per_s_per_device``) where LOWER
+    is the regression. Slowdowns beyond ``--max-regression`` (ratio,
+    default 0 = report only) are flagged; with the flag set they fail the
+    run. Timings on shared runners are noisy, so the default is advisory
+    — ``max_err`` drift is what the kernels' own asserts gate.
 
     python tools/check_bench.py                 # all BENCH_*.json at root
     python tools/check_bench.py BENCH_kernels.json --max-regression 3.0
@@ -104,9 +106,16 @@ def committed_record(path: Path) -> dict | None:
         return None
 
 
+# throughput meta fields where LOWER is the regression (timings above
+# regress when they grow; rates regress when they shrink)
+META_RATE_KEYS = ("events_per_s", "events_per_s_per_device")
+
+
 def diff_trajectory(fresh: dict, prev: dict
                     ) -> list[tuple[str, float, float, float]]:
-    """(entry, prev_us, new_us, ratio) for entries slower than before."""
+    """(entry, prev_val, new_val, slowdown_ratio) for entries slower than
+    before — timing keys that grew, plus ``meta.*`` rate keys that
+    shrank (ratio is old/new there, so >1 is always 'worse')."""
     prev_by = {e["name"]: e for e in prev.get("entries", [])
                if isinstance(e, dict)}
     regressions = []
@@ -119,6 +128,13 @@ def diff_trajectory(fresh: dict, prev: dict
             if _is_num(new) and _is_num(old) and old > 0 and new > old:
                 regressions.append(
                     (f"{e['name']}.{k}", old, new, new / old))
+        meta, p_meta = e.get("meta", {}), p.get("meta", {})
+        if isinstance(meta, dict) and isinstance(p_meta, dict):
+            for k in META_RATE_KEYS:
+                new, old = meta.get(k), p_meta.get(k)
+                if _is_num(new) and _is_num(old) and new > 0 and old > new:
+                    regressions.append(
+                        (f"{e['name']}.meta.{k}", old, new, old / new))
     return regressions
 
 
@@ -157,7 +173,8 @@ def main(argv: list[str] | None = None) -> int:
             continue
         regs = diff_trajectory(record, prev)
         for name, old, new, ratio in regs:
-            line = (f"{label}: {name} {old:.1f}us → {new:.1f}us "
+            unit = "" if ".meta." in name else "us"
+            line = (f"{label}: {name} {old:.1f}{unit} → {new:.1f}{unit} "
                     f"({ratio:.2f}x)")
             if args.max_regression and ratio > args.max_regression:
                 gated.append(f"REGRESSION {line}")

@@ -1,8 +1,14 @@
 #!/usr/bin/env python3
-"""Assert a serving-stats artifact matches the p2m-stream-serving/v2
+"""Assert a serving-stats artifact matches the p2m-stream-serving/v3
 schema (docs/streaming.md). Stdlib only — the CI streaming-smoke step
 runs it against the artifacts `launch/stream.py --smoke` just emitted
-(one unpaced, one ``--paced``).
+(one unpaced, one ``--paced``, one lane-sharded).
+
+v3 adds the mesh ``sharding`` block (devices, bin_workers,
+padded_capacity, lanes_per_shard, per_shard_admitted) and
+``throughput.events_per_s_per_device``; the sharding ledger must be
+internally consistent (lanes_per_shard x devices == padded_capacity >=
+capacity, per-shard admits sum to n_admitted).
 
     python tools/check_stream_stats.py artifacts/stream/stream_serving_dvs128.json [--streams N]
     python tools/check_stream_stats.py --paced --max-miss-rate 1.0 paced.json
@@ -13,11 +19,11 @@ import argparse
 import json
 import sys
 
-SCHEMA = "p2m-stream-serving/v2"
+SCHEMA = "p2m-stream-serving/v3"
 TOP_KEYS = {"schema", "deployed", "n_streams", "capacity",
             "chunks_per_window", "t_intg_ms", "accuracy", "paced",
             "admission", "deadlines", "streams", "latency_ms",
-            "throughput"}
+            "throughput", "sharding"}
 STREAM_KEYS = {"stream_id", "label", "prediction", "correct", "n_events",
                "n_readouts", "n_coarse_frames", "offered_window",
                "admitted_window", "finished_window", "n_misses", "logits"}
@@ -28,8 +34,10 @@ DEADLINE_KEYS = {"n_deadlines", "n_misses", "miss_rate", "margin_ms",
 MARGIN_KEYS = {"p50", "p90", "p99", "max"}
 LATENCY_KEYS = {"readout_p50", "readout_p99", "readout_mean", "fold_p50",
                 "fold_p99"}
-THROUGHPUT_KEYS = {"wall_s", "events_per_s", "readouts_per_s",
-                   "streams_per_s"}
+THROUGHPUT_KEYS = {"wall_s", "events_per_s", "events_per_s_per_device",
+                   "readouts_per_s", "streams_per_s"}
+SHARDING_KEYS = {"devices", "bin_workers", "padded_capacity",
+                 "lanes_per_shard", "per_shard_admitted"}
 
 
 def check(art: dict, n_streams: int | None = None, paced: bool = False,
@@ -98,6 +106,29 @@ def check(art: dict, n_streams: int | None = None, paced: bool = False,
                 and ddl["miss_rate"] * 100.0 > max_miss_rate):
             errs.append(f"miss rate {ddl['miss_rate']:.2%} exceeds "
                         f"--max-miss-rate {max_miss_rate}%")
+    sh = art.get("sharding", {})
+    if SHARDING_KEYS - set(sh):
+        errs.append(f"sharding missing {sorted(SHARDING_KEYS - set(sh))}")
+    else:
+        if sh["devices"] < 1 or sh["bin_workers"] < 1:
+            errs.append(f"sharding counts must be >= 1: {sh}")
+        if sh["lanes_per_shard"] * sh["devices"] != sh["padded_capacity"]:
+            errs.append(f"sharding geometry inconsistent: "
+                        f"{sh['lanes_per_shard']} lanes/shard x "
+                        f"{sh['devices']} devices != padded capacity "
+                        f"{sh['padded_capacity']}")
+        if sh["padded_capacity"] < art.get("capacity", 0):
+            errs.append(f"padded_capacity {sh['padded_capacity']} < "
+                        f"capacity {art.get('capacity')}")
+        if len(sh["per_shard_admitted"]) != sh["devices"]:
+            errs.append(f"per_shard_admitted has "
+                        f"{len(sh['per_shard_admitted'])} entries for "
+                        f"{sh['devices']} devices")
+        elif (not (ADMISSION_KEYS - set(adm))
+                and sum(sh["per_shard_admitted"]) != adm["n_admitted"]):
+            errs.append(f"per-shard admits {sh['per_shard_admitted']} sum "
+                        f"to {sum(sh['per_shard_admitted'])} != "
+                        f"n_admitted {adm['n_admitted']}")
     if paced and not art.get("paced"):
         errs.append("--paced: artifact is not a paced run")
     if LATENCY_KEYS - set(art.get("latency_ms", {})):
@@ -134,10 +165,12 @@ def main() -> int:
         lat, ddl = art["latency_ms"], art["deadlines"]
         paced_note = (f", {ddl['n_misses']}/{ddl['n_deadlines']} deadline "
                       f"misses" if art["paced"] else "")
-        print(f"check_stream_stats: OK — {art['n_streams']} streams, "
+        print(f"check_stream_stats: OK — {art['n_streams']} streams on "
+              f"{art['sharding']['devices']} device(s), "
               f"readout p50={lat['readout_p50']:.2f}ms "
               f"p99={lat['readout_p99']:.2f}ms, "
-              f"{art['throughput']['events_per_s']:.0f} events/s"
+              f"{art['throughput']['events_per_s']:.0f} events/s "
+              f"({art['throughput']['events_per_s_per_device']:.0f}/device)"
               f"{paced_note}")
     return 1 if errs else 0
 
