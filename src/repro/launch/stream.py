@@ -14,13 +14,22 @@ Three ways in:
   * ``--smoke``: fully self-contained CI path — if the dataset is
     file-backed and no ``--data-root`` is given, a miniature fixture
     dataset is generated first (repro.data.fixtures), then the tiny
-    train → deploy → serve pipeline runs end-to-end on CPU.
+    train → deploy → serve pipeline runs end-to-end on CPU;
+  * ``--registry CKPT [CKPT ...]`` serves a DEPLOYMENT REGISTRY
+    (repro.stream.registry) of several compat-equal checkpoints from one
+    engine — entry names are the checkpoint dir basenames, the FIRST
+    one is the default entry. ``--variants SPEC [...]`` assigns each
+    stream a variant request, cycled round-robin: a SPEC is an entry
+    name (``ckpt_frozen``) or a ``k=v[,k=v...]`` metadata matcher
+    (``protocol=frozen``), resolved at admission; unresolvable requests
+    are rejected and counted.
 
-Emits one serving-stats JSON artifact (schema ``p2m-stream-serving/v3``):
-per-stream predictions, p50/p99 readout latency, events/s (total and
-per-device), the mesh ``sharding`` block, admission (shed/deferred)
-counters and — under ``--paced`` — deadline-miss accounting
-(docs/streaming.md).
+Emits one serving-stats JSON artifact (schema ``p2m-stream-serving/v4``):
+per-stream predictions (with their registry-entry binding), p50/p99
+readout latency, events/s (total and per-device), the mesh ``sharding``
+block, the ``registry`` per-entry breakdown, admission
+(shed/rejected/deferred) counters and — under ``--paced`` —
+deadline-miss accounting (docs/streaming.md).
 
 ``--devices N`` shards the lane axis over a 1-D device mesh
 (repro.stream.shard) — bit-identical to ``--devices 1``; ``--bin-workers``
@@ -50,6 +59,22 @@ if _SRC not in sys.path:
 FILE_BACKED = ("dvs128", "nmnist")
 
 
+def _parse_variant_spec(spec: str):
+    """CLI variant request → registry request: a bare entry name, or a
+    ``k=v[,k=v...]`` metadata matcher (values parsed as JSON scalars
+    when possible, e.g. ``t_intg_ms=100.0``)."""
+    if "=" not in spec:
+        return spec
+    matcher = {}
+    for kv in spec.split(","):
+        k, _, v = kv.partition("=")
+        try:
+            matcher[k] = json.loads(v)
+        except json.JSONDecodeError:
+            matcher[k] = v
+    return matcher
+
+
 def _make_fixture(dataset: str, root: Path) -> None:
     from repro.data import fixtures
 
@@ -77,6 +102,20 @@ def main() -> int:
                     help="serving checkpoint dir (repro.stream.deploy); "
                          "omitted: a fast sweep trains and deploys one "
                          "in-process")
+    ap.add_argument("--registry", type=str, nargs="+", default=None,
+                    metavar="CKPT",
+                    help="serve a deployment registry built from these "
+                         "checkpoint dirs (entry name = dir basename; "
+                         "first entry is the default); mutually exclusive "
+                         "with --checkpoint")
+    ap.add_argument("--variants", type=str, nargs="+", default=None,
+                    metavar="SPEC",
+                    help="per-stream variant requests, cycled round-robin "
+                         "over the streams: an entry name or a k=v[,k=v] "
+                         "metadata matcher (requires --registry)")
+    ap.add_argument("--max-entries", type=int, default=None,
+                    help="registry engine param-table size (max variants "
+                         "co-resident on the lanes; default: entries + 1)")
     ap.add_argument("--streams", type=int, default=8,
                     help="number of event streams to serve")
     ap.add_argument("--capacity", type=int, default=4,
@@ -129,7 +168,16 @@ def main() -> int:
     from repro.data import sources as sources_mod
     from repro.stream import deploy as deploy_mod
     from repro.stream.engine import StreamEngine
+    from repro.stream.registry import Registry
     from repro.stream.shard import make_lane_executor
+
+    if args.registry is not None and args.checkpoint is not None:
+        print("error: --registry and --checkpoint are mutually exclusive",
+              file=sys.stderr)
+        return 2
+    if args.variants is not None and args.registry is None:
+        print("error: --variants requires --registry", file=sys.stderr)
+        return 2
 
     dataset = args.dataset or ("dvs128" if args.smoke
                                else "synthetic-gesture")
@@ -150,8 +198,23 @@ def main() -> int:
         _make_fixture(dataset, Path(data_root))
 
     try:
-        if args.checkpoint is not None:
-            dep = deploy_mod.load_deployment(args.checkpoint, args.artifact)
+        default_entry = None
+        if args.registry is not None:
+            # entry names = checkpoint dir basenames; first = default
+            reg = Registry()
+            for d in args.registry:
+                entry = reg.register_checkpoint(Path(d).name, d,
+                                                artifact=args.artifact)
+                print(f"[registry] {entry.name}#{entry.uid} "
+                      f"({entry.meta.get('label')}/"
+                      f"{entry.meta.get('protocol')} "
+                      f"T={entry.meta.get('t_intg_ms'):g}ms, compat "
+                      f"{entry.compat_digest})")
+            target = reg
+            default_entry = reg.names()[0]
+        elif args.checkpoint is not None:
+            target = deploy_mod.load_deployment(args.checkpoint,
+                                                args.artifact)
         else:
             # no weights on disk: train + deploy in-process (fast grid)
             smoke_t = (100.0, 1000.0) if args.smoke else None
@@ -162,20 +225,27 @@ def main() -> int:
                 deploy_t_intg_ms=(args.deploy_t_intg if args.deploy_t_intg
                                   is not None else
                                   (100.0 if args.smoke else None)))
-            dep = deploy_mod.load_deployment(
+            target = deploy_mod.load_deployment(
                 bundle["checkpoints"][args.protocol], bundle["artifact"])
         source = sources_mod.resolve_dataset(dataset, hw=args.hw,
                                              data_root=data_root,
                                              split="all")
-        engine = StreamEngine(dep, capacity=args.capacity,
+        engine = StreamEngine(target, capacity=args.capacity,
                               chunks_per_window=args.chunks_per_window,
                               use_kernel=args.use_kernel,
                               executor=make_lane_executor(args.devices),
-                              bin_workers=args.bin_workers)
+                              bin_workers=args.bin_workers,
+                              max_entries=args.max_entries,
+                              default_entry=default_entry)
+        variants = None
+        if args.variants is not None:
+            reqs = [_parse_variant_spec(s) for s in args.variants]
+            variants = lambda sid: reqs[sid % len(reqs)]  # noqa: E731
         report = engine.serve(source, args.streams, seed=args.seed,
                               paced=args.paced,
                               offered_rate=args.offered_rate,
-                              max_pending=args.max_pending, log=print)
+                              max_pending=args.max_pending,
+                              variants=variants, log=print)
     except (ValueError, OSError) as e:
         print(f"error: {e}", file=sys.stderr)
         return 2
@@ -208,8 +278,15 @@ def main() -> int:
           f"{sh['padded_capacity']}, {sh['bin_workers']} bin worker(s))   "
           f"{thr['events_per_s_per_device']:.0f} events/s/device")
     print(f"admission      offered {adm['n_offered']}  admitted "
-          f"{adm['n_admitted']}  shed {adm['n_shed']}  deferred "
-          f"{adm['n_deferred']}  max open {adm['max_open_streams']}")
+          f"{adm['n_admitted']}  shed {adm['n_shed']}  rejected "
+          f"{adm['n_rejected']}  deferred {adm['n_deferred']}  max open "
+          f"{adm['max_open_streams']}")
+    if args.registry is not None:
+        for row in art["registry"]["entries"]:
+            print(f"variant        {row['name']}#{row['uid']}  admitted "
+                  f"{row['n_admitted']}  finished {row['n_finished']}  "
+                  f"acc {row['accuracy']:.3f}  misses {row['n_misses']}  "
+                  f"{row['events_per_s']:.0f} events/s")
     if art["paced"]:
         mg = ddl["margin_ms"]
         print(f"deadlines      {ddl['n_misses']}/{ddl['n_deadlines']} "

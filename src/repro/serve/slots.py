@@ -91,6 +91,20 @@ class SlotManager(Generic[T]):
         self._items[slot] = None
         return item
 
+    def swap(self, slot: int, item: T) -> T:
+        """Replace the item in OCCUPIED lane ``slot`` in place and return
+        the old item — rebinding a resident lane (e.g. to a hot-swapped
+        registry entry) without ever exposing the lane as free, so no
+        concurrent ``admit``/``refill`` can steal it mid-rebind."""
+        if item is None:
+            raise ValueError("cannot swap in None (None marks a free lane)")
+        old = self._items[slot]
+        if old is None:
+            raise ValueError(f"slot {slot} is free — swap only rebinds "
+                             f"occupied lanes (use admit)")
+        self._items[slot] = item
+        return old
+
     def refill(self, queue: deque[T]) -> list[tuple[int, T]]:
         """Admit items from the head of ``queue`` (in order, popping them
         via ``popleft``) until the queue is empty or every lane is full.
@@ -201,6 +215,17 @@ class ShardedSlots(Generic[T]):
         if mgr is None or local >= mgr.capacity:
             raise ValueError(f"lane {lane} is a padding lane")
         return mgr.release(local)
+
+    def swap(self, lane: int, item: T) -> T:
+        """Replace the item in occupied global lane ``lane`` in place and
+        return the old item (padding lanes can never hold an item, so
+        they reject just like ``release``)."""
+        s = self.shard_of(lane)
+        mgr = self._shards[s]
+        local = lane - s * self.lanes_per_shard
+        if mgr is None or local >= mgr.capacity:
+            raise ValueError(f"lane {lane} is a padding lane")
+        return mgr.swap(local, item)
 
     def occupied(self) -> Iterator[tuple[int, T]]:
         """(global lane, item) pairs in global lane order — the iteration

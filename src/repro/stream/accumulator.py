@@ -74,6 +74,98 @@ class StreamFns:
     n_classes: int
 
 
+@dataclass(frozen=True)
+class MultiStreamFns:
+    """The compiled MULTI-VARIANT serving surface (deployment registry,
+    repro.stream.registry): fold/readout additionally take a per-lane
+    ``entry`` index ``[capacity] int32`` and a stacked numerics ``bundle``
+    (every :func:`entry_numerics` leaf stacked on a leading ``[E]`` entry
+    axis — :func:`stack_entries`). The bundle is an ARGUMENT, not a
+    closure, so hot-swapping a registry entry re-stacks the bundle
+    without recompiling (shapes are unchanged)."""
+    init_state: Callable[[], dict]
+    reset_lane: Callable[[dict, int], dict]
+    fold: Callable[[dict, jax.Array, jax.Array, jax.Array, dict], dict]
+    readout: Callable[[dict, jax.Array, jax.Array, jax.Array, dict],
+                      tuple[dict, dict]]
+    in_hw: tuple[int, int]
+    n_classes: int
+
+
+def entry_numerics(dep: Deployment) -> dict:
+    """The deployed variant's serving numerics, as one pytree.
+
+    Exactly the values :func:`make_stream_fns` closes over — quantized
+    layer-1 weights, the per-filter sub-slot decay ``a`` and window drift
+    from the leak linearization of the DEPLOYED kernel, the transfer
+    curve's process-variation params, the comparator threshold, and the
+    backbone params/BN state. Two compat-equal deployments (same
+    geometry; see repro.stream.registry.compat_key) yield identically
+    shaped pytrees, which is what lets a registry stack them on an entry
+    axis (:func:`stack_entries`) and co-serve them from one engine."""
+    cfg = dep.model_cfg
+    p2m_cfg = cfg.p2m
+    w_q = p2m_layer.effective_weights(dep.params["p2m"], p2m_cfg)
+    coeffs = dep.coeffs
+    lk = leakage.leak_params_from_coeffs(w_q, coeffs)
+    a = leakage.decay_factor(lk.tau_ms, p2m_cfg.dt_ms)                # [C]
+    _, drift = p2m_layer.window_decay(lk, p2m_cfg.n_sub, p2m_cfg.dt_ms)
+    return {
+        "w_q": w_q,
+        "a": a,
+        "drift": drift,
+        "pv": {"gain": dep.params["p2m"]["pv_gain"],
+               "offset": dep.params["p2m"]["pv_offset"]},
+        "theta": coeffs.v_threshold,
+        "backbone": dep.params["backbone"],
+        "bn_state": dep.bn_state,
+    }
+
+
+def stack_entries(numerics: list[dict]) -> dict:
+    """Stack per-entry numerics pytrees on a leading ``[E]`` entry axis —
+    the ``bundle`` argument of :class:`MultiStreamFns`. All entries must
+    be compat-equal (identical leaf shapes)."""
+    if not numerics:
+        raise ValueError("cannot stack an empty entry list")
+    return jax.tree.map(
+        lambda *xs: jnp.stack([jnp.asarray(x) for x in xs]), *numerics)
+
+
+def _fold_core(x: jax.Array, frames: jax.Array, nb: dict, *,
+               stride: int, dv_unit: float, use_kernel: bool) -> jax.Array:
+    """One variant's chunk fold: advance the charge ODE of every lane
+    through ``frames`` [capacity, chunk_slots, H, W, 2] under numerics
+    ``nb`` (:func:`entry_numerics`). Each sub-slot decays the standing
+    charge by ``a`` and deposits its (dv_unit-scaled) conv — empty slots
+    decay without deposit."""
+    if use_kernel:
+        return stream_fold_ops.fold_chunk(
+            x, frames, nb["w_q"], nb["a"], stride=stride, dv_unit=dv_unit)
+
+    def sub_step(x, ev_k):
+        ideal = _conv(ev_k, nb["w_q"], stride) * dv_unit
+        return x * nb["a"] + ideal, None
+
+    x, _ = lax.scan(sub_step, x, jnp.moveaxis(frames, 1, 0))
+    return x
+
+
+def _readout_core(state: dict, nb: dict, *, analog_cfg, bb_cfg) -> dict:
+    """One variant's T_INTG readout over every lane at once: window
+    drift, transfer curve + PV, comparator, 2x pool, coarse accumulate,
+    backbone step. Pure — masking/selection is the caller's job."""
+    v_pre = analog.transfer_curve(state["x"] + nb["drift"], analog_cfg,
+                                  nb["pv"])
+    spikes = snn.spike_fn(v_pre - nb["theta"])                # [B, H, W, C]
+    pooled = snn.max_pool(spikes)
+    coarse = state["coarse"] + pooled
+    logits_t, mem2 = snn.spiking_cnn_stream_step(
+        nb["backbone"], nb["bn_state"], state["mem"], coarse, bb_cfg)
+    return {"spikes": spikes, "pooled": pooled, "coarse": coarse,
+            "logits_t": logits_t, "mem2": mem2}
+
+
 def make_stream_fns(dep: Deployment, *, capacity: int,
                     chunk_slots: int, use_kernel: bool = False,
                     executor: LaneExecutor | None = None) -> StreamFns:
@@ -117,16 +209,7 @@ def make_stream_fns(dep: Deployment, *, capacity: int,
     # variant numerics, identical to the offline curvefit path: quantized
     # weights, leak linearization from the DEPLOYED kernel, per-filter
     # sub-slot decay a, window drift toward V_inf, transfer curve + PV.
-    w_q = p2m_layer.effective_weights(dep.params["p2m"], p2m_cfg)
-    coeffs = dep.coeffs
-    lk = leakage.leak_params_from_coeffs(w_q, coeffs)
-    a = leakage.decay_factor(lk.tau_ms, p2m_cfg.dt_ms)            # [C]
-    _, drift = p2m_layer.window_decay(lk, n_sub, p2m_cfg.dt_ms)   # [C]
-    pv = {"gain": dep.params["p2m"]["pv_gain"],
-          "offset": dep.params["p2m"]["pv_offset"]}
-    theta = coeffs.v_threshold
-    bb_params = dep.params["backbone"]
-    bn_state = dep.bn_state
+    nb = entry_numerics(dep)
 
     def init_state() -> dict:
         return {
@@ -160,17 +243,9 @@ def make_stream_fns(dep: Deployment, *, capacity: int,
         Under a sharded executor this body sees one device's contiguous
         lane block (capacity / devices lanes).
         """
-        if use_kernel:
-            x = stream_fold_ops.fold_chunk(
-                state["x"], frames, w_q, a, stride=p2m_cfg.stride,
-                dv_unit=p2m_cfg.analog.dv_unit)
-            return {**state, "x": _mask(active, x, state["x"])}
-
-        def sub_step(x, ev_k):
-            ideal = _conv(ev_k, w_q, p2m_cfg.stride) * p2m_cfg.analog.dv_unit
-            return x * a + ideal, None
-
-        x, _ = lax.scan(sub_step, state["x"], jnp.moveaxis(frames, 1, 0))
+        x = _fold_core(state["x"], frames, nb, stride=p2m_cfg.stride,
+                       dv_unit=p2m_cfg.analog.dv_unit,
+                       use_kernel=use_kernel)
         return {**state, "x": _mask(active, x, state["x"])}
 
     def readout_body(state: dict, active: jax.Array,
@@ -183,12 +258,10 @@ def make_stream_fns(dep: Deployment, *, capacity: int,
         Returns the new state and per-lane outputs (binary spike map,
         pooled spike count) for stats and parity checks.
         """
-        v_pre = analog.transfer_curve(state["x"] + drift, p2m_cfg.analog, pv)
-        spikes = snn.spike_fn(v_pre - theta)                  # [B, H, W, C]
-        pooled = snn.max_pool(spikes)
-        coarse = state["coarse"] + pooled
-        logits_t, mem2 = snn.spiking_cnn_stream_step(
-            bb_params, bn_state, state["mem"], coarse, bb_cfg)
+        ro = _readout_core(state, nb, analog_cfg=p2m_cfg.analog,
+                           bb_cfg=bb_cfg)
+        spikes, pooled, coarse = ro["spikes"], ro["pooled"], ro["coarse"]
+        logits_t, mem2 = ro["logits_t"], ro["mem2"]
         new_state = {
             "x": _mask(active, jnp.zeros_like(state["x"]), state["x"]),
             "coarse": _mask(active,
@@ -219,3 +292,126 @@ def make_stream_fns(dep: Deployment, *, capacity: int,
     return StreamFns(init_state=init_state, reset_lane=reset_lane,
                      fold=fold, readout=readout, in_hw=(H, W),
                      n_classes=bb_cfg.n_classes)
+
+
+def make_multi_stream_fns(dep: Deployment, *, capacity: int,
+                          chunk_slots: int, use_kernel: bool = False,
+                          executor: LaneExecutor | None = None
+                          ) -> MultiStreamFns:
+    """Build the jitted MULTI-VARIANT fold/readout steps (deployment
+    registry serving). ``dep`` is the engine's ANCHOR entry — it only
+    pins the shared serving geometry (resolution, stride, channels,
+    n_sub, backbone architecture; the compat key); the actual per-lane
+    numerics arrive per call as a stacked ``bundle``
+    (:func:`stack_entries` over :func:`entry_numerics`) plus a per-lane
+    ``entry`` index ``[capacity] int32`` into its ``[E]`` axis.
+
+    Bit-exactness contract (the registry's headline invariant): for each
+    entry ``e``, the body runs the IDENTICAL full-lane-batch program a
+    single-variant engine would run with ``e``'s numerics — ``lax.map``
+    over the entry axis, the same idiom the sweep engine uses for the
+    variant axis — and then gathers, per lane, the row of the entry that
+    lane is bound to. Because every lane's numerics are independent of
+    its neighbours (no cross-lane reduction anywhere in the serving
+    forward — the same property that makes sharding bit-exact), lane
+    ``i`` of entry ``e``'s sweep is bit-identical to lane ``i`` of a
+    single-variant serve, so the gathered mixed-variant state is
+    bit-identical per lane too (tests/test_registry.py pins it, on 1
+    device and on a lane mesh).
+
+    Under a sharded ``executor`` the state/frames/masks and the entry
+    index split into per-device lane blocks (``P_LANE``) while the
+    bundle replicates (``P_REP``) — every device carries all E variants,
+    exactly as the single-variant engine replicates its one deployment.
+    """
+    ex = executor or LaneExecutor()
+    if capacity % ex.devices:
+        raise ValueError(
+            f"capacity={capacity} must be a multiple of "
+            f"executor.devices={ex.devices} — pad the lane axis first "
+            f"(LaneExecutor.padded_size)")
+    cfg = dep.model_cfg
+    p2m_cfg = cfg.p2m
+    bb_cfg = cfg.backbone
+    if p2m_cfg.n_sub % chunk_slots:
+        raise ValueError(f"chunk_slots={chunk_slots} must divide "
+                         f"n_sub={p2m_cfg.n_sub}")
+    H, W = bb_cfg.input_hw
+    C = p2m_cfg.out_channels
+    hp, wp = H // p2m_cfg.stride // 2, W // p2m_cfg.stride // 2
+
+    def init_state() -> dict:
+        return {
+            "x": jnp.zeros((capacity, H // p2m_cfg.stride,
+                            W // p2m_cfg.stride, C)),
+            "coarse": jnp.zeros((capacity, hp, wp, C)),
+            "mem": snn.spiking_cnn_stream_init(bb_cfg, capacity),
+            "logits": jnp.zeros((capacity, bb_cfg.n_classes)),
+            "n_coarse": jnp.zeros((capacity,), jnp.int32),
+        }
+
+    @jax.jit
+    def reset_lane(state: dict, lane: jax.Array) -> dict:
+        return jax.tree.map(
+            lambda v: v.at[lane].set(jnp.zeros_like(v[lane])), state)
+
+    def _gather(tree, entry: jax.Array):
+        """Per-lane entry selection: leaf [E, capacity, ...] → lane i
+        takes row ``[entry[i], i]`` — the exact gather that makes mixed
+        serving bit-identical to the per-entry full-batch programs."""
+        lanes = jnp.arange(entry.shape[0])
+        return jax.tree.map(lambda leaf: leaf[entry, lanes], tree)
+
+    def fold_body(state: dict, frames: jax.Array, active: jax.Array,
+                  entry: jax.Array, bundle: dict) -> dict:
+        xs = lax.map(
+            lambda nb: _fold_core(state["x"], frames, nb,
+                                  stride=p2m_cfg.stride,
+                                  dv_unit=p2m_cfg.analog.dv_unit,
+                                  use_kernel=use_kernel),
+            {"w_q": bundle["w_q"], "a": bundle["a"]})   # [E, cap, ...]
+        x = _gather(xs, entry)
+        return {**state, "x": _mask(active, x, state["x"])}
+
+    def readout_body(state: dict, active: jax.Array,
+                     coarse_mask: jax.Array, entry: jax.Array,
+                     bundle: dict) -> tuple[dict, dict]:
+        ro = _gather(
+            lax.map(lambda nb: _readout_core(state, nb,
+                                             analog_cfg=p2m_cfg.analog,
+                                             bb_cfg=bb_cfg),
+                    bundle),
+            entry)
+        spikes, pooled, coarse = ro["spikes"], ro["pooled"], ro["coarse"]
+        logits_t, mem2 = ro["logits_t"], ro["mem2"]
+        new_state = {
+            "x": _mask(active, jnp.zeros_like(state["x"]), state["x"]),
+            "coarse": _mask(active,
+                            _mask(coarse_mask, jnp.zeros_like(coarse),
+                                  coarse),
+                            state["coarse"]),
+            "mem": jax.tree.map(lambda n, o: _mask(coarse_mask, n, o),
+                                mem2, state["mem"]),
+            "logits": state["logits"] + _mask(coarse_mask, logits_t,
+                                              jnp.zeros_like(logits_t)),
+            "n_coarse": state["n_coarse"] + coarse_mask.astype(jnp.int32),
+        }
+        out = {"spikes": spikes,
+               "n_spikes": jnp.sum(pooled, axis=(1, 2, 3))
+               * active.astype(pooled.dtype)}
+        return new_state, out
+
+    # lane-leading leaves shard over the mesh; the entry index rides the
+    # lane axis with them; the bundle (all E variants) replicates.
+    fold = jax.jit(ex.shard(
+        fold_body,
+        in_specs=(P_LANE, P_LANE, P_LANE, P_LANE, P_REP),
+        out_specs=P_LANE))
+    readout = jax.jit(ex.shard(
+        readout_body,
+        in_specs=(P_LANE, P_LANE, P_LANE, P_LANE, P_REP),
+        out_specs=(P_LANE, P_LANE)))
+
+    return MultiStreamFns(init_state=init_state, reset_lane=reset_lane,
+                          fold=fold, readout=readout, in_hw=(H, W),
+                          n_classes=bb_cfg.n_classes)

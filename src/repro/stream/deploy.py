@@ -20,7 +20,7 @@ and the precise statement of what "serving this record" computes.
 from __future__ import annotations
 
 import json
-from dataclasses import asdict, dataclass, replace
+from dataclasses import asdict, dataclass, field, replace
 from pathlib import Path
 from typing import Any
 
@@ -88,12 +88,19 @@ def leak_config_from_variant(variant: dict, base: LeakageConfig
 class Deployment:
     """One servable variant: model config pinned to the deployed cell
     (``p2m.t_intg_ms``/``n_sub``/``leak`` = the record's), its trained
-    params + BN state, and the sweep record it came from."""
+    params + BN state, and the sweep record it came from.
+
+    ``meta`` is the registry-facing metadata the checkpoint carries
+    beyond the record itself (``dataset``, ``sensor_hw``, ...) — what
+    :func:`repro.stream.registry.entry_meta` folds into the catalog row
+    so a fleet registry can match streams to variants without reopening
+    the training data."""
     model_cfg: P2MModelConfig
     params: dict                 # {"p2m": {...}, "backbone": {...}}
     bn_state: dict
     record: dict
     protocol: str = "frozen"
+    meta: dict = field(default_factory=dict)
 
     @property
     def coeffs(self) -> leakage.LeakCoeffs:
@@ -166,12 +173,29 @@ def fresh_deployment(model_cfg: P2MModelConfig, *, seed: int = 0,
 # record selection
 # ---------------------------------------------------------------------------
 
+def _record_sort_key(r: dict) -> tuple:
+    """Total deterministic order over sweep records: best accuracy first,
+    ties broken by shortest T_INTG, label, protocol, n_sub, and finally
+    the canonical (key-sorted) variant dict. Every component is an
+    intrinsic record field — NEVER the position in the records list — so
+    selection is reproducible across dict/JSON orderings, which is what
+    keeps registry compat keys and deployed checkpoints stable across
+    re-serializations of the same artifact."""
+    variant = r.get("variant") or {}
+    return (-(r.get("accuracy") or 0.0), r["t_intg_ms"],
+            str(r.get("label")), str(r.get("protocol")),
+            r.get("n_sub") or 0,
+            json.dumps(variant, sort_keys=True, default=float))
+
+
 def select_record(records: list[dict], *, protocol: str | None = None,
                   t_intg_ms: float | None = None,
                   label: str | None = None) -> dict:
     """Pick the record to deploy: filter by protocol / T_INTG / variant
-    label, then take the best accuracy (ties → shortest T_INTG, then
-    label order — deterministic)."""
+    label, then take the best accuracy. Tie-breaking is TOTAL
+    (:func:`_record_sort_key`): equal-accuracy records resolve by
+    intrinsic fields, never by input order, so the same artifact always
+    deploys the same record however its JSON was (re)serialized."""
     pool = [r for r in records
             if (protocol is None or r.get("protocol") == protocol)
             and (t_intg_ms is None or r["t_intg_ms"] == t_intg_ms)
@@ -181,8 +205,7 @@ def select_record(records: list[dict], *, protocol: str | None = None,
             f"no sweep record matches protocol={protocol!r} "
             f"t_intg_ms={t_intg_ms!r} label={label!r} "
             f"({len(records)} records total)")
-    return sorted(pool, key=lambda r: (-r["accuracy"], r["t_intg_ms"],
-                                       r["label"]))[0]
+    return min(pool, key=_record_sort_key)
 
 
 def select_from_artifact(artifact: dict | str | Path, **kwargs) -> dict:
@@ -201,13 +224,18 @@ def select_from_artifact(artifact: dict | str | Path, **kwargs) -> dict:
 # ---------------------------------------------------------------------------
 
 def save_deployment(directory: str | Path, dep: Deployment) -> Path:
-    """Write one committed, self-describing serving checkpoint."""
+    """Write one committed, self-describing serving checkpoint. The
+    ``extra`` block embeds the record, the full model config, and the
+    registry metadata (``dep.meta`` — dataset, sensor_hw, ...) so
+    :func:`load_deployment` can feed
+    :meth:`repro.stream.registry.Registry.register` directly."""
     tree = {"params": dep.params, "bn_state": dep.bn_state}
     extra = {
         "deploy_schema": DEPLOY_SCHEMA,
         "protocol": dep.protocol,
         "record": dep.record,
         "model_config": model_config_to_dict(dep.model_cfg),
+        "registry_meta": dict(dep.meta),
     }
     return store.save_checkpoint(directory, 0, tree, extra)
 
@@ -220,6 +248,11 @@ def load_deployment(directory: str | Path,
     artifact it was deployed from: the embedded record must appear there
     (same label / protocol / T_INTG) — the handshake guard against
     serving weights whose menu entry was regenerated.
+
+    Corrupt or internally inconsistent extras raise ``ValueError``
+    instead of mis-deploying: a checkpoint whose embedded record
+    disagrees with its embedded model config (t_intg_ms / n_sub / leak
+    variant) would serve weights under the WRONG circuit numerics.
     """
     tree, extra = store.load_checkpoint(directory)
     if extra.get("deploy_schema") != DEPLOY_SCHEMA:
@@ -227,11 +260,40 @@ def load_deployment(directory: str | Path,
             f"{directory} is not a streaming deployment checkpoint "
             f"(extra.deploy_schema={extra.get('deploy_schema')!r}; "
             f"expected {DEPLOY_SCHEMA!r})")
+    missing = [k for k in ("record", "model_config", "protocol")
+               if k not in extra]
+    if missing:
+        raise ValueError(
+            f"{directory} deployment checkpoint extras are corrupt: "
+            f"missing {missing} — re-run deploy_from_sweep")
+    try:
+        model_cfg = model_config_from_dict(extra["model_config"])
+    except (KeyError, TypeError, ValueError) as e:
+        raise ValueError(
+            f"{directory} deployment checkpoint embeds a malformed "
+            f"model_config ({e!r}) — re-run deploy_from_sweep") from e
+    record = extra["record"]
+    for fld in ("t_intg_ms", "n_sub"):
+        if fld in record and record[fld] != getattr(model_cfg.p2m, fld):
+            raise ValueError(
+                f"{directory} checkpoint record/model_config mismatch: "
+                f"record.{fld}={record[fld]!r} but model_config pins "
+                f"{getattr(model_cfg.p2m, fld)!r} — the extras were "
+                f"tampered with or mixed from different deployments")
+    variant = record.get("variant") or {}
+    if ("circuit" in variant
+            and variant["circuit"] != model_cfg.p2m.leak.circuit.value):
+        raise ValueError(
+            f"{directory} checkpoint record/model_config mismatch: "
+            f"record.variant.circuit={variant['circuit']!r} but "
+            f"model_config pins {model_cfg.p2m.leak.circuit.value!r} — "
+            f"serving would run the wrong leak numerics")
     tree = jax.tree.map(jnp.asarray, tree)
     dep = Deployment(
-        model_cfg=model_config_from_dict(extra["model_config"]),
+        model_cfg=model_cfg,
         params=tree["params"], bn_state=tree["bn_state"],
-        record=extra["record"], protocol=extra["protocol"])
+        record=record, protocol=extra["protocol"],
+        meta=dict(extra.get("registry_meta") or {}))
     if artifact is not None:
         _check_against_artifact(dep, artifact)
     return dep
@@ -252,11 +314,14 @@ def _check_against_artifact(dep: Deployment,
 
 
 def deploy_from_sweep(result: Any, model_cfg: P2MModelConfig, record: dict,
-                      directory: str | Path) -> Path:
+                      directory: str | Path,
+                      meta: dict | None = None) -> Path:
     """Slice ``record``'s variant out of a ``keep_params=True``
     :class:`~repro.core.sweep.GridResult` and write its serving
     checkpoint. Frozen cells share one layer-1; unfrozen cells carry a
-    per-variant stacked layer-1 that is sliced like the backbone."""
+    per-variant stacked layer-1 that is sliced like the backbone.
+    ``meta`` (dataset, sensor_hw, ...) is persisted as the checkpoint's
+    registry metadata (see repro.stream.registry)."""
     cell = (record["t_intg_ms"], record["n_sub"])
     if cell not in result.final_params:
         raise ValueError(
@@ -276,7 +341,8 @@ def deploy_from_sweep(result: Any, model_cfg: P2MModelConfig, record: dict,
                      params={"p2m": p2m_params,
                              "backbone": take(fp["backbone"])},
                      bn_state=take(fp["state"]),
-                     record=record, protocol=result.protocol)
+                     record=record, protocol=result.protocol,
+                     meta=dict(meta or {}))
     return save_deployment(directory, dep)
 
 
@@ -342,7 +408,9 @@ def train_and_deploy(out_dir: str | Path, *, dataset: str = "synthetic-gesture",
     for proto, result in results.items():
         rec = select_record(result.records, t_intg_ms=deploy_t_intg_ms)
         ckpt_dir = out / f"ckpt_{proto}"
-        deploy_from_sweep(result, model, rec, ckpt_dir)
+        deploy_from_sweep(result, model, rec, ckpt_dir,
+                          meta={"dataset": dataset,
+                                "sensor_hw": list(data.sensor_hw)})
         checkpoints[proto] = ckpt_dir
         chosen[proto] = rec
         log(f"[deploy] {proto}: {rec['label']} @ T={rec['t_intg_ms']:g}ms "

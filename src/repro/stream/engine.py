@@ -45,7 +45,16 @@ late readout reads leaked charge; it is a correctness event, not just a
 latency sample. Predictions are bit-identical to unpaced replay on the
 same seed (pacing only inserts sleeps); per-lane and fleet-wide miss
 counters plus the miss-margin histogram land in the
-``p2m-stream-serving/v3`` stats artifact.
+``p2m-stream-serving/v4`` stats artifact.
+
+**Registry mode** (``StreamEngine(Registry(...))``,
+repro.stream.registry) serves a CATALOG of circuit variants from one
+lane table: streams request a variant at offer time, admission binds
+each lane to a registry entry (rejecting unresolvable requests), and
+``register``/``retire`` hot-swap entries mid-serve without perturbing
+lanes bound to other entries. The v4 artifact adds the ``registry``
+block (compat digest + per-entry admitted/finished/miss/throughput
+rows) and ``admission.n_rejected``.
 
 **Sharded mode** (``StreamEngine(executor=LaneExecutor(devices=n))``,
 CLI ``--devices``) maps the lane axis onto a 1-D ``"lane"`` device mesh
@@ -80,11 +89,21 @@ from repro.data.binning import bin_chunks, slot_us_for
 from repro.data.formats import EventChunk
 from repro.data.sources import EventSource
 from repro.serve.slots import ShardedSlots
-from repro.stream.accumulator import make_stream_fns
+from repro.stream.accumulator import (entry_numerics, make_multi_stream_fns,
+                                      make_stream_fns, stack_entries)
 from repro.stream.deploy import Deployment
+from repro.stream.registry import (Registry, RegistryEntry, compat_digest,
+                                   compat_key)
 from repro.stream.shard import LaneExecutor
 
-STATS_SCHEMA = "p2m-stream-serving/v3"
+STATS_SCHEMA = "p2m-stream-serving/v4"
+
+
+class EntryTableFull(RuntimeError):
+    """The engine's fixed-size per-entry param table has no reclaimable
+    slot for a newly requested registry entry (every slot still has lanes
+    bound to it). Admission REJECTS the stream; raise ``max_entries`` to
+    co-serve more simultaneous variants."""
 
 
 @dataclass
@@ -104,6 +123,10 @@ class StreamResult:
     # worst (largest) miss margin over the stream's readouts, ms;
     # negative = every readout beat its deadline; None = unpaced run
     miss_margin_max_ms: float | None = None
+    # registry entry the lane was bound to at admission ("default" on a
+    # single-deployment engine); uid disambiguates across hot-swaps
+    entry: str = "default"
+    entry_uid: int = 0
     logits: list[float] = field(default_factory=list)  # rate-decoded mean
 
 
@@ -121,6 +144,9 @@ class _Lane:
     t_cursor_us: int = 0
     n_misses: int = 0
     worst_margin_ms: float | None = None
+    entry_name: str = "default"   # registry entry bound at admission
+    entry_uid: int = 0
+    entry_slot: int = 0           # engine param-table slot of that entry
 
 
 class _BinWorker:
@@ -233,7 +259,15 @@ class ServingReport:
     n_offered: int = 0
     n_admitted: int = 0
     n_shed: int = 0               # rejected: pending queue was full
+    # rejected at admission: variant request unresolvable (no match,
+    # ambiguous, incompatible compat key, or entry table full)
+    n_rejected: int = 0
     n_deferred: int = 0           # admitted later than their offer window
+    # registry view: compat digest of the serving geometry, param-table
+    # size, and one per-entry counter row per (name, uid) ever admitted
+    registry_compat: str = ""
+    registry_max_entries: int = 1
+    entry_rows: list[dict] = field(default_factory=list)
     max_open_streams: int = 0     # peak concurrently-open replay iterators
     n_misses: int = 0             # fleet-wide deadline misses (paced)
     # one margin per (occupied lane, window) readout in paced mode:
@@ -298,8 +332,20 @@ class ServingReport:
                 "n_offered": self.n_offered,
                 "n_admitted": self.n_admitted,
                 "n_shed": self.n_shed,
+                "n_rejected": self.n_rejected,
                 "n_deferred": self.n_deferred,
                 "max_open_streams": self.max_open_streams,
+            },
+            "registry": {
+                "compat": self.registry_compat,
+                "max_entries": self.registry_max_entries,
+                "entries": [
+                    {**row,
+                     "accuracy": (row["n_correct"] / row["n_finished"]
+                                  if row["n_finished"] else 0.0),
+                     "events_per_s": row["n_events"] / wall}
+                    for row in self.entry_rows
+                ],
             },
             "deadlines": self.deadline_stats(),
             "streams": [asdict(r) for r in self.results],
@@ -326,7 +372,26 @@ class ServingReport:
 
 
 class StreamEngine:
-    """Continuous-batching online inference over one deployment.
+    """Continuous-batching online inference over one deployment — or,
+    given a :class:`~repro.stream.registry.Registry`, over a CATALOG of
+    compat-equal deployments with per-stream variant selection.
+
+    **Registry mode** (``StreamEngine(registry, ...)``): the first
+    registered entry anchors the shared serving geometry (compat key);
+    per-lane numerics live in a fixed-size param table of ``max_entries``
+    slots whose stacked bundle is an *argument* of the jitted
+    multi-variant fold/readout (repro.stream.accumulator
+    .make_multi_stream_fns) — so ``register``/``retire`` on the live
+    registry (hot-swap) re-stacks the bundle without recompiling and
+    without perturbing lanes bound to other entries. Admission resolves
+    each stream's variant request (``serve(..., variants=...)``) against
+    the registry (:meth:`Registry.resolve`); unresolvable requests (no
+    match / ambiguous / wrong compat / table full) REJECT the stream
+    (``n_rejected``) instead of guessing. A retired entry's params stay
+    in their table slot until the last lane bound to it releases, so
+    in-flight streams finish on the exact weights they were admitted
+    with. Mixed-variant serving is bit-identical per stream to
+    single-variant serving (tests/test_registry.py).
 
     ``capacity`` is the fixed lane count of the jitted steps (the decode
     batch of LM serving); ``chunks_per_window`` sets the replay
@@ -350,13 +415,40 @@ class StreamEngine:
     binned frames — deterministic for any worker count.
     """
 
-    def __init__(self, dep: Deployment, *, capacity: int = 4,
+    def __init__(self, dep: "Deployment | Registry", *, capacity: int = 4,
                  chunks_per_window: int | None = None,
                  use_kernel: bool = False, prefetch: bool = True,
                  executor: LaneExecutor | None = None,
-                 bin_workers: int | None = None):
-        cfg = dep.model_cfg.p2m
-        self.dep = dep
+                 bin_workers: int | None = None,
+                 max_entries: int | None = None,
+                 default_entry: str | None = None):
+        if isinstance(dep, Registry):
+            if len(dep) == 0:
+                raise ValueError(
+                    "registry is empty — register at least one entry "
+                    "before building a serving engine")
+            self.registry: Registry | None = dep
+            anchor = next(dep.entries())
+            self.compat = anchor.compat
+            self.dep = anchor.dep
+            self.default_entry = default_entry
+            self.max_entries = (max(len(dep) + 1, 2)
+                                if max_entries is None else max_entries)
+            if self.max_entries < len(dep):
+                raise ValueError(
+                    f"max_entries={self.max_entries} cannot hold the "
+                    f"{len(dep)} already-registered entries")
+        else:
+            if max_entries is not None or default_entry is not None:
+                raise ValueError("max_entries/default_entry require a "
+                                 "registry-backed engine")
+            self.registry = None
+            self.dep = dep
+            self.compat = compat_key(dep)
+            self.default_entry = None
+            self.max_entries = 1
+        cfg = self.dep.model_cfg.p2m
+        dep = self.dep
         self.capacity = capacity
         self.executor = executor or LaneExecutor()
         self.padded_capacity = self.executor.padded_size(capacity)
@@ -378,10 +470,75 @@ class StreamEngine:
         self.group = dep.model_cfg.coarsen_group()
         self.use_kernel = use_kernel
         self.prefetch = prefetch
-        self.fns = make_stream_fns(dep, capacity=self.padded_capacity,
-                                   chunk_slots=self.chunk_slots,
-                                   use_kernel=use_kernel,
-                                   executor=self.executor)
+        if self.registry is not None:
+            self.fns = make_multi_stream_fns(
+                dep, capacity=self.padded_capacity,
+                chunk_slots=self.chunk_slots, use_kernel=use_kernel,
+                executor=self.executor)
+            # fixed-size per-entry param table: slot i holds the numerics
+            # of one (name, uid) registration; refcounts track how many
+            # resident lanes are bound to it, so hot-swap keeps a retired
+            # entry's weights until its last lane drains. Unused slots
+            # hold the anchor's numerics as shape placeholders.
+            anchor_nb = entry_numerics(dep)
+            self._entry_slots: list[tuple[str, int] | None] = \
+                [None] * self.max_entries
+            self._entry_refs = [0] * self.max_entries
+            self._entry_nbs = [anchor_nb] * self.max_entries
+            self._bundle = stack_entries(self._entry_nbs)
+            self._entry_of = np.zeros((self.padded_capacity,), np.int32)
+        else:
+            self.fns = make_stream_fns(dep, capacity=self.padded_capacity,
+                                       chunk_slots=self.chunk_slots,
+                                       use_kernel=use_kernel,
+                                       executor=self.executor)
+
+    # -- registry param-table bookkeeping ------------------------------
+    def _slot_stale(self, slot: int) -> bool:
+        """True when the table slot's (name, uid) is no longer live in
+        the registry (retired, or the name was hot-swapped to a new
+        uid) — reclaimable once its refcount hits zero."""
+        assert self.registry is not None
+        key = self._entry_slots[slot]
+        if key is None:
+            return True
+        name, uid = key
+        return name not in self.registry or self.registry.get(name).uid != uid
+
+    def _bind_entry(self, entry: RegistryEntry) -> int:
+        """Bind one more lane to ``entry``, installing its numerics into
+        the param table on first use (re-stacking the device bundle —
+        shapes unchanged, so no recompile). Raises :class:`EntryTableFull`
+        when every slot still has lanes bound to it."""
+        key = (entry.name, entry.uid)
+        for i, k in enumerate(self._entry_slots):
+            if k == key:
+                self._entry_refs[i] += 1
+                return i
+        victim = None
+        for i in range(self.max_entries):
+            if self._entry_refs[i] == 0 and self._slot_stale(i):
+                victim = i
+                break
+        if victim is None:  # evict a live-but-unused cached entry
+            for i in range(self.max_entries):
+                if self._entry_refs[i] == 0:
+                    victim = i
+                    break
+        if victim is None:
+            raise EntryTableFull(
+                f"all {self.max_entries} entry slots have resident lanes "
+                f"(bound: {[k for k in self._entry_slots if k]}) — raise "
+                f"max_entries to co-serve more variants")
+        self._entry_slots[victim] = key
+        self._entry_nbs[victim] = entry_numerics(entry.dep)
+        self._entry_refs[victim] = 1
+        self._bundle = stack_entries(self._entry_nbs)
+        return victim
+
+    def _unbind_entry(self, slot: int) -> None:
+        assert self._entry_refs[slot] > 0
+        self._entry_refs[slot] -= 1
 
     # ------------------------------------------------------------------
     def open_stream(self, source: EventSource, key: jax.Array,
@@ -473,7 +630,8 @@ class StreamEngine:
     # ------------------------------------------------------------------
     def serve(self, source: EventSource, n_streams: int, *, seed: int = 0,
               paced: bool = False, offered_rate: float | None = None,
-              max_pending: int | None = None, log=None) -> ServingReport:
+              max_pending: int | None = None, variants=None,
+              on_window=None, log=None) -> ServingReport:
         """Serve ``n_streams`` replayed samples of ``source`` and return
         the serving report.
 
@@ -487,12 +645,35 @@ class StreamEngine:
         window counter — never by the wall clock — so paced and unpaced
         runs of the same seed serve identical streams with bit-identical
         predictions; pacing only decides *when* each window runs and
-        whether its readout missed its deadline."""
+        whether its readout missed its deadline.
+
+        ``variants`` (registry mode) carries each stream's variant
+        request — an entry name, a metadata matcher dict, or ``None``
+        for the engine's ``default_entry`` — as a sequence of length
+        ``n_streams`` or a callable ``stream_id -> request``, resolved
+        at ADMISSION time against the live registry (so a hot-swap
+        between offer and admission is honoured); unresolvable requests
+        reject the stream (``n_rejected``). ``on_window(window)`` is
+        called at the top of every window iteration — the hook tests and
+        ops use to ``register``/``retire`` registry entries mid-serve
+        (hot-swap) on the serving thread."""
         if offered_rate is not None and offered_rate <= 0:
             raise ValueError(f"offered_rate must be > 0 streams/s, got "
                              f"{offered_rate}")
         if max_pending is not None and max_pending < 0:
             raise ValueError(f"max_pending must be >= 0, got {max_pending}")
+        if variants is None:
+            req_of = lambda sid: None                         # noqa: E731
+        elif self.registry is None:
+            raise ValueError("variants requires a registry-backed engine")
+        elif callable(variants):
+            req_of = variants
+        else:
+            vlist = list(variants)
+            if len(vlist) != n_streams:
+                raise ValueError(f"variants has {len(vlist)} requests for "
+                                 f"n_streams={n_streams}")
+            req_of = lambda sid: vlist[sid]                   # noqa: E731
         key = jax.random.PRNGKey(seed)
         t_intg_s = self.dep.t_intg_ms * 1e-3
         offers_per_window = (None if offered_rate is None
@@ -517,17 +698,35 @@ class StreamEngine:
             devices=self.executor.devices, bin_workers=self.bin_workers,
             padded_capacity=self.padded_capacity,
             lanes_per_shard=self.lanes_per_shard,
-            per_shard_admitted=[0] * self.executor.devices)
+            per_shard_admitted=[0] * self.executor.devices,
+            registry_compat=compat_digest(self.compat),
+            registry_max_entries=self.max_entries)
+        # per-(name, uid) counter rows, created at first admission; the
+        # dicts are shared with report.entry_rows and mutated in place
+        rows: dict[tuple[str, int], dict] = {}
+
+        def row_of(lane: _Lane) -> dict:
+            k = (lane.entry_name, lane.entry_uid)
+            if k not in rows:
+                rows[k] = {"name": k[0], "uid": k[1], "n_admitted": 0,
+                           "n_finished": 0, "n_correct": 0, "n_misses": 0,
+                           "n_events": 0, "n_readouts": 0}
+                report.entry_rows.append(rows[k])
+            return rows[k]
+
         h, w = self.fns.in_hw
         # warmup: compile fold/readout on a throwaway state so the
         # latency percentiles measure steady-state serving, not jit
+        wx = (() if self.registry is None else
+              (jnp.zeros((self.padded_capacity,), jnp.int32), self._bundle))
         ws = self.fns.fold(self.fns.init_state(),
                            jnp.zeros((self.padded_capacity,
                                       self.chunk_slots, h, w, 2)),
-                           jnp.zeros((self.padded_capacity,), bool))
+                           jnp.zeros((self.padded_capacity,), bool), *wx)
         ws, _ = self.fns.readout(ws,
                                  jnp.zeros((self.padded_capacity,), bool),
-                                 jnp.zeros((self.padded_capacity,), bool))
+                                 jnp.zeros((self.padded_capacity,), bool),
+                                 *wx)
         jax.block_until_ready(ws["logits"])
         pool = _BinPool(self.bin_workers) if self.prefetch else None
         next_offer = 0
@@ -536,6 +735,11 @@ class StreamEngine:
         try:
             while (next_offer < n_streams or pending
                    or not slots.is_empty()):
+                # ---- ops hook (hot-swap point): runs before this
+                # window's admissions so a swap at window k governs
+                # every stream admitted at k onward ---------------------
+                if on_window is not None:
+                    on_window(window)
                 # ---- offers arriving at this window boundary ----------
                 while (next_offer < n_streams
                        and offer_window(next_offer) <= window):
@@ -552,6 +756,22 @@ class StreamEngine:
                 # ---- lazy admission into free lanes (window boundary) -
                 while pending and not slots.is_full():
                     sid, offered_w = pending.popleft()
+                    if self.registry is not None:
+                        # variant selection: resolve the stream's request
+                        # against the LIVE registry; unresolvable →
+                        # reject (never guess a variant for a sensor)
+                        try:
+                            entry = self.registry.resolve(
+                                req_of(sid), compat=self.compat,
+                                default=self.default_entry)
+                            slot_e = self._bind_entry(entry)
+                        except (LookupError, ValueError, TypeError,
+                                EntryTableFull) as e:
+                            report.n_rejected += 1
+                            if log is not None:
+                                log(f"[admission] rejected stream {sid} "
+                                    f"at window {window}: {e}")
+                            continue
                     lane = self.open_stream(
                         source, jax.random.fold_in(key, sid), sid)
                     lane.offered_window = offered_w
@@ -560,13 +780,24 @@ class StreamEngine:
                         report.n_deferred += 1
                     lane_i = slots.admit(lane)
                     assert lane_i is not None
+                    if self.registry is not None:
+                        lane.entry_name = entry.name
+                        lane.entry_uid = entry.uid
+                        lane.entry_slot = slot_e
+                        self._entry_of[lane_i] = slot_e
                     state = self.fns.reset_lane(state, lane_i)
                     report.n_admitted += 1
+                    row_of(lane)["n_admitted"] += 1
                     report.per_shard_admitted[slots.shard_of(lane_i)] += 1
                 report.max_open_streams = max(report.max_open_streams,
                                               slots.n_occupied)
                 occupied = list(slots.occupied())
                 active = jnp.asarray(slots.active_mask())
+                # registry mode: this window's per-lane entry indices +
+                # the (possibly just re-stacked) param bundle ride along
+                # as jitted-step arguments — same shapes, no recompile
+                extra = (() if self.registry is None else
+                         (jnp.asarray(self._entry_of), self._bundle))
                 # ---- paced: hold until this window's wall-clock start -
                 if paced:
                     delay = (t_start + window * t_intg_s
@@ -592,7 +823,8 @@ class StreamEngine:
                              [self._bin_part(source, ls)
                               for ls in parts_by_worker])
                     frames = self._assemble(parts)
-                    state = self.fns.fold(state, jnp.asarray(frames), active)
+                    state = self.fns.fold(state, jnp.asarray(frames),
+                                          active, *extra)
                     report.fold_s.append(time.perf_counter() - t0)
                 # ---- readout at the T_INTG boundary -------------------
                 coarse_mask = np.zeros((self.padded_capacity,), bool)
@@ -601,7 +833,8 @@ class StreamEngine:
                         (lane.windows_done + 1) % self.group == 0
                 t0 = time.perf_counter()
                 state, out = self.fns.readout(state, active,
-                                              jnp.asarray(coarse_mask))
+                                              jnp.asarray(coarse_mask),
+                                              *extra)
                 n_spikes = np.asarray(out["n_spikes"])  # window sync point
                 t_done = time.perf_counter()
                 report.readout_s.append(t_done - t0)
@@ -614,6 +847,8 @@ class StreamEngine:
                 for lane_i, lane in occupied:
                     lane.windows_done += 1
                     report.total_readouts += 1
+                    row = row_of(lane)
+                    row["n_readouts"] += 1
                     report.total_layer1_spikes += float(n_spikes[lane_i])
                     if margin_ms is not None:
                         report.miss_margin_ms.append(margin_ms)
@@ -623,6 +858,7 @@ class StreamEngine:
                         if margin_ms > 0:
                             lane.n_misses += 1
                             report.n_misses += 1
+                            row["n_misses"] += 1
                     if lane.windows_done < lane.n_windows:
                         continue
                     # stream complete: finalize rate-decoded prediction
@@ -631,6 +867,9 @@ class StreamEngine:
                               / max(n_c, 1))
                     pred = int(np.argmax(logits))
                     report.total_events += lane.n_events
+                    row["n_finished"] += 1
+                    row["n_correct"] += int(pred == lane.label)
+                    row["n_events"] += lane.n_events
                     results.append(StreamResult(
                         stream_id=lane.stream_id, label=lane.label,
                         prediction=pred, correct=pred == lane.label,
@@ -641,8 +880,11 @@ class StreamEngine:
                         finished_window=window,
                         n_misses=lane.n_misses,
                         miss_margin_max_ms=lane.worst_margin_ms,
+                        entry=lane.entry_name, entry_uid=lane.entry_uid,
                         logits=[float(v) for v in logits]))
                     slots.release(lane_i)
+                    if self.registry is not None:
+                        self._unbind_entry(lane.entry_slot)
                     if log is not None:
                         log(f"[stream {lane.stream_id}] label={lane.label} "
                             f"pred={pred} readouts={lane.windows_done} "

@@ -1,0 +1,252 @@
+"""Deployment registry: the catalog of servable checkpoints behind
+multi-variant serving.
+
+The paper's central trade-off — limited capacitor retention forcing
+per-circuit choices of integration time, thresholds, and leak
+compensation — means a fleet of P²M sensors never runs ONE checkpoint:
+each physical sensor wants the circuit variant matching its process
+corner. This module is the model catalog the serving engine
+(repro.stream.engine) selects from per stream:
+
+  * :class:`Registry` holds named :class:`RegistryEntry` rows, each a
+    deployed :class:`~repro.stream.deploy.Deployment` plus
+    self-describing metadata (circuit variant dict, dataset, protocol,
+    ``sensor_hw``, accuracy) and a **compat key** derived from the
+    artifact handshake — the canonical fingerprint of everything that
+    must match for two entries to share one serving engine (replay
+    geometry, backbone architecture, analog frontend; NOT the leak
+    variant, which is exactly what entries differ in).
+  * streams are offered with a **variant request** — an entry name, a
+    metadata matcher dict, or ``None`` for the engine default — and
+    admission resolves it against the live registry
+    (:meth:`Registry.resolve`); no match or an ambiguous match rejects
+    the stream at admission instead of mis-deploying it.
+  * **hot-swap**: :meth:`Registry.register` / :meth:`Registry.retire`
+    mutate the catalog while a serve is running. Every registration
+    gets a fresh ``uid``, so a lane bound to a retired (or re-registered)
+    entry keeps serving the exact weights it was admitted with until it
+    finishes — lanes bound to other entries are never drained.
+
+The engine-side half (per-lane stacked params, entry-table slots,
+per-entry stats ledger) lives in repro.stream.engine; the bit-exactness
+contract — a mixed-variant serve is bit-identical per stream to
+single-variant serves of the same streams — is pinned by
+tests/test_registry.py and the CI registry smoke.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Iterator, Mapping
+
+from repro.stream.deploy import (Deployment, load_deployment,
+                                 model_config_to_dict)
+
+
+def compat_key(dep: Deployment) -> str:
+    """Canonical fingerprint of the serving geometry ``dep`` requires.
+
+    Two deployments with equal compat keys can be co-served by one
+    engine: same T_INTG / n_sub replay grid, input resolution, stride,
+    channel counts, backbone architecture, analog frontend, and coarse
+    window. The leak block (circuit, mismatch, thresholds, sigma) is
+    EXCLUDED — that is the variant axis entries differ in — and so is
+    the model-default ``v_threshold`` (each record pins its resolved
+    threshold inside the variant dict). Keys are sorted before
+    serialization, so the fingerprint is reproducible across dict
+    orderings and process runs.
+    """
+    d = model_config_to_dict(dep.model_cfg)
+    d["p2m"].pop("leak", None)
+    d["p2m"].pop("v_threshold", None)
+    return json.dumps(d, sort_keys=True, separators=(",", ":"),
+                      default=float)
+
+
+def compat_digest(key: str) -> str:
+    """Short stable digest of a compat key (display / artifact field)."""
+    return hashlib.sha256(key.encode()).hexdigest()[:12]
+
+
+@dataclass(frozen=True)
+class RegistryEntry:
+    """One deployed checkpoint in the catalog.
+
+    ``uid`` is unique per *registration* (not per name): re-registering
+    a name after ``retire`` yields a new uid, which is how the engine
+    tells weights apart across a hot-swap while old lanes drain
+    naturally.
+    """
+    name: str
+    dep: Deployment
+    meta: dict
+    compat: str
+    uid: int
+
+    @property
+    def compat_digest(self) -> str:
+        return compat_digest(self.compat)
+
+    def describe(self) -> dict:
+        """JSON-safe row for artifacts and CLI summaries."""
+        return {"name": self.name, "uid": self.uid,
+                "compat": self.compat_digest, **self.meta}
+
+
+def entry_meta(dep: Deployment) -> dict:
+    """Self-describing metadata of a deployment, flat so matcher dicts
+    can address any field directly (``{"circuit": "c"}``,
+    ``{"protocol": "frozen"}``, ...). The variant dict is splatted AND
+    kept whole under ``"variant"``."""
+    variant = dict(dep.record.get("variant") or {})
+    meta = {
+        "label": dep.record.get("label"),
+        "protocol": dep.protocol,
+        "t_intg_ms": dep.t_intg_ms,
+        "n_sub": dep.model_cfg.p2m.n_sub,
+        "accuracy": dep.record.get("accuracy"),
+        "dataset": dep.meta.get("dataset"),
+        "sensor_hw": dep.meta.get("sensor_hw"),
+        "variant": variant,
+    }
+    meta.update(variant)
+    return meta
+
+
+class Registry:
+    """Mutable catalog of named deployments with resolve-at-admission
+    semantics. Mutations bump ``version`` so a running engine can GC its
+    cached per-entry params cheaply."""
+
+    def __init__(self) -> None:
+        self._entries: dict[str, RegistryEntry] = {}
+        self._next_uid = 0
+        self.version = 0
+
+    # -- CRUD -----------------------------------------------------------
+    def register(self, name: str, dep: Deployment, *,
+                 meta: Mapping | None = None) -> RegistryEntry:
+        """Add ``dep`` to the catalog under ``name``. Names are unique —
+        re-registering a live name raises (``retire`` first; the
+        retire+register pair IS the hot-swap). ``meta`` overrides /
+        extends the self-described metadata."""
+        if not name:
+            raise ValueError("registry entry name must be non-empty")
+        if name in self._entries:
+            raise ValueError(
+                f"registry entry {name!r} already exists (uid "
+                f"{self._entries[name].uid}) — retire it first to hot-swap")
+        m = entry_meta(dep)
+        if meta:
+            m.update(meta)
+        entry = RegistryEntry(name=name, dep=dep, meta=m,
+                              compat=compat_key(dep), uid=self._next_uid)
+        self._next_uid += 1
+        self._entries[name] = entry
+        self.version += 1
+        return entry
+
+    def register_checkpoint(self, name: str, directory: str | Path, *,
+                            artifact=None,
+                            meta: Mapping | None = None) -> RegistryEntry:
+        """``load_deployment`` + ``register`` in one step — the
+        checkpoint's embedded registry metadata (dataset, sensor_hw,
+        record) self-describes the entry."""
+        return self.register(name, load_deployment(directory, artifact),
+                             meta=meta)
+
+    def retire(self, name: str) -> RegistryEntry:
+        """Remove ``name`` from the catalog. Lanes already bound to it
+        keep serving its exact weights until they finish (the engine
+        holds the entry's params until its last lane releases); it just
+        stops matching new admissions."""
+        if name not in self._entries:
+            raise KeyError(f"registry has no entry {name!r} "
+                           f"(entries: {sorted(self._entries)})")
+        entry = self._entries.pop(name)
+        self.version += 1
+        return entry
+
+    # -- lookup ---------------------------------------------------------
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._entries
+
+    def get(self, name: str) -> RegistryEntry:
+        if name not in self._entries:
+            raise KeyError(f"registry has no entry {name!r} "
+                           f"(entries: {sorted(self._entries)})")
+        return self._entries[name]
+
+    def names(self) -> list[str]:
+        """Entry names in registration order."""
+        return list(self._entries)
+
+    def entries(self) -> Iterator[RegistryEntry]:
+        yield from self._entries.values()
+
+    def match(self, matcher: Mapping, *,
+              compat: str | None = None) -> list[RegistryEntry]:
+        """Entries whose metadata equals every ``matcher`` item
+        (registration order). ``compat`` additionally filters to entries
+        servable by an engine with that compat key."""
+        out = []
+        for e in self._entries.values():
+            if compat is not None and e.compat != compat:
+                continue
+            if all(e.meta.get(k) == v for k, v in matcher.items()):
+                out.append(e)
+        return out
+
+    def resolve(self, request: "str | Mapping | None" = None, *,
+                compat: str | None = None,
+                default: str | None = None) -> RegistryEntry:
+        """Admission-time variant selection.
+
+        ``request`` is an entry name (exact), a metadata matcher dict
+        (must match exactly one entry), or ``None`` → the ``default``
+        entry name when given, else the registry's sole entry. Raises
+        ``LookupError`` when nothing matches and ``ValueError`` when the
+        request is ambiguous or the matched entry is incompatible with
+        the serving engine's ``compat`` key — admission REJECTS such
+        streams rather than guessing a variant.
+        """
+        if request is None:
+            if default is not None:
+                return self.resolve(default, compat=compat)
+            if len(self._entries) == 1:
+                return self.resolve(next(iter(self._entries)), compat=compat)
+            raise ValueError(
+                f"no variant requested and no default entry set, with "
+                f"{len(self._entries)} entries registered — the request "
+                f"is ambiguous")
+        if isinstance(request, str):
+            if request not in self._entries:
+                raise LookupError(
+                    f"no registry entry named {request!r} "
+                    f"(entries: {sorted(self._entries)})")
+            entry = self._entries[request]
+            if compat is not None and entry.compat != compat:
+                raise ValueError(
+                    f"entry {request!r} is incompatible with the serving "
+                    f"engine (compat {entry.compat_digest} != engine "
+                    f"{compat_digest(compat)}) — its replay geometry or "
+                    f"architecture differs")
+            return entry
+        if isinstance(request, Mapping):
+            hits = self.match(request, compat=compat)
+            if not hits:
+                raise LookupError(
+                    f"no registry entry matches {dict(request)!r} "
+                    f"(entries: {sorted(self._entries)})")
+            if len(hits) > 1:
+                raise ValueError(
+                    f"variant request {dict(request)!r} is ambiguous: "
+                    f"matches {[e.name for e in hits]}")
+            return hits[0]
+        raise TypeError(f"variant request must be a name, a matcher "
+                        f"mapping, or None — got {type(request).__name__}")

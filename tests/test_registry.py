@@ -1,0 +1,385 @@
+"""Deployment registry + multi-variant serving (repro.stream.registry +
+the registry mode of repro.stream.engine).
+
+The headline contract is bit-exactness: a mixed-variant serve must be
+bit-identical PER STREAM to N single-variant serves of the same streams,
+on one device and on a lane mesh — the stacked per-entry bundle and the
+lax.map-then-gather execution must not change a single logit. Around
+that: registry CRUD, compat-key matching, admission rejection of
+no-match/ambiguous requests, and hot-swap residency (retire+register
+mid-serve never perturbs lanes bound to other entries).
+"""
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+
+from repro.core.codesign import P2MModelConfig  # noqa: E402
+from repro.core.leakage import CircuitConfig, LeakageConfig  # noqa: E402
+from repro.core.p2m_layer import P2MConfig  # noqa: E402
+from repro.core.snn import SpikingCNNConfig  # noqa: E402
+from repro.data import sources  # noqa: E402
+from repro.stream import deploy as deploy_mod  # noqa: E402
+from repro.stream.engine import EntryTableFull, StreamEngine  # noqa: E402
+from repro.stream.registry import (Registry, compat_digest,  # noqa: E402
+                                   compat_key, entry_meta)
+from repro.stream.shard import make_lane_executor  # noqa: E402
+
+HW = 16
+
+
+@pytest.fixture(scope="module")
+def src():
+    return sources.resolve_dataset("synthetic-gesture", hw=HW)
+
+
+def _model(circuit=CircuitConfig.BASIC, t_intg_ms=200.0, n_classes=4):
+    return P2MModelConfig(
+        p2m=P2MConfig(out_channels=8, n_sub=2, t_intg_ms=t_intg_ms,
+                      leak=LeakageConfig(circuit=circuit)),
+        backbone=SpikingCNNConfig(channels=(8, 16), input_hw=(HW, HW),
+                                  fc_hidden=32, n_classes=n_classes,
+                                  first_layer_external=True),
+        coarse_window_ms=1000.0)
+
+
+def _dep(circuit=CircuitConfig.BASIC, seed=0, **kw):
+    return deploy_mod.fresh_deployment(_model(circuit, **kw), seed=seed)
+
+
+@pytest.fixture(scope="module")
+def dep_a(src):
+    return _dep(CircuitConfig.BASIC, seed=0, n_classes=src.n_classes)
+
+
+@pytest.fixture(scope="module")
+def dep_b(src):
+    return _dep(CircuitConfig.NULLIFIED, seed=1, n_classes=src.n_classes)
+
+
+def _registry(dep_a, dep_b):
+    reg = Registry()
+    reg.register("a", dep_a)
+    reg.register("b", dep_b)
+    return reg
+
+
+class TestRegistryCrud:
+    def test_register_retire_lookup(self, dep_a, dep_b):
+        reg = Registry()
+        e = reg.register("a", dep_a)
+        assert e.name == "a" and e.uid == 0
+        assert len(reg) == 1 and "a" in reg
+        assert reg.get("a") is e
+        reg.register("b", dep_b)
+        assert reg.names() == ["a", "b"]
+        gone = reg.retire("a")
+        assert gone is e and "a" not in reg and len(reg) == 1
+
+    def test_uid_unique_per_registration(self, dep_a, dep_b):
+        """Hot-swap identity: re-registering a retired name yields a NEW
+        uid, so the engine can tell old weights from new."""
+        reg = Registry()
+        reg.register("a", dep_a)
+        reg.retire("a")
+        e2 = reg.register("a", dep_b)
+        assert e2.uid == 1
+        assert reg.version == 3          # each mutation bumps version
+
+    def test_duplicate_name_rejected(self, dep_a, dep_b):
+        reg = Registry()
+        reg.register("a", dep_a)
+        with pytest.raises(ValueError, match="already exists"):
+            reg.register("a", dep_b)
+
+    def test_empty_name_rejected(self, dep_a):
+        with pytest.raises(ValueError, match="non-empty"):
+            Registry().register("", dep_a)
+
+    def test_retire_missing_raises(self):
+        with pytest.raises(KeyError, match="no entry"):
+            Registry().retire("nope")
+        with pytest.raises(KeyError, match="no entry"):
+            Registry().get("nope")
+
+    def test_entry_is_self_describing(self, dep_a):
+        e = Registry().register("a", dep_a, meta={"site": "lab-3"})
+        assert e.meta["circuit"] == "a"          # variant splatted flat
+        assert e.meta["variant"]["circuit"] == "a"
+        assert e.meta["protocol"] == dep_a.protocol
+        assert e.meta["site"] == "lab-3"         # caller meta overlays
+        d = e.describe()
+        assert d["name"] == "a" and d["uid"] == e.uid
+        assert d["compat"] == compat_digest(e.compat)
+
+    def test_register_checkpoint_roundtrip(self, dep_a, tmp_path):
+        deploy_mod.save_deployment(tmp_path, dep_a)
+        e = Registry().register_checkpoint("ck", tmp_path)
+        assert e.compat == compat_key(dep_a)
+        assert e.meta["t_intg_ms"] == dep_a.t_intg_ms
+
+
+class TestCompatKey:
+    def test_leak_variant_excluded(self, dep_a, dep_b):
+        """The leak block is the variant axis — different circuits with
+        the same replay geometry are co-servable."""
+        assert compat_key(dep_a) == compat_key(dep_b)
+
+    def test_geometry_changes_key(self, src, dep_a):
+        other = _dep(t_intg_ms=100.0, n_classes=src.n_classes)
+        assert compat_key(other) != compat_key(dep_a)
+
+    def test_key_is_canonical_json(self, dep_a):
+        key = compat_key(dep_a)
+        import json
+        d = json.loads(key)
+        assert "leak" not in d["p2m"] and "v_threshold" not in d["p2m"]
+        assert key == json.dumps(d, sort_keys=True, separators=(",", ":"))
+        assert len(compat_digest(key)) == 12
+
+
+class TestResolve:
+    def test_by_name_and_default(self, dep_a, dep_b):
+        reg = _registry(dep_a, dep_b)
+        assert reg.resolve("b").name == "b"
+        assert reg.resolve(None, default="b").name == "b"
+        solo = Registry()
+        solo.register("only", dep_a)
+        assert solo.resolve(None).name == "only"
+
+    def test_matcher_must_be_unique(self, dep_a, dep_b):
+        reg = _registry(dep_a, dep_b)
+        assert reg.resolve({"circuit": "c"}).name == "b"
+        with pytest.raises(ValueError, match="ambiguous"):
+            reg.resolve({"protocol": dep_a.protocol})
+        with pytest.raises(LookupError, match="no registry entry"):
+            reg.resolve({"circuit": "zz"})
+
+    def test_no_match_and_no_default(self, dep_a, dep_b):
+        reg = _registry(dep_a, dep_b)
+        with pytest.raises(LookupError, match="no registry entry"):
+            reg.resolve("nope")
+        with pytest.raises(ValueError, match="ambiguous"):
+            reg.resolve(None)            # two entries, no default
+        with pytest.raises(TypeError, match="variant request"):
+            reg.resolve(3.14)
+
+    def test_compat_filter(self, src, dep_a, dep_b):
+        reg = _registry(dep_a, dep_b)
+        weird = _dep(t_intg_ms=100.0, n_classes=src.n_classes)
+        reg.register("weird", weird)
+        anchor = compat_key(dep_a)
+        with pytest.raises(ValueError, match="incompatible"):
+            reg.resolve("weird", compat=anchor)
+        # matchers silently skip incompatible entries
+        assert all(e.name != "weird"
+                   for e in reg.match({"protocol": dep_a.protocol},
+                                      compat=anchor))
+
+    def test_entry_meta_fields(self, dep_a):
+        m = entry_meta(dep_a)
+        assert m["t_intg_ms"] == dep_a.t_intg_ms
+        assert m["n_sub"] == dep_a.model_cfg.p2m.n_sub
+        assert m["circuit"] == dep_a.record["variant"]["circuit"]
+
+
+class TestRegistryServing:
+    VARIANTS = ["a", "b", "a", "b", "b", "a"]
+    N = 6
+
+    @pytest.fixture(scope="class")
+    def mixed(self, src, dep_a, dep_b):
+        eng = StreamEngine(_registry(dep_a, dep_b), capacity=3)
+        return eng.serve(src, self.N, seed=0, variants=list(self.VARIANTS))
+
+    @pytest.fixture(scope="class")
+    def singles(self, src, dep_a, dep_b):
+        out = {}
+        for name, dep in (("a", dep_a), ("b", dep_b)):
+            rep = StreamEngine(dep, capacity=3).serve(src, self.N, seed=0)
+            out[name] = {r.stream_id: r for r in rep.results}
+        return out
+
+    def test_mixed_bit_identical_to_singles(self, mixed, singles):
+        """HEADLINE: per stream, the mixed-variant serve reproduces the
+        single-variant serve of the entry it was bound to, bit for bit."""
+        assert len(mixed.results) == self.N
+        for r in mixed.results:
+            assert r.entry == self.VARIANTS[r.stream_id]
+            s = singles[r.entry][r.stream_id]
+            np.testing.assert_array_equal(np.asarray(r.logits),
+                                          np.asarray(s.logits))
+            assert r.prediction == s.prediction
+            assert r.n_events == s.n_events
+            assert r.n_readouts == s.n_readouts
+
+    def test_artifact_registry_block(self, mixed):
+        art = mixed.to_artifact()
+        assert art["schema"] == "p2m-stream-serving/v4"
+        assert art["admission"]["n_rejected"] == 0
+        reg = art["registry"]
+        assert reg["compat"] and reg["max_entries"] >= 2
+        rows = {e["name"]: e for e in reg["entries"]}
+        assert set(rows) == {"a", "b"}
+        assert rows["a"]["n_admitted"] == self.VARIANTS.count("a")
+        assert rows["b"]["n_admitted"] == self.VARIANTS.count("b")
+        assert sum(e["n_finished"] for e in reg["entries"]) == self.N
+        assert sum(e["n_readouts"] for e in reg["entries"]) == \
+            mixed.total_readouts
+        for s in art["streams"]:
+            assert s["entry"] in rows
+            assert s["entry_uid"] == rows[s["entry"]]["uid"]
+
+    def test_paced_mixed_serve_bit_identical(self, src, dep_a, dep_b,
+                                             singles):
+        """The acceptance bar names the PACED serve: pacing decides when
+        windows run, never what they compute, so the paced mixed serve
+        is bit-identical per stream to the single-variant serves too."""
+        paced = StreamEngine(_registry(dep_a, dep_b), capacity=3).serve(
+            src, self.N, seed=0, paced=True, variants=list(self.VARIANTS))
+        assert paced.to_artifact()["paced"]
+        assert len(paced.results) == self.N
+        for r in paced.results:
+            s = singles[r.entry][r.stream_id]
+            np.testing.assert_array_equal(np.asarray(r.logits),
+                                          np.asarray(s.logits))
+            assert r.prediction == s.prediction
+
+    def test_rejection_ledger(self, src, dep_a, dep_b):
+        """Unknown names and ambiguous matchers are rejected at
+        admission and accounted: offered = admitted + shed + rejected."""
+        rep = StreamEngine(_registry(dep_a, dep_b), capacity=2).serve(
+            src, 3, seed=0,
+            variants=["a", "nope", {"protocol": dep_a.protocol}])
+        assert len(rep.results) == 1
+        assert rep.n_rejected == 2
+        assert rep.n_offered == rep.n_admitted + rep.n_shed + rep.n_rejected
+        art = rep.to_artifact()
+        assert art["admission"]["n_rejected"] == 2
+
+    def test_variants_require_registry(self, src, dep_a):
+        eng = StreamEngine(dep_a, capacity=2)
+        with pytest.raises(ValueError, match="registry"):
+            eng.serve(src, 2, seed=0, variants=["a", "a"])
+
+    def test_legacy_engine_rejects_registry_kwargs(self, dep_a):
+        with pytest.raises(ValueError, match="registry"):
+            StreamEngine(dep_a, capacity=2, max_entries=4)
+
+    def test_empty_registry_rejected(self):
+        with pytest.raises(ValueError, match="empty"):
+            StreamEngine(Registry(), capacity=2)
+
+    def test_max_entries_floor(self, dep_a, dep_b):
+        with pytest.raises(ValueError, match="max_entries"):
+            StreamEngine(_registry(dep_a, dep_b), capacity=2, max_entries=1)
+
+
+class TestHotSwap:
+    def test_hot_swap_keeps_other_lanes_bit_identical(self, src, dep_a,
+                                                      dep_b):
+        """Retire+register mid-serve: the lane already bound to the old
+        uid finishes on the old weights, the post-swap request resolves
+        to the new entry, and lanes bound to 'a' are bit-identical to a
+        single-variant serve — the swap never perturbs them."""
+        reg = _registry(dep_a, dep_b)
+        eng = StreamEngine(reg, capacity=2, max_entries=3,
+                           default_entry="a")
+        swapped = []
+
+        def swap(window):
+            if window == 2 and "b" in reg:
+                old = reg.retire("b")
+                new = reg.register(
+                    "b2", _dep(CircuitConfig.NULLIFIED, seed=7,
+                               n_classes=src.n_classes))
+                swapped.append((old.uid, new.uid))
+
+        rep = eng.serve(src, 4, seed=0, variants=["a", "b", "b2", None],
+                        on_window=swap)
+        assert swapped and swapped[0][0] != swapped[0][1]
+        assert len(rep.results) == 4
+        by_sid = {r.stream_id: r for r in rep.results}
+        assert by_sid[1].entry == "b"     # admitted pre-swap, kept weights
+        assert by_sid[2].entry == "b2"    # post-swap request resolves
+        assert by_sid[0].entry == by_sid[3].entry == "a"
+        single = StreamEngine(dep_a, capacity=2).serve(src, 4, seed=0)
+        ref = {r.stream_id: r for r in single.results}
+        for r in rep.results:
+            if r.entry == "a":
+                np.testing.assert_array_equal(np.asarray(r.logits),
+                                              np.asarray(ref[r.stream_id].logits))
+        rows = {e["name"]: e for e in rep.to_artifact()["registry"]["entries"]}
+        assert rows["b"]["n_finished"] == 1
+        assert rows["b2"]["n_finished"] == 1
+
+    def test_entry_table_full_rejects(self, src, dep_a, dep_b):
+        """With every entry slot pinned by resident lanes, a request for
+        a freshly registered entry is REJECTED (EntryTableFull), not
+        mis-deployed — and serving continues."""
+        reg = Registry()
+        reg.register("a", dep_a)
+        # capacity 3 so the "b" stream is offered while both "a" lanes
+        # are still resident — the sole entry slot is pinned (refs > 0)
+        eng = StreamEngine(reg, capacity=3, max_entries=1)
+
+        def swap(window):
+            if window == 0 and "b" not in reg:
+                reg.register("b", dep_b)
+
+        rep = eng.serve(src, 3, seed=0, variants=["a", "a", "b"],
+                        on_window=swap)
+        assert rep.n_rejected == 1
+        assert {r.entry for r in rep.results} == {"a"}
+        assert len(rep.results) == 2
+
+    def test_slot_reclaimed_after_release(self, src, dep_a, dep_b):
+        """Once the last lane bound to a retired entry releases, its
+        entry slot is reclaimed for new registrations (serially: serve
+        'a' to completion, swap, then serve 'b' on the same engine)."""
+        reg = Registry()
+        reg.register("a", dep_a)
+        eng = StreamEngine(reg, capacity=2, max_entries=1)
+        r1 = eng.serve(src, 2, seed=0)
+        assert all(r.entry == "a" for r in r1.results)
+        reg.retire("a")
+        reg.register("b", dep_b)
+        r2 = eng.serve(src, 2, seed=0, variants=["b", "b"])
+        assert all(r.entry == "b" for r in r2.results)
+        assert r2.n_rejected == 0
+
+
+@pytest.mark.skipif(jax.device_count() < 2,
+                    reason="needs >1 device (run under XLA_FLAGS="
+                           "--xla_force_host_platform_device_count=8)")
+class TestShardedRegistryServing:
+    def test_sharded_mixed_serve_bit_identical(self, src, dep_a, dep_b):
+        """Acceptance bar: the mixed-variant serve is bit-identical on a
+        >=2-device lane mesh to the single-device serve — the stacked
+        bundle is replicated (P_REP) while lane state shards."""
+        n_dev = min(2, jax.device_count())
+        variants = ["a", "b", "b", "a", "b", "a"]
+        r1 = StreamEngine(_registry(dep_a, dep_b), capacity=4).serve(
+            src, 6, seed=0, variants=list(variants))
+        r2 = StreamEngine(_registry(dep_a, dep_b), capacity=4,
+                          executor=make_lane_executor(n_dev)).serve(
+            src, 6, seed=0, variants=list(variants))
+        a1 = {r.stream_id: r for r in r1.results}
+        a2 = {r.stream_id: r for r in r2.results}
+        assert set(a1) == set(a2) == set(range(6))
+        for sid in a1:
+            np.testing.assert_array_equal(np.asarray(a1[sid].logits),
+                                          np.asarray(a2[sid].logits))
+            assert a1[sid].entry == a2[sid].entry
+            assert a1[sid].prediction == a2[sid].prediction
+        art = r2.to_artifact()
+        assert art["sharding"]["devices"] == n_dev
+        assert sum(e["n_admitted"] for e in art["registry"]["entries"]) == 6
+        # and paced on the mesh: same streams, same bits
+        r3 = StreamEngine(_registry(dep_a, dep_b), capacity=4,
+                          executor=make_lane_executor(n_dev)).serve(
+            src, 6, seed=0, paced=True, variants=list(variants))
+        for r in r3.results:
+            np.testing.assert_array_equal(np.asarray(r.logits),
+                                          np.asarray(a1[r.stream_id].logits))
+            assert r.entry == a1[r.stream_id].entry

@@ -1,0 +1,206 @@
+"""Property-based invariants for the serving slot managers
+(repro.serve.slots.SlotManager / ShardedSlots).
+
+One model-based driver runs random admit / release / refill / swap
+sequences against a ShardedSlots and a devices=1 SlotManager side by
+side, checking after EVERY operation:
+
+  * no lane is ever double-assigned (an admit only ever returns a lane
+    that was free, and every occupied lane holds exactly one item);
+  * a padding lane is never admitted, released, swapped, or reported
+    active — real lanes are exactly the globals [0, capacity);
+  * shard-major placement is identical to devices=1 — the lane index
+    returned for every admit, the refill placements, and the full
+    active mask match the plain SlotManager lane-for-lane (this is the
+    invariant that makes sharded serving replay-identical);
+  * counters (n_occupied, n_free, per-shard sums) agree with the model.
+
+The suite runs under hypothesis when installed; a seeded random-walk
+fallback drives the same checker otherwise, so the invariants are
+always exercised.
+"""
+import random
+from collections import deque
+
+import pytest
+
+from repro.serve.slots import ShardedSlots, SlotManager
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+MAX_EXAMPLES = 25
+
+# op codes for the random walk: (kind, argument)
+ADMIT, RELEASE, REFILL, SWAP = range(4)
+
+
+def _check_invariants(sh, ref, model):
+    """``model`` is the oracle dict {lane: item} of what must be live."""
+    assert sh.n_occupied == ref.n_occupied == len(model)
+    assert sh.n_free == ref.n_free == sh.capacity - len(model)
+    assert sh.is_full() == ref.is_full()
+    assert sh.is_empty() == ref.is_empty()
+    mask = sh.active_mask()
+    assert len(mask) == sh.padded_capacity
+    assert mask[:sh.capacity] == ref.active_mask()
+    # padding lanes are NEVER active
+    assert not any(mask[sh.capacity:])
+    # each occupied lane holds exactly the modeled item, in lane order
+    occ = list(sh.occupied())
+    assert occ == sorted(model.items())
+    assert list(ref.occupied()) == occ
+    assert sum(sh.per_shard_occupied()) == len(model)
+
+
+def _apply_ops(capacity, devices, ops):
+    """Drive both managers through ``ops`` and check invariants after
+    every step. ``ops`` is a list of (op_code, int_arg) pairs; arguments
+    are reduced modulo whatever the op needs, so any integer sequence is
+    a valid walk."""
+    ref = SlotManager(capacity)
+    sh = ShardedSlots(capacity, devices=devices)
+    model = {}
+    next_item = 0
+    for code, arg in ops:
+        if code == ADMIT:
+            item = f"s{next_item}"
+            next_item += 1
+            lane_sh = sh.admit(item)
+            lane_ref = ref.admit(item)
+            assert lane_sh == lane_ref          # shard-major == devices=1
+            if lane_sh is None:
+                assert len(model) == capacity   # only full rejects
+            else:
+                assert lane_sh not in model     # never double-assign
+                assert 0 <= lane_sh < capacity  # never a padding lane
+                # admit fills the LOWEST free lane
+                assert all(lane in model for lane in range(lane_sh))
+                model[lane_sh] = item
+        elif code == RELEASE:
+            if model:
+                lane = sorted(model)[arg % len(model)]
+                got_sh = sh.release(lane)
+                got_ref = ref.release(lane)
+                assert got_sh == got_ref == model.pop(lane)
+            else:
+                with pytest.raises(ValueError):
+                    sh.release(arg % capacity)
+                with pytest.raises(ValueError):
+                    ref.release(arg % capacity)
+        elif code == REFILL:
+            n = arg % (capacity + 2)
+            items = [f"s{next_item + i}" for i in range(n)]
+            next_item += n
+            placed = ref.refill(deque(items))
+            # ShardedSlots has no refill (the engine admits one stream
+            # at a time); the equivalence claim is that repeated admits
+            # place the SAME items on the SAME lanes.
+            for lane, item in placed:
+                assert sh.admit(item) == lane
+                assert lane not in model and 0 <= lane < capacity
+                model[lane] = item
+            assert len(placed) == min(n, capacity - (len(model) - len(placed)))
+        elif code == SWAP:
+            if model:
+                lane = sorted(model)[arg % len(model)]
+                item = f"s{next_item}"
+                next_item += 1
+                old_sh = sh.swap(lane, item)
+                assert old_sh == model[lane]
+                assert ref.swap(lane, item) == old_sh
+                model[lane] = item
+                # swap never frees the lane
+                assert sh.active_mask()[lane]
+            else:
+                with pytest.raises(ValueError, match="free"):
+                    sh.swap(arg % capacity, "x")
+                with pytest.raises(ValueError, match="free"):
+                    ref.swap(arg % capacity, "x")
+        _check_invariants(sh, ref, model)
+    return model
+
+
+def _random_walk(rng, n_ops):
+    return [(rng.randrange(4), rng.randrange(1 << 16)) for _ in range(n_ops)]
+
+
+# ---------------------------------------------------------------------------
+# seeded fallback walks — always run, hypothesis or not
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", range(8))
+@pytest.mark.parametrize("capacity,devices", [(1, 1), (4, 1), (4, 2),
+                                              (3, 2), (5, 4), (2, 4),
+                                              (7, 3)])
+def test_random_walks_hold_invariants(capacity, devices, seed):
+    rng = random.Random(seed * 1000 + capacity * 10 + devices)
+    _apply_ops(capacity, devices, _random_walk(rng, 60))
+
+
+def test_admit_heavy_walk_fills_then_rejects():
+    """An admit-only walk fills lanes 0..capacity-1 in order, then every
+    further admit returns None on both managers."""
+    model = _apply_ops(5, 2, [(ADMIT, 0)] * 8)
+    assert sorted(model) == list(range(5))
+
+
+def test_padding_lane_operations_rejected():
+    sh = ShardedSlots(3, devices=2)       # lane 3 is padding
+    sh.admit("a")
+    for lane in range(3, sh.padded_capacity):
+        with pytest.raises(ValueError, match="padding"):
+            sh.release(lane)
+        with pytest.raises(ValueError, match="padding"):
+            sh.swap(lane, "x")
+    with pytest.raises(ValueError, match="outside"):
+        sh.shard_of(sh.padded_capacity)
+
+
+def test_swap_is_invisible_to_placement():
+    """Swapping a resident lane must not change where the NEXT admit
+    lands — the lane never transits through the free state."""
+    sh = ShardedSlots(4, devices=2)
+    ref = SlotManager(4)
+    for item in ("a", "b", "c"):
+        assert sh.admit(item) == ref.admit(item)
+    assert sh.swap(1, "b2") == ref.swap(1, "b2") == "b"
+    assert sh.admit("d") == ref.admit("d") == 3
+    assert sh.admit("e") is ref.admit("e") is None
+
+
+# ---------------------------------------------------------------------------
+# hypothesis-driven walks — arbitrary op sequences, minimized on failure
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=MAX_EXAMPLES, deadline=None)
+    @given(capacity=st.integers(1, 9),
+           devices=st.integers(1, 5),
+           ops=st.lists(st.tuples(st.integers(0, 3),
+                                  st.integers(0, 1 << 16)),
+                        max_size=80))
+    def test_hypothesis_walks_hold_invariants(capacity, devices, ops):
+        _apply_ops(capacity, devices, ops)
+
+    @settings(max_examples=MAX_EXAMPLES, deadline=None)
+    @given(capacity=st.integers(1, 9), devices=st.integers(1, 5),
+           n=st.integers(0, 12))
+    def test_hypothesis_refill_matches_admit_loop(capacity, devices, n):
+        """refill(queue) on the reference manager and an admit loop on
+        the sharded manager place identical items on identical lanes and
+        leave identical leftovers."""
+        ref = SlotManager(capacity)
+        sh = ShardedSlots(capacity, devices=devices)
+        q = deque(f"s{i}" for i in range(n))
+        placed = ref.refill(q)
+        assert len(placed) == min(n, capacity)
+        assert len(q) == n - len(placed)
+        for lane, item in placed:
+            assert sh.admit(item) == lane
+        assert sh.active_mask()[:capacity] == ref.active_mask()

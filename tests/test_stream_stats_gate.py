@@ -1,0 +1,290 @@
+"""The version-aware serving-stats gate (tools/check_stream_stats.py)
+on handcrafted artifacts: v2/v3/v4 records pass, and every class of
+corruption the gate exists to catch — ledger imbalance, per-entry sums
+that leak streams, streams bound to absent entries, duplicate rows,
+missing per-version keys, unrecognized schemas — fails with a pointed
+error. Engine-emitted artifacts are gated in test_streaming.py /
+test_registry.py; this file pins the CHECKER itself, so a gate
+regression can't silently wave broken artifacts through CI.
+"""
+import copy
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def _gate():
+    tools = str(REPO / "tools")
+    if tools not in sys.path:
+        sys.path.insert(0, tools)
+    import check_stream_stats
+    return check_stream_stats
+
+
+def _v4(paced=False):
+    """A minimal internally consistent v4 artifact: 3 streams over two
+    registry entries, one rejected offer."""
+    streams = []
+    for sid, (entry, uid, miss) in enumerate(
+            [("a", 0, 0), ("b", 1, 1 if paced else 0), ("a", 0, 0)]):
+        streams.append({
+            "stream_id": sid, "label": sid % 2, "prediction": sid % 2,
+            "correct": True, "n_events": 100 + sid, "n_readouts": 4,
+            "n_coarse_frames": 2, "offered_window": sid,
+            "admitted_window": sid, "finished_window": sid + 4,
+            "n_misses": miss, "logits": [0.1, 0.9],
+            "entry": entry, "entry_uid": uid})
+    n_miss = sum(s["n_misses"] for s in streams)
+    return {
+        "schema": "p2m-stream-serving/v4",
+        "deployed": {"label": "x", "protocol": "frozen"},
+        "n_streams": 3, "capacity": 2, "chunks_per_window": 4,
+        "t_intg_ms": 100.0, "accuracy": 1.0, "paced": paced,
+        "admission": {"offered_rate": None, "max_pending": 4,
+                      "n_offered": 4, "n_admitted": 3, "n_shed": 0,
+                      "n_rejected": 1, "n_deferred": 1,
+                      "max_open_streams": 2},
+        "deadlines": {"n_deadlines": 12 if paced else 0,
+                      "n_misses": n_miss,
+                      "miss_rate": n_miss / 12 if paced else 0.0,
+                      "margin_ms": {"p50": 50.0, "p90": 20.0, "p99": 5.0,
+                                    "max": 80.0},
+                      "histogram": {"<=0ms": n_miss}},
+        "streams": streams,
+        "latency_ms": {"readout_p50": 1.0, "readout_p99": 2.0,
+                       "readout_mean": 1.2, "fold_p50": 0.5,
+                       "fold_p99": 0.9},
+        "throughput": {"wall_s": 1.5, "events_per_s": 200.0,
+                       "events_per_s_per_device": 100.0,
+                       "readouts_per_s": 8.0, "streams_per_s": 2.0},
+        "sharding": {"devices": 2, "bin_workers": 2, "padded_capacity": 2,
+                     "lanes_per_shard": 1, "per_shard_admitted": [2, 1]},
+        "registry": {
+            "compat": "deadbeef0123", "max_entries": 3,
+            "entries": [
+                {"name": "a", "uid": 0, "n_admitted": 2, "n_finished": 2,
+                 "n_correct": 2, "n_misses": 0, "n_events": 203,
+                 "n_readouts": 8, "accuracy": 1.0, "events_per_s": 135.0},
+                {"name": "b", "uid": 1, "n_admitted": 1, "n_finished": 1,
+                 "n_correct": 1, "n_misses": n_miss, "n_events": 101,
+                 "n_readouts": 4, "accuracy": 1.0, "events_per_s": 67.0},
+            ]},
+    }
+
+
+def _v3():
+    art = _v4()
+    art["schema"] = "p2m-stream-serving/v3"
+    del art["registry"]
+    del art["admission"]["n_rejected"]
+    art["admission"]["n_offered"] = 3          # no rejected leg in v3
+    for s in art["streams"]:
+        del s["entry"], s["entry_uid"]
+    return art
+
+
+def _v2():
+    art = _v3()
+    art["schema"] = "p2m-stream-serving/v2"
+    del art["sharding"]
+    del art["throughput"]["events_per_s_per_device"]
+    return art
+
+
+@pytest.fixture()
+def gate():
+    return _gate()
+
+
+class TestVersions:
+    def test_v4_passes(self, gate):
+        assert gate.check(_v4()) == []
+        assert gate.check(_v4(paced=True), paced=True,
+                          max_miss_rate=50.0) == []
+        assert gate.schema_version(_v4()) == 4
+
+    def test_v3_passes(self, gate):
+        assert gate.check(_v3()) == []
+        assert gate.schema_version(_v3()) == 3
+
+    def test_v2_passes(self, gate):
+        assert gate.check(_v2()) == []
+        assert gate.schema_version(_v2()) == 2
+
+    @pytest.mark.parametrize("schema", ["p2m-stream-serving/v1",
+                                        "p2m-stream-serving/v99",
+                                        "p2m-stream-serving/vx",
+                                        "something-else", None, 4])
+    def test_unrecognized_schema_rejected(self, gate, schema):
+        art = _v4()
+        art["schema"] = schema
+        errs = gate.check(art)
+        assert len(errs) == 1 and "unrecognized schema" in errs[0]
+        assert gate.schema_version(art) is None
+
+    def test_older_versions_do_not_require_newer_keys(self, gate):
+        """A v2 artifact must NOT be failed for lacking sharding or
+        registry blocks — the gate is version-aware, not
+        latest-version-only."""
+        art = _v2()
+        assert "sharding" not in art and "registry" not in art
+        assert gate.check(art) == []
+
+    def test_v4_requires_new_blocks(self, gate):
+        for key in ("registry", "sharding"):
+            art = _v4()
+            del art[key]
+            assert any(key in e for e in gate.check(art)), key
+        art = _v4()
+        del art["admission"]["n_rejected"]
+        assert any("n_rejected" in e for e in gate.check(art))
+        art = _v4()
+        del art["streams"][1]["entry"]
+        assert any("entry" in e for e in gate.check(art))
+
+
+class TestLedgers:
+    def test_admission_ledger_imbalance(self, gate):
+        art = _v4()
+        art["admission"]["n_offered"] = 99
+        assert any("ledger does not balance" in e for e in gate.check(art))
+
+    def test_rejected_counts_in_v4_ledger(self, gate):
+        """offered = admitted + shed + REJECTED: dropping the rejected
+        leg from the sum must unbalance the ledger."""
+        art = _v4()
+        art["admission"]["n_rejected"] = 0
+        errs = gate.check(art)
+        assert any("ledger does not balance" in e for e in errs)
+
+    def test_stream_count_mismatch(self, gate):
+        assert any("expected 7 streams" in e
+                   for e in gate.check(_v4(), n_streams=7))
+        art = _v4()
+        art["n_streams"] = 2
+        assert any("n_streams" in e for e in gate.check(art))
+
+    def test_per_entry_sums_must_match_fleet(self, gate):
+        for field in ("n_admitted", "n_finished", "n_misses"):
+            art = _v4()
+            art["registry"]["entries"][0][field] += 1
+            errs = gate.check(art)
+            assert any(f"per-entry {field}" in e for e in errs), (field,
+                                                                  errs)
+
+    def test_stream_bound_to_absent_entry(self, gate):
+        art = _v4()
+        art["streams"][2]["entry"] = "ghost"
+        assert any("absent from registry" in e for e in gate.check(art))
+        # same name but a different uid (stale hot-swap binding) is
+        # ALSO absent — uid is part of the binding
+        art = _v4()
+        art["streams"][2]["entry_uid"] = 9
+        assert any("absent from registry" in e for e in gate.check(art))
+
+    def test_entry_finished_vs_bound_streams(self, gate):
+        art = _v4()
+        # shuffle one stream from a to b without touching the rows
+        art["streams"][2]["entry"] = "b"
+        art["streams"][2]["entry_uid"] = 1
+        errs = gate.check(art)
+        assert any("streams bound to it" in e for e in errs)
+
+    def test_duplicate_entry_rows(self, gate):
+        art = _v4()
+        art["registry"]["entries"].append(
+            copy.deepcopy(art["registry"]["entries"][0]))
+        assert any("duplicate row" in e for e in gate.check(art))
+
+    def test_entry_row_ranges(self, gate):
+        art = _v4()
+        art["registry"]["entries"][0]["accuracy"] = 1.5
+        assert any("accuracy out of range" in e for e in gate.check(art))
+        art = _v4()
+        art["registry"]["entries"][0]["n_correct"] = 99
+        assert any("n_correct" in e for e in gate.check(art))
+
+    def test_registry_scalars(self, gate):
+        art = _v4()
+        art["registry"]["compat"] = ""
+        assert any("compat" in e for e in gate.check(art))
+        art = _v4()
+        art["registry"]["max_entries"] = 0
+        assert any("max_entries" in e for e in gate.check(art))
+        art = _v4()
+        del art["registry"]["entries"][0]["uid"]
+        assert any("entries[0] missing" in e for e in gate.check(art))
+
+
+class TestSharedChecks:
+    def test_sharding_checks_still_apply(self, gate):
+        art = _v4()
+        art["sharding"]["per_shard_admitted"] = [1, 1]
+        assert any("per-shard admits" in e for e in gate.check(art))
+        art = _v4()
+        art["sharding"]["lanes_per_shard"] = 5
+        assert any("geometry" in e for e in gate.check(art))
+
+    def test_paced_flags(self, gate):
+        assert any("not a paced run" in e
+                   for e in gate.check(_v4(), paced=True))
+        art = _v4(paced=True)
+        errs = gate.check(art, max_miss_rate=1.0)
+        assert any("miss rate" in e for e in errs)
+
+    def test_unpaced_must_not_carry_deadlines(self, gate):
+        art = _v4()
+        art["deadlines"]["n_deadlines"] = 5
+        assert any("unpaced run carries" in e for e in gate.check(art))
+
+    def test_stream_counters(self, gate):
+        art = _v4()
+        art["streams"][0]["n_events"] = 0
+        assert any("empty serving counters" in e for e in gate.check(art))
+        art = _v4()
+        art["streams"][0]["n_misses"] = 99
+        assert any("miss counter out of range" in e
+                   for e in gate.check(art))
+
+    def test_malformed_inputs_error_not_crash(self, gate):
+        """Structurally broken artifacts must come back as error lists,
+        never exceptions."""
+        assert gate.check({}) != []
+        assert gate.check({"schema": "p2m-stream-serving/v4"}) != []
+        art = _v4()
+        art["streams"] = [{}]
+        assert any("stream[0] missing" in e for e in gate.check(art))
+        art = _v4()
+        art["registry"] = {}
+        assert any("registry missing" in e for e in gate.check(art))
+        art = _v4()
+        art["deadlines"] = {}
+        assert any("deadlines missing" in e for e in gate.check(art))
+
+
+class TestCli:
+    def _run(self, tmp_path, art, *flags):
+        p = tmp_path / "art.json"
+        p.write_text(json.dumps(art))
+        return subprocess.run(
+            [sys.executable, str(REPO / "tools" / "check_stream_stats.py"),
+             str(p), *flags], capture_output=True, text=True, timeout=120)
+
+    def test_cli_ok_lines(self, tmp_path):
+        for art, note in ((_v4(), "registry entries"), (_v3(), "v3"),
+                          (_v2(), "v2")):
+            proc = self._run(tmp_path, art, "--streams", "3")
+            assert proc.returncode == 0, proc.stderr
+            assert "OK" in proc.stdout and note in proc.stdout
+
+    def test_cli_fails_on_corruption(self, tmp_path):
+        art = _v4()
+        art["registry"]["entries"][0]["n_admitted"] = 9
+        proc = self._run(tmp_path, art)
+        assert proc.returncode == 1
+        assert "per-entry n_admitted" in proc.stderr

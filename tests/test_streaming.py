@@ -327,6 +327,96 @@ class TestDeployment:
         with pytest.raises(ValueError, match="not a streaming deployment"):
             deploy_mod.load_deployment(tmp_path)
 
+    def test_select_record_deterministic_tie_break(self):
+        """Equal-accuracy records must pick the SAME winner regardless of
+        list order and of the variant-dict key order — registry compat
+        keys (and the served weights) must be reproducible across
+        processes with different dict orderings."""
+        import random
+        a = {"label": "c@m=0.06", "protocol": "frozen", "t_intg_ms": 100.0,
+             "n_sub": 2, "accuracy": 0.5,
+             "variant": {"circuit": "c", "mismatch": 0.06}}
+        b = {"label": "a", "protocol": "frozen", "t_intg_ms": 100.0,
+             "n_sub": 2, "accuracy": 0.5, "variant": {"circuit": "a"}}
+        c = {"label": "a", "protocol": "unfrozen", "t_intg_ms": 100.0,
+             "n_sub": 2, "accuracy": 0.5, "variant": {"circuit": "a"}}
+        # same content, reversed variant-dict insertion order
+        a2 = dict(a, variant={"mismatch": 0.06, "circuit": "c"})
+        pools = [[a, b, c], [c, b, a], [b, a2, c], [c, a2, b]]
+        winners = [deploy_mod.select_record(p) for p in pools]
+        assert all(w["label"] == winners[0]["label"]
+                   and w["protocol"] == winners[0]["protocol"]
+                   for w in winners)
+        # label then protocol break the tie: "a"/frozen sorts first
+        assert winners[0]["label"] == "a"
+        assert winners[0]["protocol"] == "frozen"
+        # accuracy still dominates any tie-break field
+        best = dict(b, accuracy=0.9)
+        assert deploy_mod.select_record([a, best, c]) is best
+        # untrained records (accuracy=None) sort without crashing
+        untrained = [dict(a, accuracy=None), dict(b, accuracy=None)]
+        random.Random(0).shuffle(untrained)
+        assert deploy_mod.select_record(untrained)["label"] == "a"
+
+    def _tamper(self, ckpt, mutate):
+        """Rewrite the checkpoint's extras via ``mutate(extra) -> extra``
+        (the on-disk corruption load_deployment must refuse)."""
+        import json as json_mod
+        from pathlib import Path
+        (step_dir,) = [p for p in Path(ckpt).iterdir()
+                       if p.name.startswith("step_") and p.is_dir()]
+        idx = json_mod.loads((step_dir / "index.json").read_text())
+        idx["extra"] = mutate(idx["extra"])
+        (step_dir / "index.json").write_text(json_mod.dumps(idx))
+
+    @pytest.fixture()
+    def ckpt_copy(self, trained, tmp_path):
+        import shutil
+        src = trained["checkpoints"]["frozen"]
+        dst = tmp_path / "ckpt_tampered"
+        shutil.copytree(src, dst)
+        return dst
+
+    def test_load_rejects_missing_extras(self, ckpt_copy):
+        self._tamper(ckpt_copy,
+                     lambda e: {k: v for k, v in e.items() if k != "record"})
+        with pytest.raises(ValueError, match="corrupt"):
+            deploy_mod.load_deployment(ckpt_copy)
+
+    def test_load_rejects_record_config_mismatch(self, ckpt_copy):
+        def mutate(e):
+            e["record"] = dict(e["record"], t_intg_ms=7.0)
+            return e
+        self._tamper(ckpt_copy, mutate)
+        with pytest.raises(ValueError, match="mismatch"):
+            deploy_mod.load_deployment(ckpt_copy)
+
+    def test_load_rejects_variant_circuit_mismatch(self, ckpt_copy):
+        def mutate(e):
+            v = dict(e["record"]["variant"])
+            v["circuit"] = "b" if v.get("circuit") != "b" else "a"
+            e["record"] = dict(e["record"], variant=v)
+            return e
+        self._tamper(ckpt_copy, mutate)
+        with pytest.raises(ValueError, match="wrong leak numerics"):
+            deploy_mod.load_deployment(ckpt_copy)
+
+    def test_load_rejects_malformed_model_config(self, ckpt_copy):
+        def mutate(e):
+            e["model_config"] = {"p2m": {"nonsense": True}}
+            return e
+        self._tamper(ckpt_copy, mutate)
+        with pytest.raises(ValueError, match="malformed"):
+            deploy_mod.load_deployment(ckpt_copy)
+
+    def test_registry_meta_roundtrips(self, trained):
+        """train_and_deploy stamps dataset/sensor_hw registry metadata
+        into the checkpoint and load_deployment restores it."""
+        for ckpt in trained["checkpoints"].values():
+            dep = deploy_mod.load_deployment(ckpt)
+            assert dep.meta["dataset"] == "dvs128"
+            assert tuple(dep.meta["sensor_hw"]) == (128, 128)
+
 
 # ---------------------------------------------------------------------------
 # engine lifecycle + serving-stats artifact
@@ -368,7 +458,16 @@ class TestEngineLifecycle:
                                    "per_shard_admitted": [2]}
         for s in art["streams"]:
             assert {"stream_id", "label", "prediction", "n_events",
-                    "n_readouts", "logits"} <= set(s)
+                    "n_readouts", "logits", "entry", "entry_uid"} <= set(s)
+            assert s["entry"] == "default"   # single-deployment engine
+        # v4: single-deployment serving still emits the registry block —
+        # one synthetic "default" entry whose ledger covers the fleet
+        assert art["admission"]["n_rejected"] == 0
+        reg = art["registry"]
+        assert reg["max_entries"] == 1 and reg["compat"]
+        (row,) = reg["entries"]
+        assert row["name"] == "default"
+        assert row["n_admitted"] == row["n_finished"] == 2
         assert art["throughput"]["events_per_s"] > 0
 
     def test_resolution_mismatch_rejected(self):
@@ -454,7 +553,7 @@ def _fast_dep(src, t_intg_ms=100.0, coarse_ms=200.0):
 
 
 # ---------------------------------------------------------------------------
-# admission control, pacing, and the v3 stats contract
+# admission control, pacing, and the v4 stats contract
 # ---------------------------------------------------------------------------
 
 def _check_stream_stats():
@@ -594,8 +693,8 @@ class TestPacedServing:
         # start before t_start + 7·t_intg = 0.7 s
         assert r_paced.wall_s >= 7 * 0.1
 
-    def test_paced_artifact_v3_schema_and_zero_misses_unloaded(self):
-        """The paced stats artifact passes the v3 schema gate, and an
+    def test_paced_artifact_v4_schema_and_zero_misses_unloaded(self):
+        """The paced stats artifact passes the v4 schema gate, and an
         UNLOADED run (2 lanes, 200 ms windows, trivial compute) misses no
         deadline."""
         css = _check_stream_stats()
@@ -607,7 +706,7 @@ class TestPacedServing:
         engine.serve(src, 2, seed=0)
         report = engine.serve(src, 2, seed=0, paced=True)
         art = report.to_artifact()
-        assert art["schema"] == STATS_SCHEMA == "p2m-stream-serving/v3"
+        assert art["schema"] == STATS_SCHEMA == "p2m-stream-serving/v4"
         assert css.check(art, 2, paced=True, max_miss_rate=0.0) == []
         ddl = art["deadlines"]
         assert ddl["n_misses"] == 0 and ddl["miss_rate"] == 0.0
@@ -617,7 +716,7 @@ class TestPacedServing:
         assert all(s["n_misses"] == 0 for s in art["streams"])
         assert all(s["miss_margin_max_ms"] <= 0.0 for s in art["streams"])
 
-    def test_unpaced_artifact_passes_v3_schema(self):
+    def test_unpaced_artifact_passes_v4_schema(self):
         css = _check_stream_stats()
         src = sources.resolve_dataset("synthetic-gesture", hw=HW)
         dep = _fresh_dep(src)

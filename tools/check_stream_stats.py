@@ -1,14 +1,24 @@
 #!/usr/bin/env python3
-"""Assert a serving-stats artifact matches the p2m-stream-serving/v3
-schema (docs/streaming.md). Stdlib only — the CI streaming-smoke step
-runs it against the artifacts `launch/stream.py --smoke` just emitted
-(one unpaced, one ``--paced``, one lane-sharded).
+"""Assert a serving-stats artifact matches the p2m-stream-serving
+schema (docs/streaming.md), version-aware across v2/v3/v4. Stdlib only
+— the CI streaming-smoke steps run it against the artifacts
+`launch/stream.py --smoke` just emitted (unpaced, ``--paced``,
+lane-sharded, and ``--registry`` multi-variant).
 
-v3 adds the mesh ``sharding`` block (devices, bin_workers,
-padded_capacity, lanes_per_shard, per_shard_admitted) and
-``throughput.events_per_s_per_device``; the sharding ledger must be
-internally consistent (lanes_per_shard x devices == padded_capacity >=
-capacity, per-shard admits sum to n_admitted).
+Version history the gate understands:
+
+* **v2** — paced serving: admission ledger (offered = admitted + shed),
+  deadline accounting (margins, histogram), latency percentiles.
+* **v3** — lane-mesh sharding: the ``sharding`` block (devices,
+  bin_workers, padded_capacity, lanes_per_shard, per_shard_admitted,
+  internally consistent and summing to n_admitted) and
+  ``throughput.events_per_s_per_device``.
+* **v4** — deployment registry: the ``registry`` block (compat digest,
+  ``max_entries``, per-entry admitted/finished/miss/throughput rows),
+  ``admission.n_rejected`` in the ledger (offered = admitted + shed +
+  rejected), and per-stream ``entry``/``entry_uid`` binding. The
+  per-entry ledger must sum to the fleet totals and every stream's
+  entry must appear in the registry rows.
 
     python tools/check_stream_stats.py artifacts/stream/stream_serving_dvs128.json [--streams N]
     python tools/check_stream_stats.py --paced --max-miss-rate 1.0 paced.json
@@ -19,11 +29,14 @@ import argparse
 import json
 import sys
 
-SCHEMA = "p2m-stream-serving/v3"
+SCHEMA_PREFIX = "p2m-stream-serving/v"
+VERSIONS = (2, 3, 4)
+SCHEMA = f"{SCHEMA_PREFIX}{VERSIONS[-1]}"   # current
+
 TOP_KEYS = {"schema", "deployed", "n_streams", "capacity",
             "chunks_per_window", "t_intg_ms", "accuracy", "paced",
             "admission", "deadlines", "streams", "latency_ms",
-            "throughput", "sharding"}
+            "throughput"}
 STREAM_KEYS = {"stream_id", "label", "prediction", "correct", "n_events",
                "n_readouts", "n_coarse_frames", "offered_window",
                "admitted_window", "finished_window", "n_misses", "logits"}
@@ -34,18 +47,47 @@ DEADLINE_KEYS = {"n_deadlines", "n_misses", "miss_rate", "margin_ms",
 MARGIN_KEYS = {"p50", "p90", "p99", "max"}
 LATENCY_KEYS = {"readout_p50", "readout_p99", "readout_mean", "fold_p50",
                 "fold_p99"}
-THROUGHPUT_KEYS = {"wall_s", "events_per_s", "events_per_s_per_device",
-                   "readouts_per_s", "streams_per_s"}
+THROUGHPUT_KEYS = {"wall_s", "events_per_s", "readouts_per_s",
+                   "streams_per_s"}
 SHARDING_KEYS = {"devices", "bin_workers", "padded_capacity",
                  "lanes_per_shard", "per_shard_admitted"}
+REGISTRY_KEYS = {"compat", "max_entries", "entries"}
+ENTRY_KEYS = {"name", "uid", "n_admitted", "n_finished", "n_correct",
+              "n_misses", "n_events", "n_readouts", "accuracy",
+              "events_per_s"}
+
+
+def schema_version(art: dict) -> int | None:
+    """Parse the artifact's schema version; None when unrecognized."""
+    s = art.get("schema")
+    if not isinstance(s, str) or not s.startswith(SCHEMA_PREFIX):
+        return None
+    try:
+        v = int(s[len(SCHEMA_PREFIX):])
+    except ValueError:
+        return None
+    return v if v in VERSIONS else None
 
 
 def check(art: dict, n_streams: int | None = None, paced: bool = False,
           max_miss_rate: float | None = None) -> list[str]:
     errs = []
-    if art.get("schema") != SCHEMA:
-        errs.append(f"schema {art.get('schema')!r} != {SCHEMA!r}")
-    missing = TOP_KEYS - set(art)
+    v = schema_version(art)
+    if v is None:
+        return [f"unrecognized schema {art.get('schema')!r} — expected "
+                f"{SCHEMA_PREFIX}{{{','.join(map(str, VERSIONS))}}}"]
+    top = set(TOP_KEYS)
+    stream_keys = set(STREAM_KEYS)
+    adm_keys = set(ADMISSION_KEYS)
+    thr_keys = set(THROUGHPUT_KEYS)
+    if v >= 3:
+        top |= {"sharding"}
+        thr_keys |= {"events_per_s_per_device"}
+    if v >= 4:
+        top |= {"registry"}
+        adm_keys |= {"n_rejected"}
+        stream_keys |= {"entry", "entry_uid"}
+    missing = top - set(art)
     if missing:
         errs.append(f"missing top-level keys: {sorted(missing)}")
     streams = art.get("streams", [])
@@ -54,7 +96,7 @@ def check(art: dict, n_streams: int | None = None, paced: bool = False,
     if art.get("n_streams") != len(streams):
         errs.append("n_streams does not match len(streams)")
     for i, s in enumerate(streams):
-        miss = STREAM_KEYS - set(s)
+        miss = stream_keys - set(s)
         if miss:
             errs.append(f"stream[{i}] missing {sorted(miss)}")
             break
@@ -67,14 +109,16 @@ def check(art: dict, n_streams: int | None = None, paced: bool = False,
             errs.append(f"stream[{i}] miss counter out of range: "
                         f"{s['n_misses']} of {s['n_readouts']} readouts")
     adm = art.get("admission", {})
-    if ADMISSION_KEYS - set(adm):
-        errs.append(f"admission missing "
-                    f"{sorted(ADMISSION_KEYS - set(adm))}")
+    if adm_keys - set(adm):
+        errs.append(f"admission missing {sorted(adm_keys - set(adm))}")
     else:
-        if adm["n_offered"] != adm["n_admitted"] + adm["n_shed"]:
-            errs.append(f"admission ledger does not balance: offered "
-                        f"{adm['n_offered']} != admitted "
-                        f"{adm['n_admitted']} + shed {adm['n_shed']}")
+        n_rejected = adm.get("n_rejected", 0) if v >= 4 else 0
+        if adm["n_offered"] != adm["n_admitted"] + adm["n_shed"] + n_rejected:
+            errs.append(
+                f"admission ledger does not balance: offered "
+                f"{adm['n_offered']} != admitted {adm['n_admitted']} + "
+                f"shed {adm['n_shed']}"
+                + (f" + rejected {n_rejected}" if v >= 4 else ""))
         if adm["n_admitted"] != len(streams):
             errs.append(f"n_admitted {adm['n_admitted']} != "
                         f"{len(streams)} served streams (every admitted "
@@ -106,41 +150,115 @@ def check(art: dict, n_streams: int | None = None, paced: bool = False,
                 and ddl["miss_rate"] * 100.0 > max_miss_rate):
             errs.append(f"miss rate {ddl['miss_rate']:.2%} exceeds "
                         f"--max-miss-rate {max_miss_rate}%")
-    sh = art.get("sharding", {})
-    if SHARDING_KEYS - set(sh):
-        errs.append(f"sharding missing {sorted(SHARDING_KEYS - set(sh))}")
-    else:
-        if sh["devices"] < 1 or sh["bin_workers"] < 1:
-            errs.append(f"sharding counts must be >= 1: {sh}")
-        if sh["lanes_per_shard"] * sh["devices"] != sh["padded_capacity"]:
-            errs.append(f"sharding geometry inconsistent: "
-                        f"{sh['lanes_per_shard']} lanes/shard x "
-                        f"{sh['devices']} devices != padded capacity "
-                        f"{sh['padded_capacity']}")
-        if sh["padded_capacity"] < art.get("capacity", 0):
-            errs.append(f"padded_capacity {sh['padded_capacity']} < "
-                        f"capacity {art.get('capacity')}")
-        if len(sh["per_shard_admitted"]) != sh["devices"]:
-            errs.append(f"per_shard_admitted has "
-                        f"{len(sh['per_shard_admitted'])} entries for "
-                        f"{sh['devices']} devices")
-        elif (not (ADMISSION_KEYS - set(adm))
-                and sum(sh["per_shard_admitted"]) != adm["n_admitted"]):
-            errs.append(f"per-shard admits {sh['per_shard_admitted']} sum "
-                        f"to {sum(sh['per_shard_admitted'])} != "
-                        f"n_admitted {adm['n_admitted']}")
+    if v >= 3:
+        errs += _check_sharding(art, adm)
+    if v >= 4:
+        errs += _check_registry(art, adm, streams, ddl)
     if paced and not art.get("paced"):
         errs.append("--paced: artifact is not a paced run")
     if LATENCY_KEYS - set(art.get("latency_ms", {})):
         errs.append(f"latency_ms missing "
                     f"{sorted(LATENCY_KEYS - set(art.get('latency_ms', {})))}")
     thr = art.get("throughput", {})
-    if THROUGHPUT_KEYS - set(thr):
-        errs.append(f"throughput missing {sorted(THROUGHPUT_KEYS - set(thr))}")
+    if thr_keys - set(thr):
+        errs.append(f"throughput missing {sorted(thr_keys - set(thr))}")
     elif not thr["events_per_s"] > 0 or not thr["readouts_per_s"] > 0:
         errs.append(f"throughput not positive: {thr}")
     if not 0.0 <= art.get("accuracy", -1) <= 1.0:
         errs.append(f"accuracy out of range: {art.get('accuracy')}")
+    return errs
+
+
+def _check_sharding(art: dict, adm: dict) -> list[str]:
+    errs = []
+    sh = art.get("sharding", {})
+    if SHARDING_KEYS - set(sh):
+        errs.append(f"sharding missing {sorted(SHARDING_KEYS - set(sh))}")
+        return errs
+    if sh["devices"] < 1 or sh["bin_workers"] < 1:
+        errs.append(f"sharding counts must be >= 1: {sh}")
+    if sh["lanes_per_shard"] * sh["devices"] != sh["padded_capacity"]:
+        errs.append(f"sharding geometry inconsistent: "
+                    f"{sh['lanes_per_shard']} lanes/shard x "
+                    f"{sh['devices']} devices != padded capacity "
+                    f"{sh['padded_capacity']}")
+    if sh["padded_capacity"] < art.get("capacity", 0):
+        errs.append(f"padded_capacity {sh['padded_capacity']} < "
+                    f"capacity {art.get('capacity')}")
+    if len(sh["per_shard_admitted"]) != sh["devices"]:
+        errs.append(f"per_shard_admitted has "
+                    f"{len(sh['per_shard_admitted'])} entries for "
+                    f"{sh['devices']} devices")
+    elif ("n_admitted" in adm
+            and sum(sh["per_shard_admitted"]) != adm["n_admitted"]):
+        errs.append(f"per-shard admits {sh['per_shard_admitted']} sum "
+                    f"to {sum(sh['per_shard_admitted'])} != "
+                    f"n_admitted {adm['n_admitted']}")
+    return errs
+
+
+def _check_registry(art: dict, adm: dict, streams: list,
+                    ddl: dict) -> list[str]:
+    """v4: the per-entry ledger must sum to the fleet totals, and every
+    served stream's entry binding must name a registry row."""
+    errs = []
+    reg = art.get("registry", {})
+    if REGISTRY_KEYS - set(reg):
+        errs.append(f"registry missing {sorted(REGISTRY_KEYS - set(reg))}")
+        return errs
+    if not isinstance(reg["compat"], str) or not reg["compat"]:
+        errs.append(f"registry.compat must be a non-empty digest, got "
+                    f"{reg['compat']!r}")
+    if not isinstance(reg["max_entries"], int) or reg["max_entries"] < 1:
+        errs.append(f"registry.max_entries must be >= 1, got "
+                    f"{reg['max_entries']!r}")
+    rows = reg["entries"]
+    row_keys = set()
+    for i, row in enumerate(rows):
+        miss = ENTRY_KEYS - set(row)
+        if miss:
+            errs.append(f"registry.entries[{i}] missing {sorted(miss)}")
+            return errs
+        k = (row["name"], row["uid"])
+        if k in row_keys:
+            errs.append(f"registry.entries has duplicate row for {k}")
+        row_keys.add(k)
+        if not 0 <= row["n_finished"] <= row["n_admitted"]:
+            errs.append(f"entry {k}: n_finished {row['n_finished']} out "
+                        f"of range for n_admitted {row['n_admitted']}")
+        if not 0 <= row["n_correct"] <= row["n_finished"]:
+            errs.append(f"entry {k}: n_correct {row['n_correct']} out of "
+                        f"range for n_finished {row['n_finished']}")
+        if not 0.0 <= row["accuracy"] <= 1.0:
+            errs.append(f"entry {k}: accuracy out of range: "
+                        f"{row['accuracy']}")
+    for total, fleet, label in (
+            ("n_admitted", adm.get("n_admitted"), "admission.n_admitted"),
+            ("n_finished", len(streams), "served stream count"),
+            ("n_misses", ddl.get("n_misses"), "deadlines.n_misses")):
+        if fleet is None:
+            continue
+        got = sum(row[total] for row in rows)
+        if got != fleet:
+            errs.append(f"per-entry {total} sums to {got} != {label} "
+                        f"{fleet} — the entry ledger leaks streams")
+    by_entry: dict[tuple, int] = {}
+    for i, s in enumerate(streams):
+        if "entry" not in s or "entry_uid" not in s:
+            break  # already reported by the stream-key check
+        k = (s["entry"], s["entry_uid"])
+        if k not in row_keys:
+            errs.append(f"stream[{i}] bound to entry {k} absent from "
+                        f"registry.entries")
+            break
+        by_entry[k] = by_entry.get(k, 0) + 1
+    else:
+        for row in rows:
+            k = (row["name"], row["uid"])
+            if by_entry.get(k, 0) != row["n_finished"]:
+                errs.append(
+                    f"entry {k}: n_finished {row['n_finished']} != "
+                    f"{by_entry.get(k, 0)} streams bound to it")
     return errs
 
 
@@ -162,16 +280,23 @@ def main() -> int:
     for e in errs:
         print(f"check_stream_stats: {e}", file=sys.stderr)
     if not errs:
+        v = schema_version(art)
         lat, ddl = art["latency_ms"], art["deadlines"]
+        devices = art["sharding"]["devices"] if v >= 3 else 1
+        per_dev = (f" ({art['throughput']['events_per_s_per_device']:.0f}"
+                   f"/device)" if v >= 3 else "")
         paced_note = (f", {ddl['n_misses']}/{ddl['n_deadlines']} deadline "
                       f"misses" if art["paced"] else "")
-        print(f"check_stream_stats: OK — {art['n_streams']} streams on "
-              f"{art['sharding']['devices']} device(s), "
+        entries_note = (
+            f", {len(art['registry']['entries'])} registry entr"
+            f"{'y' if len(art['registry']['entries']) == 1 else 'ies'}"
+            if v >= 4 else "")
+        print(f"check_stream_stats: OK (v{v}) — {art['n_streams']} streams "
+              f"on {devices} device(s), "
               f"readout p50={lat['readout_p50']:.2f}ms "
               f"p99={lat['readout_p99']:.2f}ms, "
-              f"{art['throughput']['events_per_s']:.0f} events/s "
-              f"({art['throughput']['events_per_s_per_device']:.0f}/device)"
-              f"{paced_note}")
+              f"{art['throughput']['events_per_s']:.0f} events/s"
+              f"{per_dev}{paced_note}{entries_note}")
     return 1 if errs else 0
 
 
