@@ -22,11 +22,12 @@ def main() -> int:
     ap.add_argument("--only", type=str, default=None,
                     help="comma-separated subset of benches to run, e.g. "
                          "'kernels,stream' "
-                         "(table1|fig2|fig4|kernels|roofline|stream)")
+                         "(table1|fig2|fig4|kernels|roofline|stream|"
+                         "stream_adapt)")
     args = ap.parse_args()
 
     from benchmarks import (fig2_bandwidth_energy, fig4_leakage, kernel_bench,
-                            roofline_report, stream_serving,
+                            roofline_report, stream_adapt, stream_serving,
                             table1_acc_traintime)
 
     benches = {
@@ -36,6 +37,7 @@ def main() -> int:
         "kernels": kernel_bench.run,
         "roofline": roofline_report.run,
         "stream": stream_serving.run,
+        "stream_adapt": stream_adapt.run,
     }
     if args.only:
         names = [n.strip() for n in args.only.split(",") if n.strip()]

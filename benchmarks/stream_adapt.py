@@ -1,0 +1,206 @@
+"""Online-adaptation benchmark: accuracy a frozen deployment LOSES under
+injected leak drift, and how much of it per-lane adaptation
+(repro.stream.adapt) wins back — plus the closed deployment loop
+(harvest → delta checkpoint → re-register → re-serve).
+
+The scenario is the paper's retention problem happening *after*
+deployment: a model is trained and deployed against one leak
+linearization, then the physical circuit drifts away from it
+(``null_mismatch``/``sigma`` — nullifier residual grows, per-filter
+process spread appears). Four serves tell the story:
+
+  * ``clean_frozen``   — the deployed model on the leak it trained for;
+  * ``drift_frozen``   — same weights, drifted leak: the accuracy floor;
+  * ``drift_adapt``    — drifted leak with per-lane surrogate adaptation
+    learning weight deltas from stream labels during serving; the
+    committed ``meta.gap`` (adapted second-half accuracy minus frozen
+    second-half accuracy on the SAME streams) is the recovery claim;
+  * ``drift_readapted`` — the best adapted lane harvested into a delta
+    checkpoint, validated, folded into a new deployment, registered
+    beside its base, and re-served FROZEN — the adaptation loop closed
+    through the registry.
+
+A small 3-class synthetic task is trained in-process (NULLIFIED circuit,
+T_INTG = coarse window = 200 ms so every window readout is an update
+boundary); accuracies land in ``BENCH_stream_adapt.json`` meta so the
+trajectory records the recovery gap commit-to-commit.
+"""
+from __future__ import annotations
+
+from dataclasses import replace
+
+import jax
+
+from benchmarks.common import bench_entry, bench_record, emit, save_json
+
+from repro.core import sweep as sweep_mod
+from repro.core.leakage import CircuitConfig
+from repro.data import events as events_mod
+from repro.data.sources import SyntheticSource
+from repro.stream import deploy as deploy_mod
+from repro.stream.adapt import AdaptConfig
+from repro.stream.engine import StreamEngine
+from repro.stream.registry import Registry
+
+# injected drift: the nullifier's residual-current mismatch grows ~6x
+# past its design point and per-filter process spread appears — strong
+# enough to cost the frozen deployment a large accuracy slice, mild
+# enough that layer-1 weight deltas can compensate.
+DRIFT = {"null_mismatch": 0.35, "sigma": 0.3}
+LR_W = 1.0
+N_CLASSES = 3
+T_INTG_MS = 200.0
+DURATION_MS = 2000.0
+
+
+def _train_deployment(fast: bool, hw: int) -> deploy_mod.Deployment:
+    """Train the benchmark deployment in-process: 3-class synthetic
+    gesture, NULLIFIED circuit, coarse window == T_INTG (every readout
+    is a backbone step, so adaptation updates at every window)."""
+    data = SyntheticSource(replace(events_mod.dvs_gesture_like(hw),
+                                   n_classes=N_CLASSES,
+                                   duration_ms=DURATION_MS))
+    _, model, sweep_cfg, grid = sweep_mod.paper_setup(fast=True, hw=hw)
+    model = replace(model,
+                    backbone=replace(model.backbone, n_classes=N_CLASSES),
+                    coarse_window_ms=T_INTG_MS)
+    sweep_cfg = replace(sweep_cfg, batch_size=8,
+                        pretrain_steps=200 if fast else 300,
+                        finetune_steps=10, eval_batches=6)
+    grid = replace(grid, t_intg_grid_ms=(T_INTG_MS,),
+                   circuits=(CircuitConfig.NULLIFIED,))
+    res = sweep_mod.run_protocols(data, model, sweep_cfg, grid,
+                                  protocols=("unfrozen",),
+                                  log=lambda *_: None, eval_data=data,
+                                  keep_params=True)["unfrozen"]
+    rec = res.records[0]
+    cell = (rec["t_intg_ms"], rec["n_sub"])
+    g = list(res.labels).index(rec["label"])
+    take = lambda tree: jax.tree.map(lambda v: v[g], tree)  # noqa: E731
+    fp = res.final_params[cell]
+    leak = deploy_mod.leak_config_from_variant(rec["variant"],
+                                               model.p2m.leak)
+    cfg = replace(model, p2m=replace(model.p2m, t_intg_ms=rec["t_intg_ms"],
+                                     n_sub=rec["n_sub"], mode="curvefit",
+                                     leak=leak))
+    return deploy_mod.Deployment(
+        model_cfg=cfg,
+        params={"p2m": take(fp["p2m"]), "backbone": take(fp["backbone"])},
+        bn_state=take(fp["state"]), record=rec, protocol="unfrozen")
+
+
+def _drifted(dep: deploy_mod.Deployment) -> deploy_mod.Deployment:
+    leak = replace(dep.model_cfg.p2m.leak, **DRIFT)
+    return replace(dep, model_cfg=replace(
+        dep.model_cfg, p2m=replace(dep.model_cfg.p2m, leak=leak)))
+
+
+def _acc(results, half: str | None = None) -> float:
+    rs = list(results)
+    if half == "second":
+        rs = rs[len(rs) // 2:]
+    ok = [r for r in rs if r.label is not None and r.label >= 0]
+    return (sum(r.prediction == r.label for r in ok) / len(ok)
+            if ok else 0.0)
+
+
+def run(fast: bool = False, hw: int = 16) -> dict:
+    source = SyntheticSource(replace(events_mod.dvs_gesture_like(hw),
+                                     n_classes=N_CLASSES,
+                                     duration_ms=DURATION_MS))
+    n_streams = 32 if fast else 64
+    capacity = 4
+    dep = _train_deployment(fast, hw)
+    drifted = _drifted(dep)
+    out: dict = {"drift": dict(DRIFT),
+                 "trained_accuracy": dep.record.get("accuracy")}
+    entries = []
+
+    # 1) deployed model on the leak it trained for (the ceiling)
+    rep = StreamEngine(dep, capacity=capacity).serve(source, n_streams,
+                                                     seed=0)
+    acc_clean = _acc(rep.results)
+    p50_clean = rep.to_artifact()["latency_ms"]["readout_p50"]
+    out["clean_frozen"] = rep.to_artifact()
+    emit("stream_adapt/clean_frozen", p50_clean * 1e3,
+         f"accuracy={acc_clean:.3f}")
+    entries.append(bench_entry("clean_frozen", xla_us=p50_clean * 1e3,
+                               meta={"accuracy": acc_clean}))
+
+    # 2) same weights, drifted leak — the frozen floor
+    repf = StreamEngine(drifted, capacity=capacity).serve(source, n_streams,
+                                                          seed=0)
+    acc_frozen = _acc(repf.results)
+    acc_frozen_2nd = _acc(repf.results, "second")
+    out["drift_frozen"] = repf.to_artifact()
+    emit("stream_adapt/drift_frozen", None,
+         f"accuracy={acc_frozen:.3f};second_half={acc_frozen_2nd:.3f}")
+    entries.append(bench_entry(
+        "drift_frozen", xla_us=None,
+        meta={"accuracy": acc_frozen, "accuracy_2nd_half": acc_frozen_2nd,
+              **{f"drift_{k}": v for k, v in DRIFT.items()}}))
+
+    # 3) drifted leak + per-lane adaptation on the SAME streams
+    eng = StreamEngine(drifted, capacity=capacity,
+                       adapt=AdaptConfig(rule="surrogate", lr_w=LR_W))
+    repa = eng.serve(source, n_streams, seed=0)
+    arta = repa.to_artifact()
+    ad = arta["adaptation"]
+    gap = ad["accuracy_post"] - acc_frozen_2nd
+    out["drift_adapt"] = arta
+    emit("stream_adapt/drift_adapt", arta["latency_ms"]["readout_p50"] * 1e3,
+         f"pre={ad['accuracy_pre']:.3f};post={ad['accuracy_post']:.3f};"
+         f"gap={gap:+.3f};n_updates={ad['n_updates']}")
+    entries.append(bench_entry(
+        "drift_adapt", xla_us=arta["latency_ms"]["readout_p50"] * 1e3,
+        meta={"rule": ad["rule"], "lr_w": ad["lr_w"],
+              "n_updates": ad["n_updates"],
+              "accuracy_pre": ad["accuracy_pre"],
+              "accuracy_post": ad["accuracy_post"],
+              "frozen_2nd_half": acc_frozen_2nd, "gap": gap}))
+    assert gap > 0, (
+        f"adaptation did not beat the frozen drifted serve "
+        f"(post={ad['accuracy_post']:.3f} vs frozen "
+        f"2nd-half={acc_frozen_2nd:.3f})")
+
+    # 4) close the loop: harvest the busiest lane → validated delta
+    # checkpoint → new deployment → registry entry → frozen re-serve
+    best = max(ad["lanes"], key=lambda r: r["n_updates"])["lane"]
+    h = eng.harvest(best)
+    import tempfile
+    with tempfile.TemporaryDirectory() as tmp:
+        deploy_mod.save_adapt_delta(tmp, h["base"], dw=h["dw"],
+                                    dtheta=h["dtheta"],
+                                    base_name=h["base_name"],
+                                    base_uid=h["base_uid"], lane=h["lane"],
+                                    n_updates=h["n_updates"],
+                                    rule="surrogate")
+        delta = deploy_mod.load_adapt_delta(tmp, h["base"])
+    adapted = deploy_mod.apply_adapt_delta(h["base"], delta)
+    reg = Registry()
+    reg.register("base", drifted)
+    entry = reg.register("base+adapt", adapted)
+    repr_ = StreamEngine(reg, capacity=capacity,
+                         default_entry="base+adapt").serve(
+        source, n_streams // 2, seed=1)
+    acc_re = _acc(repr_.results)
+    out["drift_readapted"] = repr_.to_artifact()
+    emit("stream_adapt/drift_readapted", None,
+         f"accuracy={acc_re:.3f};entry_uid={entry.uid};"
+         f"delta_n_updates={delta['n_updates']}")
+    entries.append(bench_entry(
+        "drift_readapted", xla_us=None,
+        meta={"accuracy": acc_re, "entry_uid": entry.uid,
+              "harvested_lane": delta["lane"],
+              "delta_n_updates": delta["n_updates"]}))
+
+    save_json("stream_adapt", out)
+    bench_record("stream_adapt", entries,
+                 extra={"fast": fast, "hw": hw, "n_streams": n_streams,
+                        "n_classes": N_CLASSES, "lr_w": LR_W,
+                        "drift": dict(DRIFT)})
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -24,8 +24,16 @@ When more than one device is visible (real accelerators, or CPU CI's
 a second time with the lane axis mesh-sharded (repro.stream.shard) and a
 multi-worker binning pool; those entries carry a ``_d{N}`` suffix so the
 single-device trajectory stays comparable commit-to-commit.
+
+The **mixed-variant paced** entries (``paced_mixed_c{cap}``) serve a
+two-entry registry (nullified + basic leak variants, streams assigned
+round-robin) under the real-time clock, committing PER-ENTRY serving
+rates in each entry's meta — the trajectory for the multi-variant
+deployment shape.
 """
 from __future__ import annotations
+
+from dataclasses import replace
 
 import jax
 
@@ -38,6 +46,7 @@ from repro.core.snn import SpikingCNNConfig
 from repro.data import sources as sources_mod
 from repro.stream import deploy as deploy_mod
 from repro.stream.engine import StreamEngine
+from repro.stream.registry import Registry
 from repro.stream.shard import make_lane_executor
 
 
@@ -150,6 +159,63 @@ def _saturation_sweep(fast: bool, hw: int, devices: int = 1,
     return out, entries
 
 
+def _mixed_paced(fast: bool, hw: int) -> tuple[dict, list[dict]]:
+    """Paced serving over a MIXED-variant registry: two compat-equal
+    leak variants (nullified + basic) co-resident on the lanes, streams
+    assigned round-robin — the multi-variant deployment shape under the
+    real-time clock. Each ``paced_mixed_c{cap}`` entry carries the
+    PER-ENTRY serving rates in its meta (events/s, admitted/finished,
+    misses per registry entry), so the trajectory records whether one
+    variant starves the other as capacity grows."""
+    t_intg_ms = 50.0
+    source = sources_mod.resolve_dataset("synthetic-gesture", hw=hw,
+                                         duration_ms=8 * t_intg_ms)
+    base = _model(hw, source.n_classes, t_intg_ms)
+    model = P2MModelConfig(p2m=base.p2m, backbone=base.backbone,
+                           coarse_window_ms=4 * t_intg_ms)
+    model_b = P2MModelConfig(
+        p2m=replace(model.p2m,
+                    leak=LeakageConfig(circuit=CircuitConfig.BASIC)),
+        backbone=model.backbone, coarse_window_ms=model.coarse_window_ms)
+    reg = Registry()
+    reg.register("nullified", deploy_mod.fresh_deployment(model, seed=0))
+    reg.register("basic", deploy_mod.fresh_deployment(model_b, seed=0))
+    names = reg.names()
+    variants = lambda sid: names[sid % len(names)]  # noqa: E731
+    caps = (2,) if fast else (2, 4)
+    out = {}
+    entries = []
+    for cap in caps:
+        engine = StreamEngine(reg, capacity=cap, default_entry=names[0])
+        # warmup: pay the jit compiles + admission path off the clock
+        engine.serve(source, 2 * cap, seed=0, variants=variants)
+        report = engine.serve(source, 2 * cap, seed=0, paced=True,
+                              variants=variants)
+        art = report.to_artifact()
+        out[f"paced_mixed_c{cap}"] = art
+        ddl, thr = art["deadlines"], art["throughput"]
+        per_entry = {
+            row["name"]: {"events_per_s": row["events_per_s"],
+                          "n_admitted": row["n_admitted"],
+                          "n_finished": row["n_finished"],
+                          "n_misses": row["n_misses"]}
+            for row in art["registry"]["entries"]}
+        rates = ";".join(f"{n}={v['events_per_s']:.0f}ev/s"
+                         for n, v in per_entry.items())
+        emit(f"stream/paced_mixed/c{cap}", None,
+             f"streams={cap};miss_rate={ddl['miss_rate']:.4f};{rates}")
+        entries.append(bench_entry(
+            f"paced_mixed_c{cap}",
+            xla_us=art["latency_ms"]["readout_p50"] * 1e3,
+            meta={"concurrent_streams": cap,
+                  "miss_rate": ddl["miss_rate"],
+                  "events_per_s": thr["events_per_s"],
+                  "events_per_s_per_device":
+                      thr["events_per_s_per_device"],
+                  "entries": per_entry}))
+    return out, entries
+
+
 def run(fast: bool = False, hw: int = 16,
         t_intg_ms: float = 100.0) -> dict:
     source = sources_mod.resolve_dataset("synthetic-gesture", hw=hw)
@@ -208,6 +274,11 @@ def run(fast: bool = False, hw: int = 16,
     sat_out, sat_entries = _saturation_sweep(fast, hw)
     out.update(sat_out)
     entries.extend(sat_entries)
+
+    # mixed-variant registry under the paced clock (per-entry rates)
+    mixed_out, mixed_entries = _mixed_paced(fast, hw)
+    out.update(mixed_out)
+    entries.extend(mixed_entries)
 
     # mesh-sharded variant of the same sweep, when a mesh is available
     # (accelerators, or forced host devices on CPU CI) — per-device knee

@@ -24,11 +24,21 @@ Three ways in:
     (``protocol=frozen``), resolved at admission; unresolvable requests
     are rejected and counted.
 
-Emits one serving-stats JSON artifact (schema ``p2m-stream-serving/v4``):
+``--adapt`` turns on per-lane ONLINE ADAPTATION (repro.stream.adapt):
+each serving lane learns a private delta on the deployed layer-1
+weights/threshold from its own stream's labels at every coarse-window
+readout (``--adapt-rule`` picks surrogate-gradient or reward-modulated
+three-factor; ``--adapt-lr``/``--adapt-lr-theta`` scale the steps).
+``--adapt-export DIR`` harvests every adapted lane into a validated
+delta checkpoint (``deploy.save_adapt_delta``) that re-registers beside
+its base — the close of the adapt → harvest → re-serve loop.
+Incompatible with ``--use-kernel`` (the fused fold has no VJP).
+
+Emits one serving-stats JSON artifact (schema ``p2m-stream-serving/v5``):
 per-stream predictions (with their registry-entry binding), p50/p99
 readout latency, events/s (total and per-device), the mesh ``sharding``
-block, the ``registry`` per-entry breakdown, admission
-(shed/rejected/deferred) counters and — under ``--paced`` —
+block, the ``registry`` per-entry breakdown, the ``adaptation`` block,
+admission (shed/rejected/deferred) counters and — under ``--paced`` —
 deadline-miss accounting (docs/streaming.md).
 
 ``--devices N`` shards the lane axis over a 1-D device mesh
@@ -144,6 +154,27 @@ def main() -> int:
     ap.add_argument("--chunks-per-window", type=int, default=None,
                     help="replay chunks per T_INTG window (must divide "
                          "n_sub; default: one chunk per fine sub-slot)")
+    ap.add_argument("--adapt", action="store_true",
+                    help="per-lane online adaptation: learn a private "
+                         "layer-1 weight/threshold delta on each lane "
+                         "from its stream's labels at every coarse "
+                         "readout (repro.stream.adapt); frozen serving "
+                         "is untouched without this flag")
+    ap.add_argument("--adapt-rule", type=str, default="surrogate",
+                    choices=["surrogate", "reward"],
+                    help="local update rule: surrogate-gradient descent "
+                         "on the window readout, or reward-modulated "
+                         "three-factor (eligibility traces)")
+    ap.add_argument("--adapt-lr", type=float, default=5e-3,
+                    help="weight-delta learning rate")
+    ap.add_argument("--adapt-lr-theta", type=float, default=0.0,
+                    help="comparator-threshold learning rate (default 0: "
+                         "thresholds stay deployed)")
+    ap.add_argument("--adapt-export", type=str, default=None,
+                    metavar="DIR",
+                    help="harvest every adapted lane into a validated "
+                         "delta checkpoint under DIR/lane<N> "
+                         "(deploy.save_adapt_delta) for re-registration")
     ap.add_argument("--use-kernel", action="store_true",
                     help="fold sub-slots through the fused Pallas "
                          "stream_fold kernel instead of the XLA scan "
@@ -167,6 +198,7 @@ def main() -> int:
 
     from repro.data import sources as sources_mod
     from repro.stream import deploy as deploy_mod
+    from repro.stream.adapt import AdaptConfig
     from repro.stream.engine import StreamEngine
     from repro.stream.registry import Registry
     from repro.stream.shard import make_lane_executor
@@ -177,6 +209,9 @@ def main() -> int:
         return 2
     if args.variants is not None and args.registry is None:
         print("error: --variants requires --registry", file=sys.stderr)
+        return 2
+    if args.adapt_export is not None and not args.adapt:
+        print("error: --adapt-export requires --adapt", file=sys.stderr)
         return 2
 
     dataset = args.dataset or ("dvs128" if args.smoke
@@ -230,13 +265,17 @@ def main() -> int:
         source = sources_mod.resolve_dataset(dataset, hw=args.hw,
                                              data_root=data_root,
                                              split="all")
+        adapt = (AdaptConfig(rule=args.adapt_rule, lr_w=args.adapt_lr,
+                             lr_theta=args.adapt_lr_theta)
+                 if args.adapt else None)
         engine = StreamEngine(target, capacity=args.capacity,
                               chunks_per_window=args.chunks_per_window,
                               use_kernel=args.use_kernel,
                               executor=make_lane_executor(args.devices),
                               bin_workers=args.bin_workers,
                               max_entries=args.max_entries,
-                              default_entry=default_entry)
+                              default_entry=default_entry,
+                              adapt=adapt)
         variants = None
         if args.variants is not None:
             reqs = [_parse_variant_spec(s) for s in args.variants]
@@ -293,6 +332,26 @@ def main() -> int:
               f"missed ({ddl['miss_rate']:.2%})   margin p50 "
               f"{mg['p50']:.2f} ms  p99 {mg['p99']:.2f} ms  max "
               f"{mg['max']:.2f} ms")
+    ad = art["adaptation"]
+    if ad["enabled"]:
+        fmt = lambda a: "-" if a is None else f"{a:.3f}"  # noqa: E731
+        print(f"adaptation     {ad['rule']}  lr_w {ad['lr_w']:g}  "
+              f"{ad['n_updates']} updates on {len(ad['lanes'])} lane(s)   "
+              f"acc pre {fmt(ad['accuracy_pre'])} -> "
+              f"post {fmt(ad['accuracy_post'])}")
+        if args.adapt_export is not None:
+            exp = Path(args.adapt_export)
+            for row in ad["lanes"]:
+                h = engine.harvest(row["lane"])
+                d = exp / f"lane{row['lane']}"
+                deploy_mod.save_adapt_delta(
+                    d, h["base"], dw=h["dw"], dtheta=h["dtheta"],
+                    base_name=h["base_name"], base_uid=h["base_uid"],
+                    lane=h["lane"], n_updates=h["n_updates"],
+                    rule=args.adapt_rule, meta={"dataset": dataset})
+                print(f"[adapt] lane {row['lane']}: {h['n_updates']} "
+                      f"updates on base {h['base_name']}#{h['base_uid']} "
+                      f"-> {d}")
     print(f"artifact: {path}")
     return 0
 

@@ -92,6 +92,27 @@ class MultiStreamFns:
     n_classes: int
 
 
+def relinearized_numerics(w_raw: jax.Array, theta: jax.Array, *,
+                          analog_cfg, coeffs: leakage.LeakCoeffs,
+                          n_sub: int, dt_ms: float) -> dict:
+    """The unfrozen protocol's differentiable curvefit seam, factored out
+    for online use: quantize the raw layer-1 weights (straight-through),
+    re-linearize the leak from the CURRENT quantized kernel, and derive
+    the per-filter sub-slot decay ``a`` and window ``drift``.
+
+    Every op is differentiable w.r.t. ``w_raw`` (STE through the
+    quantizer, branch-free ``leak_params_from_coeffs``) and ``theta`` —
+    which is what lets the per-lane adaptation rule (repro.stream.adapt)
+    take surrogate gradients through the exact serving numerics at each
+    coarse-window readout, the online analogue of the unfrozen phase-2
+    training path."""
+    w_q = analog.quantize_weights(w_raw, analog_cfg)
+    lk = leakage.leak_params_from_coeffs(w_q, coeffs)
+    a = leakage.decay_factor(lk.tau_ms, dt_ms)                        # [C]
+    _, drift = p2m_layer.window_decay(lk, n_sub, dt_ms)
+    return {"w_q": w_q, "a": a, "drift": drift, "theta": theta}
+
+
 def entry_numerics(dep: Deployment) -> dict:
     """The deployed variant's serving numerics, as one pytree.
 
@@ -105,18 +126,15 @@ def entry_numerics(dep: Deployment) -> dict:
     axis (:func:`stack_entries`) and co-serve them from one engine."""
     cfg = dep.model_cfg
     p2m_cfg = cfg.p2m
-    w_q = p2m_layer.effective_weights(dep.params["p2m"], p2m_cfg)
     coeffs = dep.coeffs
-    lk = leakage.leak_params_from_coeffs(w_q, coeffs)
-    a = leakage.decay_factor(lk.tau_ms, p2m_cfg.dt_ms)                # [C]
-    _, drift = p2m_layer.window_decay(lk, p2m_cfg.n_sub, p2m_cfg.dt_ms)
+    nb = relinearized_numerics(
+        dep.params["p2m"]["w"], coeffs.v_threshold,
+        analog_cfg=p2m_cfg.analog, coeffs=coeffs,
+        n_sub=p2m_cfg.n_sub, dt_ms=p2m_cfg.dt_ms)
     return {
-        "w_q": w_q,
-        "a": a,
-        "drift": drift,
+        **nb,
         "pv": {"gain": dep.params["p2m"]["pv_gain"],
                "offset": dep.params["p2m"]["pv_offset"]},
-        "theta": coeffs.v_threshold,
         "backbone": dep.params["backbone"],
         "bn_state": dep.bn_state,
     }

@@ -1,0 +1,378 @@
+"""Per-lane online adaptation: local plasticity through the serving path.
+
+The sweep enumerates the paper's retention/accuracy trade-off *offline*,
+per variant cell. A deployed sensor experiences it *per device*: its
+leak drifts with temperature and fab corner (the ``sigma`` axis), and
+the weights it was deployed with slowly stop matching the capacitors
+they drive. This module is the neuromorphic answer the ROADMAP calls
+for — a local, per-lane plasticity rule that nudges each lane's layer-1
+quantized weights and comparator threshold *during* serving, the online
+analogue of the unfrozen training protocol.
+
+Mechanics
+---------
+Each serving lane (= one physical sensor) carries an :class:`AdaptState`
+row on the ``[capacity, ...]`` lane axis:
+
+- ``dw``/``dtheta`` — the lane's persistent weight/threshold deltas,
+  applied as ``quantize(w_base + dw)`` (straight-through, the same
+  quantizer the unfrozen protocol trains through) and
+  ``theta_base + dtheta``. They survive stream turnover on the lane and
+  reset only when the lane rebinds to a different registry entry.
+- ``ev`` — a per-filter decay-weighted event accumulator
+  ``E_f ← E_f · a_f + ev_k`` folded alongside the charge, so the readout
+  can *recompute* the window's linear charge from the raw events under
+  the current weights (``diag(conv(E, w_q))``, bit-equal to the fold's
+  telescoped sum up to fp ordering) and differentiate through it. It
+  precharges (``E ← 0``) with the capacitor at every readout.
+- ``elig_w``/``elig_theta`` — eligibility traces for the three-factor
+  rule; ``n_updates`` counts applied updates.
+
+At each coarse-window readout the rule takes a truncated (depth-1)
+surrogate gradient through the exact serving numerics — re-quantize,
+re-linearize the leak, re-derive drift, transfer curve, ATan surrogate
+spike, pool, backbone step (``accumulator.relinearized_numerics``, the
+unfrozen protocol's differentiable curvefit seam) — and applies one of
+two local rules:
+
+- ``surrogate`` — plain surrogate-gradient descent on the window's
+  cross-entropy against the replayed stream's label (when it carries
+  one; unlabeled lanes never update).
+- ``reward`` — reward-modulated three-factor fallback: the gradient
+  toward the lane's OWN prediction accumulates into an eligibility
+  trace, and a scalar reward (+1 correct / −1 wrong, 0 unlabeled)
+  gates the trace into the weights — the RSTDP analogue.
+
+Everything is lane-diagonal: no cross-lane reduction anywhere, so the
+state shards with the lane axis (``P_LANE``) under the lane mesh exactly
+like the serving state, per-lane updates provably never perturb other
+lanes, and registry serving gathers each lane's base numerics from the
+stacked entry bundle before applying that lane's deltas.
+
+Adaptation is a *separate opt-in compiled surface*: with
+``StreamEngine(adapt=None)`` none of this module runs and serving stays
+IEEE-bit-identical to the frozen path. The fused Pallas fold
+(``kernels/stream_fold``) has no VJP and shares one weight tensor across
+lanes, so ``use_kernel=True`` + adaptation raises (pinned by
+tests/test_stream_adapt.py). Adapted lanes are harvested through
+``StreamEngine.harvest`` and round-trip as validated checkpoint deltas
+(repro.stream.deploy.save_adapt_delta) into new registry entries.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core import analog, snn
+# same conv as the serving fold/offline curvefit — gradient parity
+# depends on identical padding/dimension numbers
+from repro.core.p2m_layer import _conv
+from repro.stream.accumulator import (_mask, entry_numerics,
+                                      make_multi_stream_fns,
+                                      make_stream_fns,
+                                      relinearized_numerics)
+from repro.stream.deploy import Deployment
+from repro.stream.shard import P_LANE, P_REP, LaneExecutor
+
+RULES = ("surrogate", "reward")
+
+# per-stream transients: reset at every admission. dw/dtheta/n_updates
+# persist across streams on a lane and reset only on entry rebind.
+_TRANSIENT = ("elig_w", "elig_theta", "ev")
+
+
+@dataclass(frozen=True)
+class AdaptConfig:
+    """Local-rule hyperparameters (one config for the whole fleet; the
+    *state* is per lane)."""
+    rule: str = "surrogate"          # "surrogate" | "reward"
+    lr_w: float = 5e-3               # weight-delta learning rate
+    lr_theta: float = 0.0            # threshold-delta learning rate
+    trace_decay: float = 0.9         # eligibility-trace decay (reward rule)
+    clip_w: float = 0.5              # |dw| bound (keeps quantizer in range)
+    clip_theta: float = 0.05         # |dtheta| bound (volts)
+
+    def __post_init__(self) -> None:
+        if self.rule not in RULES:
+            raise ValueError(f"adapt rule must be one of {RULES}, "
+                             f"got {self.rule!r}")
+        if self.lr_w < 0 or self.lr_theta < 0:
+            raise ValueError("learning rates must be >= 0")
+        if self.clip_w <= 0 or self.clip_theta <= 0:
+            raise ValueError("delta clips must be > 0")
+
+
+@dataclass(frozen=True)
+class AdaptFns:
+    """Jitted adaptation-enabled serving steps — the drop-in replacement
+    for StreamFns/MultiStreamFns when a StreamEngine runs with
+    ``adapt=``. ``fold``/``readout`` thread the :class:`AdaptState` dict
+    alongside the serving state; registry engines append the usual
+    ``(entry, bundle)`` pair (bundle extended with per-entry
+    ``LeakCoeffs`` — :func:`adapt_entry_numerics`)."""
+    init_state: Callable[[], dict]
+    init_adapt: Callable[[], dict]
+    reset_lane: Callable[..., dict]
+    reset_lane_transient: Callable[..., dict]
+    reset_lane_full: Callable[..., dict]
+    fold: Callable[..., tuple]
+    readout: Callable[..., tuple]
+    in_hw: tuple[int, int]
+    n_classes: int
+
+
+def adapt_entry_numerics(dep: Deployment) -> dict:
+    """:func:`~repro.stream.accumulator.entry_numerics` extended with the
+    entry's leak-circuit constants. Adaptation re-linearizes the leak
+    from the CURRENT per-lane weights at every readout, so the stacked
+    bundle must carry each entry's ``LeakCoeffs`` (a pytree of scalars —
+    it stacks on the entry axis and gathers per lane like every other
+    leaf), not just the pre-derived ``a``/``drift``."""
+    return {**entry_numerics(dep), "coeffs": dep.coeffs}
+
+
+def make_adapt_fns(dep: Deployment, *, capacity: int, chunk_slots: int,
+                   adapt: AdaptConfig, use_kernel: bool = False,
+                   executor: LaneExecutor | None = None,
+                   registry: bool = False) -> AdaptFns:
+    """Build the jitted per-lane-adapting fold/readout for ``dep``.
+
+    The serving forward matches the frozen engine's semantics exactly
+    (same masking, same state update) but is vmapped per lane so each
+    lane serves under its OWN ``quantize(w_base + dw)`` /
+    ``theta_base + dtheta`` numerics, re-linearized through
+    ``relinearized_numerics`` each chunk. ``registry=True`` builds the
+    multi-variant flavor: fold/readout take ``(entry, bundle)`` and
+    gather each lane's base numerics before applying its deltas.
+    """
+    if use_kernel:
+        raise ValueError(
+            "online adaptation requires the differentiable XLA scan "
+            "fold: kernels/stream_fold has no VJP and shares one weight "
+            "tensor across lanes — serve with use_kernel=False, or drop "
+            "adapt")
+    # serving-state init/reset (and the lane-axis divisibility checks)
+    # are identical to the frozen engine's — reuse them.
+    base = (make_multi_stream_fns if registry else make_stream_fns)(
+        dep, capacity=capacity, chunk_slots=chunk_slots,
+        use_kernel=False, executor=executor)
+    ex = executor or LaneExecutor()
+    cfg = dep.model_cfg
+    p2m_cfg, bb_cfg = cfg.p2m, cfg.backbone
+    analog_cfg = p2m_cfg.analog
+    stride, dv_unit = p2m_cfg.stride, analog_cfg.dv_unit
+    H, W = bb_cfg.input_hw
+    k, cin, F = p2m_cfg.kernel_size, p2m_cfg.in_channels, p2m_cfg.out_channels
+    # per-lane base numerics: gathered from the bundle per call
+    # (registry) or closed over (single-deployment); nb_ax is the vmap
+    # axis for the nb argument of every per-lane closure.
+    nb0 = adapt_entry_numerics(dep)
+    nb_ax = 0 if registry else None
+
+    def init_adapt() -> dict:
+        return {
+            "dw": jnp.zeros((capacity, k, k, cin, F)),
+            "dtheta": jnp.zeros((capacity,)),
+            "elig_w": jnp.zeros((capacity, k, k, cin, F)),
+            "elig_theta": jnp.zeros((capacity,)),
+            "ev": jnp.zeros((capacity, F, H, W, cin)),
+            "n_updates": jnp.zeros((capacity,), jnp.int32),
+        }
+
+    @jax.jit
+    def reset_lane_transient(astate: dict, lane: jax.Array) -> dict:
+        """New stream on the lane: clear the window accumulator and the
+        eligibility traces, KEEP the lane's learned deltas."""
+        return {key: (v.at[lane].set(jnp.zeros_like(v[lane]))
+                      if key in _TRANSIENT else v)
+                for key, v in astate.items()}
+
+    @jax.jit
+    def reset_lane_full(astate: dict, lane: jax.Array) -> dict:
+        """Lane rebinds to a different entry uid: deltas learned against
+        the old base are meaningless — zero everything."""
+        return jax.tree.map(
+            lambda v: v.at[lane].set(jnp.zeros_like(v[lane])), astate)
+
+    def lane_relin(nb: dict, dw: jax.Array, dtheta: jax.Array) -> dict:
+        """One lane's adapted numerics through the differentiable seam."""
+        return relinearized_numerics(
+            nb["w_q"] + dw, nb["theta"] + dtheta, analog_cfg=analog_cfg,
+            coeffs=nb["coeffs"], n_sub=p2m_cfg.n_sub, dt_ms=p2m_cfg.dt_ms)
+
+    vrelin = jax.vmap(lane_relin, in_axes=(nb_ax, 0, 0))
+    vconv = jax.vmap(lambda ev, w: _conv(ev[None], w, stride)[0])
+
+    def _lane_nbs(extra: tuple) -> dict:
+        if registry:
+            entry, bundle = extra
+            return jax.tree.map(lambda leaf: leaf[entry], bundle)
+        return nb0
+
+    def fold_body(state: dict, astate: dict, frames: jax.Array,
+                  active: jax.Array, *extra) -> tuple[dict, dict]:
+        """The scan fold under per-lane adapted numerics, plus the
+        per-filter event accumulator ``E`` riding the same decay."""
+        nb = _lane_nbs(extra)
+        ln = vrelin(nb, astate["dw"], astate["dtheta"])
+        w_q, a = ln["w_q"], ln["a"]          # [cap,k,k,2,F], [cap,F]
+
+        def sub_step(carry, ev_k):           # ev_k [cap, H, W, 2]
+            x, E = carry
+            x = x * a[:, None, None, :] + vconv(ev_k, w_q) * dv_unit
+            E = E * a[:, :, None, None, None] + ev_k[:, None]
+            return (x, E), None
+
+        (x, E), _ = lax.scan(sub_step, (state["x"], astate["ev"]),
+                             jnp.moveaxis(frames, 1, 0))
+        return ({**state, "x": _mask(active, x, state["x"])},
+                {**astate, "ev": _mask(active, E, astate["ev"])})
+
+    def lane_head(x_lin: jax.Array, ln: dict, nb: dict,
+                  coarse: jax.Array, mem) -> dict:
+        """One lane's readout forward from a linear charge map: transfer
+        curve + PV, surrogate comparator, pool, coarse accumulate,
+        backbone step. Shared by the serving pass (x from the fold) and
+        the gradient pass (x recomputed from ``ev``)."""
+        v_pre = analog.transfer_curve(x_lin + ln["drift"], analog_cfg,
+                                      nb["pv"])
+        spikes = snn.spike_fn(v_pre - ln["theta"])
+        pooled = snn.max_pool(spikes[None])[0]
+        coarse2 = coarse + pooled
+        logits_t, mem2 = snn.spiking_cnn_stream_step(
+            nb["backbone"], nb["bn_state"],
+            jax.tree.map(lambda v: v[None], mem), coarse2[None], bb_cfg)
+        return {"spikes": spikes, "pooled": pooled, "coarse": coarse2,
+                "logits_t": logits_t[0],
+                "mem2": jax.tree.map(lambda v: v[0], mem2)}
+
+    def lane_serve(dw, dtheta, nb, x_fold, coarse, mem) -> dict:
+        ln = lane_relin(nb, dw, dtheta)
+        return lane_head(x_fold, ln, nb, coarse, mem)
+
+    vserve = jax.vmap(lane_serve, in_axes=(0, 0, nb_ax, 0, 0, 0))
+
+    def lane_loss(dw, dtheta, target, nb, E, coarse, mem):
+        """Window cross-entropy vs ``target`` with the linear charge
+        recomputed from the event accumulator under the CURRENT deltas —
+        the truncated depth-1 window through the curvefit seam (the
+        decay weighting inside ``E`` and earlier windows' coarse counts
+        are constants)."""
+        ln = lane_relin(nb, dw, dtheta)
+        y = _conv(E, ln["w_q"], stride)              # [F, Hs, Ws, F]
+        x_lin = jnp.diagonal(y, axis1=0, axis2=3) * dv_unit
+        ro = lane_head(x_lin, ln, nb, coarse, mem)
+        return -jax.nn.log_softmax(ro["logits_t"])[target], ro["logits_t"]
+
+    vgrad = jax.vmap(jax.grad(lane_loss, argnums=(0, 1), has_aux=True),
+                     in_axes=(0, 0, 0, nb_ax, 0, 0, 0))
+
+    def readout_body(state: dict, astate: dict, active: jax.Array,
+                     coarse_mask: jax.Array, labels: jax.Array,
+                     *extra) -> tuple[dict, dict, dict]:
+        """Frozen-engine readout semantics under per-lane numerics, then
+        one local update on lanes crossing a labeled coarse boundary."""
+        nb = _lane_nbs(extra)
+        ro = vserve(astate["dw"], astate["dtheta"], nb, state["x"],
+                    state["coarse"], state["mem"])
+        spikes, pooled, coarse = ro["spikes"], ro["pooled"], ro["coarse"]
+        logits_t, mem2 = ro["logits_t"], ro["mem2"]
+        new_state = {
+            "x": _mask(active, jnp.zeros_like(state["x"]), state["x"]),
+            "coarse": _mask(active,
+                            _mask(coarse_mask, jnp.zeros_like(coarse),
+                                  coarse),
+                            state["coarse"]),
+            "mem": jax.tree.map(lambda n, o: _mask(coarse_mask, n, o),
+                                mem2, state["mem"]),
+            "logits": state["logits"] + _mask(coarse_mask, logits_t,
+                                              jnp.zeros_like(logits_t)),
+            "n_coarse": state["n_coarse"] + coarse_mask.astype(jnp.int32),
+        }
+
+        # ---- local update (per lane, lane-diagonal) ----
+        has_label = labels >= 0
+        boundary = active & coarse_mask
+        upd = boundary & has_label
+        if adapt.rule == "surrogate":
+            tgt = jnp.maximum(labels, 0)
+        else:
+            # three-factor: eligibility accumulates the gradient toward
+            # the lane's own prediction; reward gates it in.
+            tgt = jnp.argmax(logits_t, axis=-1).astype(jnp.int32)
+        (g_w, g_th), _ = vgrad(astate["dw"], astate["dtheta"], tgt, nb,
+                               astate["ev"], state["coarse"],
+                               state["mem"])
+        if adapt.rule == "surrogate":
+            dw_step, th_step = adapt.lr_w * g_w, adapt.lr_theta * g_th
+            elig_w, elig_th = astate["elig_w"], astate["elig_theta"]
+        else:
+            elig_w = _mask(boundary,
+                           adapt.trace_decay * astate["elig_w"] + g_w,
+                           astate["elig_w"])
+            elig_th = jnp.where(boundary,
+                                adapt.trace_decay * astate["elig_theta"]
+                                + g_th,
+                                astate["elig_theta"])
+            r = jnp.where(has_label,
+                          jnp.where(tgt == labels, 1.0, -1.0), 0.0)
+            dw_step = adapt.lr_w * r[:, None, None, None, None] * elig_w
+            th_step = adapt.lr_theta * r * elig_th
+        dw = jnp.clip(astate["dw"] - dw_step, -adapt.clip_w, adapt.clip_w)
+        dth = jnp.clip(astate["dtheta"] - th_step,
+                       -adapt.clip_theta, adapt.clip_theta)
+        new_astate = {
+            "dw": _mask(upd, dw, astate["dw"]),
+            "dtheta": jnp.where(upd, dth, astate["dtheta"]),
+            "elig_w": elig_w,
+            "elig_theta": elig_th,
+            # the event accumulator precharges with the capacitor
+            "ev": _mask(active, jnp.zeros_like(astate["ev"]),
+                        astate["ev"]),
+            "n_updates": astate["n_updates"] + upd.astype(jnp.int32),
+        }
+        out = {"spikes": spikes,
+               "n_spikes": jnp.sum(pooled, axis=(1, 2, 3))
+               * active.astype(pooled.dtype)}
+        return new_state, new_astate, out
+
+    extra_specs = (P_LANE, P_REP) if registry else ()
+    fold = jax.jit(ex.shard(
+        fold_body,
+        in_specs=(P_LANE, P_LANE, P_LANE, P_LANE) + extra_specs,
+        out_specs=(P_LANE, P_LANE)))
+    readout = jax.jit(ex.shard(
+        readout_body,
+        in_specs=(P_LANE, P_LANE, P_LANE, P_LANE, P_LANE) + extra_specs,
+        out_specs=(P_LANE, P_LANE, P_LANE)))
+
+    return AdaptFns(init_state=base.init_state, init_adapt=init_adapt,
+                    reset_lane=base.reset_lane,
+                    reset_lane_transient=reset_lane_transient,
+                    reset_lane_full=reset_lane_full,
+                    fold=fold, readout=readout,
+                    in_hw=base.in_hw, n_classes=base.n_classes)
+
+
+def lane_stats(astate: dict) -> list[dict]:
+    """Host-side per-lane rows for the v5 stats artifact: lanes that
+    applied at least one update, with their delta norms."""
+    dw = np.asarray(astate["dw"])
+    dth = np.asarray(astate["dtheta"])
+    n_upd = np.asarray(astate["n_updates"])
+    rows = []
+    for lane in range(n_upd.shape[0]):
+        if int(n_upd[lane]) == 0:
+            continue
+        rows.append({
+            "lane": lane,
+            "n_updates": int(n_upd[lane]),
+            "dw_norm": float(np.linalg.norm(dw[lane])),
+            "dtheta": float(dth[lane]),
+        })
+    return rows

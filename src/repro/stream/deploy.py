@@ -19,6 +19,7 @@ and the precise statement of what "serving this record" computes.
 """
 from __future__ import annotations
 
+import hashlib
 import json
 from dataclasses import asdict, dataclass, field, replace
 from pathlib import Path
@@ -26,6 +27,7 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.checkpoint import store
 from repro.core import leakage, p2m_layer, snn
@@ -344,6 +346,147 @@ def deploy_from_sweep(result: Any, model_cfg: P2MModelConfig, record: dict,
                      record=record, protocol=result.protocol,
                      meta=dict(meta or {}))
     return save_deployment(directory, dep)
+
+
+# ---------------------------------------------------------------------------
+# adaptation delta checkpoints (repro.stream.adapt → new registry entries)
+# ---------------------------------------------------------------------------
+
+ADAPT_DELTA_SCHEMA = "p2m-stream-adapt-delta/v1"
+
+
+def deployment_digest(dep: Deployment) -> str:
+    """Content digest of a deployment as an ADAPTATION BASE: the full
+    model config plus the exact quantized layer-1 weights and comparator
+    threshold the per-lane deltas are relative to. A delta checkpoint is
+    only meaningful against the base it was learned on —
+    :func:`load_adapt_delta` refuses to apply one whose stamped digest
+    does not match the offered base."""
+    w_q = p2m_layer.effective_weights(dep.params["p2m"], dep.model_cfg.p2m)
+    h = hashlib.sha256()
+    h.update(json.dumps(model_config_to_dict(dep.model_cfg),
+                        sort_keys=True, default=float).encode())
+    h.update(np.asarray(w_q, np.float32).tobytes())
+    h.update(np.float32(dep.coeffs.v_threshold).tobytes())
+    return h.hexdigest()[:16]
+
+
+def save_adapt_delta(directory: str | Path, base: Deployment, *,
+                     dw, dtheta: float, base_name: str = "default",
+                     base_uid: int = 0, lane: int = 0, n_updates: int = 0,
+                     rule: str = "surrogate",
+                     meta: dict | None = None) -> Path:
+    """Write one adapted lane's deltas as a committed delta checkpoint.
+
+    ``dw``/``dtheta`` are relative to ``base``'s QUANTIZED layer-1
+    weights and deployed threshold (the convention of
+    :meth:`repro.stream.engine.StreamEngine.harvest` — the lane served
+    ``quantize(w_q_base + dw)`` at ``theta_base + dtheta``). The extras
+    stamp the base's registry identity (``base_name``/``base_uid``) and
+    its content digest, so a later :func:`load_adapt_delta` can validate
+    the delta is being applied to the exact base it was learned on."""
+    dw = np.asarray(dw, np.float32)
+    w_q = p2m_layer.effective_weights(base.params["p2m"],
+                                      base.model_cfg.p2m)
+    if dw.shape != w_q.shape:
+        raise ValueError(
+            f"dw shape {dw.shape} does not match the base's layer-1 "
+            f"weights {tuple(w_q.shape)}")
+    tree = {"dw": dw, "dtheta": np.float32(dtheta)}
+    extra = {
+        "delta_schema": ADAPT_DELTA_SCHEMA,
+        "base": {"name": base_name, "uid": int(base_uid),
+                 "digest": deployment_digest(base)},
+        "lane": int(lane),
+        "n_updates": int(n_updates),
+        "rule": rule,
+        "meta": dict(meta or {}),
+    }
+    return store.save_checkpoint(directory, 0, tree, extra)
+
+
+def load_adapt_delta(directory: str | Path, base: Deployment, *,
+                     expect_uid: int | None = None) -> dict:
+    """Load a delta checkpoint and validate it against ``base``.
+
+    Raises ``ValueError`` when the checkpoint is not a delta, the stamped
+    base digest does not match ``base`` (tampered extras, or a delta
+    learned against different weights/config), the delta shape is wrong,
+    or ``expect_uid`` (e.g. the uid of the CURRENT registration of the
+    base name) disagrees with the stamped uid — the stale-base guard
+    against applying deltas across a hot-swap."""
+    tree, extra = store.load_checkpoint(directory)
+    if extra.get("delta_schema") != ADAPT_DELTA_SCHEMA:
+        raise ValueError(
+            f"{directory} is not an adaptation delta checkpoint "
+            f"(extra.delta_schema={extra.get('delta_schema')!r}; "
+            f"expected {ADAPT_DELTA_SCHEMA!r})")
+    stamped = extra.get("base") or {}
+    missing = [k for k in ("name", "uid", "digest") if k not in stamped]
+    if missing:
+        raise ValueError(f"{directory} delta checkpoint base stamp is "
+                         f"corrupt: missing {missing}")
+    digest = deployment_digest(base)
+    if stamped["digest"] != digest:
+        raise ValueError(
+            f"{directory} delta was learned against base digest "
+            f"{stamped['digest']} but the offered deployment digests to "
+            f"{digest} — applying it would adapt the wrong weights")
+    if expect_uid is not None and int(stamped["uid"]) != int(expect_uid):
+        raise ValueError(
+            f"{directory} delta is stamped for base uid {stamped['uid']} "
+            f"but the live registration is uid {expect_uid} — the base "
+            f"entry was hot-swapped since this delta was harvested")
+    dw = np.asarray(tree["dw"], np.float32)
+    w_q = p2m_layer.effective_weights(base.params["p2m"],
+                                      base.model_cfg.p2m)
+    if dw.shape != tuple(w_q.shape):
+        raise ValueError(
+            f"{directory} delta dw shape {dw.shape} does not match the "
+            f"base's layer-1 weights {tuple(w_q.shape)}")
+    return {"dw": dw, "dtheta": float(tree["dtheta"]),
+            "base_name": stamped["name"], "base_uid": int(stamped["uid"]),
+            "lane": int(extra.get("lane", 0)),
+            "n_updates": int(extra.get("n_updates", 0)),
+            "rule": extra.get("rule"), "meta": dict(extra.get("meta") or {})}
+
+
+def apply_adapt_delta(base: Deployment, delta: dict, *,
+                      label_suffix: str = "+adapt") -> Deployment:
+    """Fold a (validated) delta into ``base`` → a new servable
+    :class:`Deployment` that computes exactly what the adapted lane was
+    serving: raw layer-1 weights ``w_q_base + dw`` (whose quantization
+    reproduces the lane's effective weights — the quantizer is
+    idempotent on grid points and ``dw`` is clipped well inside the clip
+    range) and comparator threshold ``theta_base + dtheta`` pinned as
+    the leak-config override. The compat key is unchanged (leak and
+    threshold are excluded from it), so the result registers beside its
+    base in the same registry and re-serves from the same engine."""
+    cfg = base.model_cfg
+    w_q = p2m_layer.effective_weights(base.params["p2m"], cfg.p2m)
+    new_theta = float(base.coeffs.v_threshold) + float(delta["dtheta"])
+    model_cfg = replace(cfg, p2m=replace(
+        cfg.p2m, leak=replace(cfg.p2m.leak, v_threshold=new_theta)))
+    variant = dict(base.record.get("variant") or {})
+    if "v_threshold" in variant:
+        variant["v_threshold"] = new_theta
+    record = {
+        **base.record,
+        "label": f"{base.record.get('label')}{label_suffix}",
+        "variant": variant,
+        "adapted": {"base_name": delta.get("base_name", "default"),
+                    "base_uid": int(delta.get("base_uid", 0)),
+                    "lane": int(delta.get("lane", 0)),
+                    "n_updates": int(delta.get("n_updates", 0)),
+                    "rule": delta.get("rule"),
+                    "dw_norm": float(np.linalg.norm(delta["dw"]))},
+    }
+    params = {"p2m": {**base.params["p2m"],
+                      "w": jnp.asarray(w_q) + jnp.asarray(delta["dw"])},
+              "backbone": base.params["backbone"]}
+    return Deployment(model_cfg=model_cfg, params=params,
+                      bn_state=base.bn_state, record=record,
+                      protocol=base.protocol, meta=dict(base.meta))
 
 
 # ---------------------------------------------------------------------------

@@ -45,7 +45,7 @@ late readout reads leaked charge; it is a correctness event, not just a
 latency sample. Predictions are bit-identical to unpaced replay on the
 same seed (pacing only inserts sleeps); per-lane and fleet-wide miss
 counters plus the miss-margin histogram land in the
-``p2m-stream-serving/v4`` stats artifact.
+``p2m-stream-serving/v5`` stats artifact.
 
 **Registry mode** (``StreamEngine(Registry(...))``,
 repro.stream.registry) serves a CATALOG of circuit variants from one
@@ -55,6 +55,20 @@ each lane to a registry entry (rejecting unresolvable requests), and
 lanes bound to other entries. The v4 artifact adds the ``registry``
 block (compat digest + per-entry admitted/finished/miss/throughput
 rows) and ``admission.n_rejected``.
+
+**Adaptation mode** (``StreamEngine(..., adapt=AdaptConfig(...))``,
+repro.stream.adapt) turns on per-lane online plasticity: each lane
+carries persistent weight/threshold deltas that a local
+surrogate-gradient or reward-modulated rule updates at every labeled
+coarse-window readout, compensating per-device leak drift in place.
+The deltas survive stream turnover on a lane, reset when the lane
+rebinds to a different registry entry uid, and are harvested via
+:meth:`StreamEngine.harvest` into validated delta checkpoints
+(repro.stream.deploy.save_adapt_delta) that re-register as new entries.
+``adapt=None`` (the default) compiles none of this — frozen serving is
+IEEE-bit-identical to the adaptation-less engine — and the v5 artifact
+carries the ``adaptation`` block (rule, per-lane update counts and
+delta norms, pre/post-accuracy split) either way.
 
 **Sharded mode** (``StreamEngine(executor=LaneExecutor(devices=n))``,
 CLI ``--devices``) maps the lane axis onto a 1-D ``"lane"`` device mesh
@@ -91,12 +105,14 @@ from repro.data.sources import EventSource
 from repro.serve.slots import ShardedSlots
 from repro.stream.accumulator import (entry_numerics, make_multi_stream_fns,
                                       make_stream_fns, stack_entries)
+from repro.stream.adapt import (AdaptConfig, adapt_entry_numerics,
+                                lane_stats, make_adapt_fns)
 from repro.stream.deploy import Deployment
 from repro.stream.registry import (Registry, RegistryEntry, compat_digest,
                                    compat_key)
 from repro.stream.shard import LaneExecutor
 
-STATS_SCHEMA = "p2m-stream-serving/v4"
+STATS_SCHEMA = "p2m-stream-serving/v5"
 
 
 class EntryTableFull(RuntimeError):
@@ -269,6 +285,9 @@ class ServingReport:
     registry_max_entries: int = 1
     entry_rows: list[dict] = field(default_factory=list)
     max_open_streams: int = 0     # peak concurrently-open replay iterators
+    # adaptation view (None = engine served frozen): rule, cumulative
+    # update count, per-lane delta rows, pre/post accuracy split
+    adaptation: dict | None = None
     n_misses: int = 0             # fleet-wide deadline misses (paced)
     # one margin per (occupied lane, window) readout in paced mode:
     # readout completion − deadline, ms (positive = missed)
@@ -347,6 +366,11 @@ class ServingReport:
                     for row in self.entry_rows
                 ],
             },
+            "adaptation": (self.adaptation if self.adaptation is not None
+                           else {"enabled": False, "rule": None,
+                                 "lr_w": 0.0, "lr_theta": 0.0,
+                                 "n_updates": 0, "accuracy_pre": None,
+                                 "accuracy_post": None, "lanes": []}),
             "deadlines": self.deadline_stats(),
             "streams": [asdict(r) for r in self.results],
             "latency_ms": {
@@ -421,7 +445,8 @@ class StreamEngine:
                  executor: LaneExecutor | None = None,
                  bin_workers: int | None = None,
                  max_entries: int | None = None,
-                 default_entry: str | None = None):
+                 default_entry: str | None = None,
+                 adapt: AdaptConfig | None = None):
         if isinstance(dep, Registry):
             if len(dep) == 0:
                 raise ValueError(
@@ -470,28 +495,54 @@ class StreamEngine:
         self.group = dep.model_cfg.coarsen_group()
         self.use_kernel = use_kernel
         self.prefetch = prefetch
-        if self.registry is not None:
+        self.adapt = adapt
+        # adaptation re-linearizes the leak per lane at every readout,
+        # so adapting engines carry each entry's LeakCoeffs in the
+        # bundle (extra replicated scalars; frozen engines keep the
+        # exact PR 9 bundle and compiled program)
+        self._nb_fn = (adapt_entry_numerics if adapt is not None
+                       else entry_numerics)
+        if adapt is not None:
+            self.fns = make_adapt_fns(
+                dep, capacity=self.padded_capacity,
+                chunk_slots=self.chunk_slots, adapt=adapt,
+                use_kernel=use_kernel, executor=self.executor,
+                registry=self.registry is not None)
+            # per-lane deltas/traces, resident across serve() calls so
+            # a lane keeps learning over stream turnover and harvest
+            # works after the run
+            self.adapt_state = self.fns.init_adapt()
+            # entry uid each lane's deltas were learned against (-1 =
+            # never admitted): rebinding to a different uid voids them
+            self._lane_entry_uid = np.full((self.padded_capacity,), -1,
+                                           np.int64)
+            self._lane_base: list[Deployment | None] = \
+                [None] * self.padded_capacity
+            self._lane_base_name = ["default"] * self.padded_capacity
+            self._labels = np.full((self.padded_capacity,), -1, np.int32)
+        elif self.registry is not None:
             self.fns = make_multi_stream_fns(
                 dep, capacity=self.padded_capacity,
                 chunk_slots=self.chunk_slots, use_kernel=use_kernel,
                 executor=self.executor)
+        else:
+            self.fns = make_stream_fns(dep, capacity=self.padded_capacity,
+                                       chunk_slots=self.chunk_slots,
+                                       use_kernel=use_kernel,
+                                       executor=self.executor)
+        if self.registry is not None:
             # fixed-size per-entry param table: slot i holds the numerics
             # of one (name, uid) registration; refcounts track how many
             # resident lanes are bound to it, so hot-swap keeps a retired
             # entry's weights until its last lane drains. Unused slots
             # hold the anchor's numerics as shape placeholders.
-            anchor_nb = entry_numerics(dep)
+            anchor_nb = self._nb_fn(dep)
             self._entry_slots: list[tuple[str, int] | None] = \
                 [None] * self.max_entries
             self._entry_refs = [0] * self.max_entries
             self._entry_nbs = [anchor_nb] * self.max_entries
             self._bundle = stack_entries(self._entry_nbs)
             self._entry_of = np.zeros((self.padded_capacity,), np.int32)
-        else:
-            self.fns = make_stream_fns(dep, capacity=self.padded_capacity,
-                                       chunk_slots=self.chunk_slots,
-                                       use_kernel=use_kernel,
-                                       executor=self.executor)
 
     # -- registry param-table bookkeeping ------------------------------
     def _slot_stale(self, slot: int) -> bool:
@@ -531,7 +582,7 @@ class StreamEngine:
                 f"(bound: {[k for k in self._entry_slots if k]}) — raise "
                 f"max_entries to co-serve more variants")
         self._entry_slots[victim] = key
-        self._entry_nbs[victim] = entry_numerics(entry.dep)
+        self._entry_nbs[victim] = self._nb_fn(entry.dep)
         self._entry_refs[victim] = 1
         self._bundle = stack_entries(self._entry_nbs)
         return victim
@@ -719,14 +770,18 @@ class StreamEngine:
         # latency percentiles measure steady-state serving, not jit
         wx = (() if self.registry is None else
               (jnp.zeros((self.padded_capacity,), jnp.int32), self._bundle))
-        ws = self.fns.fold(self.fns.init_state(),
-                           jnp.zeros((self.padded_capacity,
-                                      self.chunk_slots, h, w, 2)),
-                           jnp.zeros((self.padded_capacity,), bool), *wx)
-        ws, _ = self.fns.readout(ws,
-                                 jnp.zeros((self.padded_capacity,), bool),
-                                 jnp.zeros((self.padded_capacity,), bool),
-                                 *wx)
+        wmask = jnp.zeros((self.padded_capacity,), bool)
+        wframes = jnp.zeros((self.padded_capacity,
+                             self.chunk_slots, h, w, 2))
+        if self.adapt is None:
+            ws = self.fns.fold(self.fns.init_state(), wframes, wmask, *wx)
+            ws, _ = self.fns.readout(ws, wmask, wmask, *wx)
+        else:
+            wl = jnp.full((self.padded_capacity,), -1, jnp.int32)
+            ws, wa = self.fns.fold(self.fns.init_state(),
+                                   self.fns.init_adapt(), wframes, wmask,
+                                   *wx)
+            ws, wa, _ = self.fns.readout(ws, wa, wmask, wmask, wl, *wx)
         jax.block_until_ready(ws["logits"])
         pool = _BinPool(self.bin_workers) if self.prefetch else None
         next_offer = 0
@@ -786,6 +841,24 @@ class StreamEngine:
                         lane.entry_slot = slot_e
                         self._entry_of[lane_i] = slot_e
                     state = self.fns.reset_lane(state, lane_i)
+                    if self.adapt is not None:
+                        # learned deltas persist across streams on the
+                        # lane (it models one physical sensor) but are
+                        # void against a different base entry
+                        uid = entry.uid if self.registry is not None else 0
+                        if self._lane_entry_uid[lane_i] == uid:
+                            self.adapt_state = \
+                                self.fns.reset_lane_transient(
+                                    self.adapt_state, lane_i)
+                        else:
+                            self.adapt_state = self.fns.reset_lane_full(
+                                self.adapt_state, lane_i)
+                        self._lane_entry_uid[lane_i] = uid
+                        self._lane_base[lane_i] = (
+                            entry.dep if self.registry is not None
+                            else self.dep)
+                        self._lane_base_name[lane_i] = lane.entry_name
+                        self._labels[lane_i] = lane.label
                     report.n_admitted += 1
                     row_of(lane)["n_admitted"] += 1
                     report.per_shard_admitted[slots.shard_of(lane_i)] += 1
@@ -823,8 +896,13 @@ class StreamEngine:
                              [self._bin_part(source, ls)
                               for ls in parts_by_worker])
                     frames = self._assemble(parts)
-                    state = self.fns.fold(state, jnp.asarray(frames),
-                                          active, *extra)
+                    if self.adapt is None:
+                        state = self.fns.fold(state, jnp.asarray(frames),
+                                              active, *extra)
+                    else:
+                        state, self.adapt_state = self.fns.fold(
+                            state, self.adapt_state, jnp.asarray(frames),
+                            active, *extra)
                     report.fold_s.append(time.perf_counter() - t0)
                 # ---- readout at the T_INTG boundary -------------------
                 coarse_mask = np.zeros((self.padded_capacity,), bool)
@@ -832,9 +910,15 @@ class StreamEngine:
                     coarse_mask[lane_i] = \
                         (lane.windows_done + 1) % self.group == 0
                 t0 = time.perf_counter()
-                state, out = self.fns.readout(state, active,
-                                              jnp.asarray(coarse_mask),
-                                              *extra)
+                if self.adapt is None:
+                    state, out = self.fns.readout(state, active,
+                                                  jnp.asarray(coarse_mask),
+                                                  *extra)
+                else:
+                    state, self.adapt_state, out = self.fns.readout(
+                        state, self.adapt_state, active,
+                        jnp.asarray(coarse_mask),
+                        jnp.asarray(self._labels), *extra)
                 n_spikes = np.asarray(out["n_spikes"])  # window sync point
                 t_done = time.perf_counter()
                 report.readout_s.append(t_done - t0)
@@ -883,6 +967,8 @@ class StreamEngine:
                         entry=lane.entry_name, entry_uid=lane.entry_uid,
                         logits=[float(v) for v in logits]))
                     slots.release(lane_i)
+                    if self.adapt is not None:
+                        self._labels[lane_i] = -1
                     if self.registry is not None:
                         self._unbind_entry(lane.entry_slot)
                     if log is not None:
@@ -897,4 +983,58 @@ class StreamEngine:
             if pool is not None:
                 pool.close()
         report.wall_s = time.perf_counter() - t_start
+        if self.adapt is not None:
+            lanes = lane_stats(jax.device_get(self.adapt_state))
+
+            def _acc(rs: list[StreamResult]) -> float | None:
+                return (sum(r.correct for r in rs) / len(rs)
+                        if rs else None)
+
+            # learning-curve split in finish order: accuracy over the
+            # first vs second half of this run's streams — a cheap
+            # online signal that adaptation is helping (tools/
+            # ab_compare.py does the significance test properly)
+            half = len(results) // 2
+            report.adaptation = {
+                "enabled": True,
+                "rule": self.adapt.rule,
+                "lr_w": self.adapt.lr_w,
+                "lr_theta": self.adapt.lr_theta,
+                "n_updates": sum(r["n_updates"] for r in lanes),
+                "accuracy_pre": _acc(results[:half]),
+                "accuracy_post": _acc(results[half:]),
+                "lanes": lanes,
+            }
         return report
+
+    # ------------------------------------------------------------------
+    def harvest(self, lane: int) -> dict:
+        """One adapted lane's learned deltas + base identity, ready for
+        delta-checkpoint export (repro.stream.deploy.save_adapt_delta)
+        and re-registration as a new registry entry.
+
+        The deltas are relative to the lane's base entry's QUANTIZED
+        layer-1 weights and deployed threshold — exactly how the lane
+        served them (``quantize(w_base + dw)``, ``theta_base + dtheta``).
+        Harvesting a lane that never applied an update is allowed (zero
+        deltas round-trip fine); a lane that never served raises."""
+        if self.adapt is None:
+            raise ValueError("engine was built without adapt= — nothing "
+                             "to harvest")
+        if not 0 <= lane < self.padded_capacity:
+            raise ValueError(f"lane {lane} out of range "
+                             f"[0, {self.padded_capacity})")
+        base = self._lane_base[lane]
+        if base is None:
+            raise ValueError(f"lane {lane} never served a stream — no "
+                             f"base entry to delta against")
+        ast = jax.device_get(self.adapt_state)
+        return {
+            "lane": lane,
+            "dw": np.asarray(ast["dw"][lane]),
+            "dtheta": float(ast["dtheta"][lane]),
+            "n_updates": int(ast["n_updates"][lane]),
+            "base_name": self._lane_base_name[lane],
+            "base_uid": int(self._lane_entry_uid[lane]),
+            "base": base,
+        }

@@ -1,0 +1,175 @@
+"""tools/ab_compare.py — A/B accuracy verdicts on handcrafted artifacts.
+
+The helper has two jobs with different failure modes: the PAIRED path
+(two artifacts, same replayed streams) must refuse to pair streams that
+are not actually the same (disjoint ids, label mismatch, pre-v4 schema),
+and its exact sign test must match hand-computed binomial tails; the
+UNPAIRED path (entry-vs-entry inside one artifact) must filter rows by
+registry entry and keep its permutation p-value sane on degenerate
+inputs. Every case here is a handcrafted artifact — no engine runs.
+"""
+from __future__ import annotations
+
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(REPO / "tools"))
+
+import ab_compare  # noqa: E402
+
+
+def _art(rows, version=5):
+    return {"schema": f"p2m-stream-serving/v{version}", "streams": rows}
+
+
+def _row(sid, label, correct, entry=None):
+    row = {"stream_id": sid, "label": label, "correct": correct,
+           "prediction": label if correct else (label + 1) % 3}
+    if entry is not None:
+        row["entry"] = entry
+    return row
+
+
+class TestSchemaGate:
+    def test_v4_and_v5_accepted(self):
+        assert ab_compare.schema_version(_art([], 4)) == 4
+        assert ab_compare.schema_version(_art([], 5)) == 5
+
+    def test_pre_v4_rejected(self):
+        with pytest.raises(ValueError, match="predates"):
+            ab_compare.schema_version(_art([], 3))
+
+    def test_non_serving_artifact_rejected(self):
+        with pytest.raises(ValueError, match="not a serving-stats"):
+            ab_compare.schema_version({"schema": "p2m-bench/v1"})
+
+
+class TestStreamRows:
+    def test_unlabeled_streams_dropped(self):
+        rows = [_row(0, 1, True), _row(1, -1, True),
+                {"stream_id": 2, "label": None, "correct": True}]
+        assert set(ab_compare.stream_rows(_art(rows))) == {0}
+
+    def test_entry_filter(self):
+        rows = [_row(0, 1, True, "a"), _row(1, 1, False, "b")]
+        assert set(ab_compare.stream_rows(_art(rows), "a")) == {0}
+        assert set(ab_compare.stream_rows(_art(rows), "b")) == {1}
+
+    def test_unknown_entry_names_present_entries(self):
+        rows = [_row(0, 1, True, "a")]
+        with pytest.raises(ValueError, match="entries present"):
+            ab_compare.stream_rows(_art(rows), "nope")
+
+
+class TestSignTest:
+    def test_no_discordant_pairs_is_p1(self):
+        assert ab_compare.sign_test(0, 0) == 1.0
+
+    def test_one_sided_discordance_exact_tail(self):
+        # 8 discordant pairs, all favoring B: p = 2 * C(8,0)/2^8
+        assert ab_compare.sign_test(0, 8) == pytest.approx(2 / 256)
+
+    def test_balanced_discordance_not_significant(self):
+        assert ab_compare.sign_test(4, 4) == pytest.approx(1.0)
+
+
+class TestPaired:
+    def test_identical_artifacts_null_verdict(self):
+        rows = {i: _row(i, i % 3, i % 2 == 0) for i in range(20)}
+        res = ab_compare.paired_compare(rows, rows)
+        assert res["delta"] == 0.0
+        assert res["p"] == 1.0
+        assert res["ci"][0] <= 0.0 <= res["ci"][1]
+
+    def test_clear_improvement_significant(self):
+        a = {i: _row(i, i % 3, False) for i in range(24)}
+        b = {i: _row(i, i % 3, i < 16) for i in range(24)}
+        res = ab_compare.paired_compare(a, b)
+        assert res["delta"] == pytest.approx(16 / 24)
+        assert res["n01"] == 0 and res["n10"] == 16
+        assert res["p"] < 0.001
+        assert res["ci"][0] > 0.0
+
+    def test_disjoint_stream_ids_rejected(self):
+        a = {i: _row(i, 0, True) for i in range(4)}
+        b = {i: _row(i, 0, True) for i in range(10, 14)}
+        with pytest.raises(ValueError, match="no overlapping"):
+            ab_compare.paired_compare(a, b)
+
+    def test_label_mismatch_rejected(self):
+        a = {0: _row(0, 1, True)}
+        b = {0: _row(0, 2, True)}
+        with pytest.raises(ValueError, match="different labels"):
+            ab_compare.paired_compare(a, b)
+
+    def test_bootstrap_is_seeded(self):
+        a = {i: _row(i, 0, i % 2 == 0) for i in range(16)}
+        b = {i: _row(i, 0, i % 3 == 0) for i in range(16)}
+        r1 = ab_compare.paired_compare(a, b, seed=7)
+        r2 = ab_compare.paired_compare(a, b, seed=7)
+        assert r1["ci"] == r2["ci"]
+
+
+class TestUnpaired:
+    def test_degenerate_gap_significant(self):
+        a = {i: _row(i, 0, False, "a") for i in range(20)}
+        b = {i: _row(100 + i, 0, True, "b") for i in range(20)}
+        res = ab_compare.unpaired_compare(a, b)
+        assert res["delta"] == 1.0
+        assert res["p"] < 0.01
+
+    def test_identical_rates_not_significant(self):
+        a = {i: _row(i, 0, i % 2 == 0, "a") for i in range(20)}
+        b = {100 + i: _row(100 + i, 0, i % 2 == 0, "b") for i in range(20)}
+        res = ab_compare.unpaired_compare(a, b)
+        assert res["delta"] == 0.0
+        assert res["p"] > 0.5
+
+    def test_empty_side_rejected(self):
+        a = {0: _row(0, 0, True)}
+        with pytest.raises(ValueError, match="no labeled"):
+            ab_compare.unpaired_compare(a, {})
+
+
+class TestCLI:
+    def _run(self, *args):
+        return subprocess.run(
+            [sys.executable, str(REPO / "tools" / "ab_compare.py"),
+             *args], capture_output=True, text=True)
+
+    def test_paired_verdict_line(self, tmp_path):
+        a = _art([_row(i, i % 3, False) for i in range(24)])
+        b = _art([_row(i, i % 3, i < 16) for i in range(24)])
+        pa, pb = tmp_path / "a.json", tmp_path / "b.json"
+        pa.write_text(json.dumps(a))
+        pb.write_text(json.dumps(b))
+        out = self._run(str(pa), str(pb))
+        assert out.returncode == 0
+        assert "verdict:" in out.stdout
+        assert "SIGNIFICANT" in out.stdout.splitlines()[-1]
+
+    def test_entries_mode(self, tmp_path):
+        art = _art([_row(i, 0, False, "x") for i in range(10)]
+                   + [_row(100 + i, 0, True, "y") for i in range(10)])
+        p = tmp_path / "m.json"
+        p.write_text(json.dumps(art))
+        out = self._run(str(p), "--entries", "x", "y")
+        assert out.returncode == 0
+        assert "entry:y vs entry:x" in out.stdout
+
+    def test_usage_error(self, tmp_path):
+        p = tmp_path / "a.json"
+        p.write_text(json.dumps(_art([])))
+        assert self._run(str(p)).returncode == 2
+
+    def test_old_schema_exit_2(self, tmp_path):
+        p = tmp_path / "a.json"
+        p.write_text(json.dumps(_art([], version=3)))
+        out = self._run(str(p), str(p))
+        assert out.returncode == 2
+        assert "predates" in out.stderr

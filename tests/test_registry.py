@@ -215,7 +215,7 @@ class TestRegistryServing:
 
     def test_artifact_registry_block(self, mixed):
         art = mixed.to_artifact()
-        assert art["schema"] == "p2m-stream-serving/v4"
+        assert art["schema"] == "p2m-stream-serving/v5"
         assert art["admission"]["n_rejected"] == 0
         reg = art["registry"]
         assert reg["compat"] and reg["max_entries"] >= 2

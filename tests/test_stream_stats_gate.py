@@ -1,9 +1,9 @@
 """The version-aware serving-stats gate (tools/check_stream_stats.py)
-on handcrafted artifacts: v2/v3/v4 records pass, and every class of
+on handcrafted artifacts: v2/v3/v4/v5 records pass, and every class of
 corruption the gate exists to catch — ledger imbalance, per-entry sums
 that leak streams, streams bound to absent entries, duplicate rows,
-missing per-version keys, unrecognized schemas — fails with a pointed
-error. Engine-emitted artifacts are gated in test_streaming.py /
+inconsistent adaptation blocks, missing per-version keys, unrecognized
+schemas — fails with a pointed error. Engine-emitted artifacts are gated in test_streaming.py /
 test_registry.py; this file pins the CHECKER itself, so a gate
 regression can't silently wave broken artifacts through CI.
 """
@@ -96,6 +96,28 @@ def _v2():
     return art
 
 
+def _v5(enabled=True, paced=False):
+    art = _v4(paced=paced)
+    art["schema"] = "p2m-stream-serving/v5"
+    if enabled:
+        art["adaptation"] = {
+            "enabled": True, "rule": "surrogate", "lr_w": 0.005,
+            "lr_theta": 0.0, "n_updates": 7,
+            "accuracy_pre": 0.5, "accuracy_post": 1.0,
+            "lanes": [
+                {"lane": 0, "n_updates": 4, "dw_norm": 0.12,
+                 "dtheta": 0.0},
+                {"lane": 1, "n_updates": 3, "dw_norm": 0.07,
+                 "dtheta": -0.002},
+            ]}
+    else:
+        art["adaptation"] = {"enabled": False, "rule": None, "lr_w": 0.0,
+                             "lr_theta": 0.0, "n_updates": 0,
+                             "accuracy_pre": None, "accuracy_post": None,
+                             "lanes": []}
+    return art
+
+
 @pytest.fixture()
 def gate():
     return _gate()
@@ -146,6 +168,76 @@ class TestVersions:
         art = _v4()
         del art["streams"][1]["entry"]
         assert any("entry" in e for e in gate.check(art))
+
+
+class TestAdaptationBlock:
+    def test_v5_passes(self, gate):
+        assert gate.check(_v5()) == []
+        assert gate.check(_v5(enabled=False)) == []
+        assert gate.schema_version(_v5()) == 5
+
+    def test_v5_requires_adaptation_block(self, gate):
+        art = _v5()
+        del art["adaptation"]
+        assert any("adaptation" in e for e in gate.check(art))
+        art = _v5()
+        del art["adaptation"]["rule"]
+        assert any("adaptation missing" in e for e in gate.check(art))
+
+    def test_v4_does_not_require_adaptation(self, gate):
+        """Old artifacts predate the block — the gate stays
+        version-aware, not latest-version-only."""
+        art = _v4()
+        assert "adaptation" not in art
+        assert gate.check(art) == []
+
+    def test_disabled_block_must_be_empty(self, gate):
+        art = _v5(enabled=False)
+        art["adaptation"]["n_updates"] = 3
+        assert any("disabled adaptation block carries updates" in e
+                   for e in gate.check(art))
+        art = _v5(enabled=False)
+        art["adaptation"]["lanes"] = [
+            {"lane": 0, "n_updates": 1, "dw_norm": 0.1, "dtheta": 0.0}]
+        assert any("disabled adaptation block" in e
+                   for e in gate.check(art))
+
+    def test_unknown_rule_rejected(self, gate):
+        art = _v5()
+        art["adaptation"]["rule"] = "hebbian"
+        assert any("adaptation.rule" in e for e in gate.check(art))
+
+    def test_lane_updates_must_sum_to_total(self, gate):
+        art = _v5()
+        art["adaptation"]["n_updates"] = 99
+        assert any("per-lane update counts sum" in e
+                   for e in gate.check(art))
+
+    def test_lane_row_consistency(self, gate):
+        art = _v5()
+        art["adaptation"]["lanes"][0]["dw_norm"] = -0.1
+        assert any("dw_norm" in e for e in gate.check(art))
+        art = _v5()
+        art["adaptation"]["lanes"].append(
+            dict(art["adaptation"]["lanes"][0]))
+        assert any("duplicate lane" in e for e in gate.check(art))
+        art = _v5()
+        art["adaptation"]["lanes"][0]["n_updates"] = 0
+        art["adaptation"]["n_updates"] = 3
+        assert any("only lanes that updated" in e for e in gate.check(art))
+        art = _v5()
+        del art["adaptation"]["lanes"][1]["dw_norm"]
+        assert any("lanes[1] missing" in e for e in gate.check(art))
+
+    def test_accuracy_split_ranges(self, gate):
+        art = _v5()
+        art["adaptation"]["accuracy_post"] = 1.5
+        assert any("accuracy_post out of range" in e
+                   for e in gate.check(art))
+        # None is legal (too few streams for a split)
+        art = _v5()
+        art["adaptation"]["accuracy_pre"] = None
+        assert gate.check(art) == []
 
 
 class TestLedgers:
@@ -276,7 +368,8 @@ class TestCli:
              str(p), *flags], capture_output=True, text=True, timeout=120)
 
     def test_cli_ok_lines(self, tmp_path):
-        for art, note in ((_v4(), "registry entries"), (_v3(), "v3"),
+        for art, note in ((_v5(), "adapting (surrogate): 7 updates"),
+                          (_v4(), "registry entries"), (_v3(), "v3"),
                           (_v2(), "v2")):
             proc = self._run(tmp_path, art, "--streams", "3")
             assert proc.returncode == 0, proc.stderr

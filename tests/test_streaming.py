@@ -706,7 +706,7 @@ class TestPacedServing:
         engine.serve(src, 2, seed=0)
         report = engine.serve(src, 2, seed=0, paced=True)
         art = report.to_artifact()
-        assert art["schema"] == STATS_SCHEMA == "p2m-stream-serving/v4"
+        assert art["schema"] == STATS_SCHEMA == "p2m-stream-serving/v5"
         assert css.check(art, 2, paced=True, max_miss_rate=0.0) == []
         ddl = art["deadlines"]
         assert ddl["n_misses"] == 0 and ddl["miss_rate"] == 0.0

@@ -1,0 +1,204 @@
+#!/usr/bin/env python3
+"""A/B comparison of serving accuracy from v4+ serving-stats artifacts.
+
+Answers "is variant B actually better than variant A, or is the gap
+noise?" for the two comparisons the serving stack produces:
+
+  * **two artifacts** (pre/post-adaptation, or the same stream set
+    served under two deployments): streams are PAIRED by ``stream_id``
+    (labels must agree pair-by-pair — same seed ⇒ same replayed
+    streams), and the verdict comes from the exact two-sided binomial
+    **sign test** on the discordant pairs plus a seeded **paired
+    bootstrap** CI on the accuracy gap;
+  * **one artifact, two registry entries** (``--entries A B``): the
+    per-entry accuracy rows cover DIFFERENT streams, so the test is the
+    unpaired analogue — a seeded **permutation test** on the accuracy
+    gap plus an unpaired bootstrap CI.
+
+Either way the last line is the machine-greppable verdict::
+
+    verdict: B vs A dacc=+0.250 ci95=[+0.063,+0.438] p=0.0213 n=32 — SIGNIFICANT (alpha=0.05)
+
+Exit codes: 0 = comparison ran (significant or not), 2 = bad input
+(unknown schema, no overlapping streams, label mismatch, unknown entry).
+
+    python tools/ab_compare.py frozen.json adapted.json
+    python tools/ab_compare.py mixed.json --entries nullified basic
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import random
+import sys
+
+MIN_VERSION = 4
+BOOT = 2000
+
+
+def schema_version(art: dict) -> int:
+    s = str(art.get("schema") or "")
+    prefix = "p2m-stream-serving/v"
+    if not s.startswith(prefix):
+        raise ValueError(f"not a serving-stats artifact (schema={s!r})")
+    v = int(s[len(prefix):])
+    if v < MIN_VERSION:
+        raise ValueError(
+            f"schema v{v} predates per-entry stream rows — ab_compare "
+            f"needs v{MIN_VERSION}+")
+    return v
+
+
+def stream_rows(art: dict, entry: str | None = None) -> dict[int, dict]:
+    """stream_id -> row, for labeled streams (optionally one registry
+    entry's streams only)."""
+    rows = {}
+    for row in art.get("streams") or []:
+        if row.get("label") is None or row["label"] < 0:
+            continue
+        if entry is not None and row.get("entry") != entry:
+            continue
+        rows[int(row["stream_id"])] = row
+    if entry is not None and not rows:
+        names = sorted({r.get("entry") for r in art.get("streams") or []})
+        raise ValueError(f"no labeled streams for entry {entry!r} "
+                         f"(entries present: {names})")
+    return rows
+
+
+def sign_test(n01: int, n10: int) -> float:
+    """Exact two-sided binomial sign test on the discordant pairs:
+    ``n01`` = A correct / B wrong, ``n10`` = A wrong / B correct. Under
+    H0 each discordant pair is a fair coin."""
+    n = n01 + n10
+    if n == 0:
+        return 1.0
+    k = min(n01, n10)
+    tail = sum(math.comb(n, i) for i in range(k + 1)) / 2.0 ** n
+    return min(1.0, 2.0 * tail)
+
+
+def paired_compare(rows_a: dict[int, dict], rows_b: dict[int, dict],
+                   *, boot: int = BOOT, seed: int = 0) -> dict:
+    """Pair by stream_id; sign test + paired bootstrap CI on the gap."""
+    ids = sorted(set(rows_a) & set(rows_b))
+    if not ids:
+        raise ValueError("no overlapping labeled stream_ids — the two "
+                         "artifacts serve disjoint streams")
+    bad = [i for i in ids if rows_a[i]["label"] != rows_b[i]["label"]]
+    if bad:
+        raise ValueError(
+            f"stream_ids {bad[:5]} carry different labels in the two "
+            f"artifacts — these are not the same replayed streams "
+            f"(different seed or source?)")
+    pairs = [(bool(rows_a[i]["correct"]), bool(rows_b[i]["correct"]))
+             for i in ids]
+    acc_a = sum(a for a, _ in pairs) / len(pairs)
+    acc_b = sum(b for _, b in pairs) / len(pairs)
+    n01 = sum(1 for a, b in pairs if a and not b)
+    n10 = sum(1 for a, b in pairs if b and not a)
+    p = sign_test(n01, n10)
+    rng = random.Random(seed)
+    deltas = []
+    for _ in range(boot):
+        sample = [pairs[rng.randrange(len(pairs))] for _ in pairs]
+        deltas.append(sum(b for _, b in sample) / len(sample)
+                      - sum(a for a, _ in sample) / len(sample))
+    deltas.sort()
+    lo = deltas[int(0.025 * (boot - 1))]
+    hi = deltas[int(0.975 * (boot - 1))]
+    return {"mode": "paired", "n": len(pairs), "acc_a": acc_a,
+            "acc_b": acc_b, "delta": acc_b - acc_a, "ci": (lo, hi),
+            "p": p, "n01": n01, "n10": n10}
+
+
+def unpaired_compare(rows_a: dict[int, dict], rows_b: dict[int, dict],
+                     *, boot: int = BOOT, seed: int = 0) -> dict:
+    """Different stream sets (entry-vs-entry inside one artifact):
+    permutation test on the accuracy gap + unpaired bootstrap CI."""
+    xs = [bool(r["correct"]) for r in rows_a.values()]
+    ys = [bool(r["correct"]) for r in rows_b.values()]
+    if not xs or not ys:
+        raise ValueError("one side has no labeled streams")
+    acc_a, acc_b = sum(xs) / len(xs), sum(ys) / len(ys)
+    delta = acc_b - acc_a
+    rng = random.Random(seed)
+    pooled = xs + ys
+    hits = 0
+    for _ in range(boot):
+        rng.shuffle(pooled)
+        d = (sum(pooled[len(xs):]) / len(ys)
+             - sum(pooled[:len(xs)]) / len(xs))
+        if abs(d) >= abs(delta) - 1e-12:
+            hits += 1
+    p = (hits + 1) / (boot + 1)
+    deltas = []
+    for _ in range(boot):
+        sa = [xs[rng.randrange(len(xs))] for _ in xs]
+        sb = [ys[rng.randrange(len(ys))] for _ in ys]
+        deltas.append(sum(sb) / len(sb) - sum(sa) / len(sa))
+    deltas.sort()
+    lo = deltas[int(0.025 * (boot - 1))]
+    hi = deltas[int(0.975 * (boot - 1))]
+    return {"mode": "unpaired", "n": len(xs) + len(ys), "acc_a": acc_a,
+            "acc_b": acc_b, "delta": delta, "ci": (lo, hi), "p": p}
+
+
+def verdict_line(res: dict, name_a: str, name_b: str,
+                 alpha: float) -> str:
+    sig = "SIGNIFICANT" if res["p"] < alpha else "NOT SIGNIFICANT"
+    lo, hi = res["ci"]
+    return (f"verdict: {name_b} vs {name_a} dacc={res['delta']:+.3f} "
+            f"ci95=[{lo:+.3f},{hi:+.3f}] p={res['p']:.4f} n={res['n']} "
+            f"— {sig} (alpha={alpha:g})")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(
+        description="paired/unpaired A/B accuracy comparison over "
+                    "serving-stats artifacts")
+    ap.add_argument("artifact_a", help="serving artifact A (baseline)")
+    ap.add_argument("artifact_b", nargs="?", default=None,
+                    help="serving artifact B; omitted with --entries")
+    ap.add_argument("--entries", nargs=2, metavar=("A", "B"), default=None,
+                    help="compare two registry entries inside ONE "
+                         "artifact (unpaired)")
+    ap.add_argument("--alpha", type=float, default=0.05)
+    ap.add_argument("--bootstrap", type=int, default=BOOT,
+                    help="bootstrap/permutation resamples")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    if (args.artifact_b is None) == (args.entries is None):
+        print("ab_compare: pass either TWO artifacts or ONE artifact "
+              "with --entries A B", file=sys.stderr)
+        return 2
+    try:
+        art_a = json.loads(open(args.artifact_a).read())
+        schema_version(art_a)
+        if args.entries is not None:
+            ea, eb = args.entries
+            res = unpaired_compare(stream_rows(art_a, ea),
+                                   stream_rows(art_a, eb),
+                                   boot=args.bootstrap, seed=args.seed)
+            name_a, name_b = f"entry:{ea}", f"entry:{eb}"
+        else:
+            art_b = json.loads(open(args.artifact_b).read())
+            schema_version(art_b)
+            res = paired_compare(stream_rows(art_a), stream_rows(art_b),
+                                 boot=args.bootstrap, seed=args.seed)
+            name_a, name_b = args.artifact_a, args.artifact_b
+    except (OSError, ValueError, KeyError) as e:
+        print(f"ab_compare: {e}", file=sys.stderr)
+        return 2
+    print(f"ab_compare: {res['mode']} comparison, n={res['n']}: "
+          f"acc_a={res['acc_a']:.3f} acc_b={res['acc_b']:.3f}")
+    if res["mode"] == "paired":
+        print(f"ab_compare: discordant pairs: A-only-correct="
+              f"{res['n01']} B-only-correct={res['n10']} (sign test)")
+    print(verdict_line(res, name_a, name_b, args.alpha))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,9 +1,9 @@
 #!/usr/bin/env python3
 """Assert a serving-stats artifact matches the p2m-stream-serving
-schema (docs/streaming.md), version-aware across v2/v3/v4. Stdlib only
-— the CI streaming-smoke steps run it against the artifacts
+schema (docs/streaming.md), version-aware across v2/v3/v4/v5. Stdlib
+only — the CI streaming-smoke steps run it against the artifacts
 `launch/stream.py --smoke` just emitted (unpaced, ``--paced``,
-lane-sharded, and ``--registry`` multi-variant).
+lane-sharded, ``--registry`` multi-variant, and ``--adapt``).
 
 Version history the gate understands:
 
@@ -19,6 +19,10 @@ Version history the gate understands:
   rejected), and per-stream ``entry``/``entry_uid`` binding. The
   per-entry ledger must sum to the fleet totals and every stream's
   entry must appear in the registry rows.
+* **v5** — online adaptation: the ``adaptation`` block (rule + learning
+  rates, per-lane update counts and delta norms, pre/post-accuracy
+  split). A disabled block must carry zero updates and no lane rows; an
+  enabled block's per-lane update counts must sum to the fleet total.
 
     python tools/check_stream_stats.py artifacts/stream/stream_serving_dvs128.json [--streams N]
     python tools/check_stream_stats.py --paced --max-miss-rate 1.0 paced.json
@@ -30,7 +34,7 @@ import json
 import sys
 
 SCHEMA_PREFIX = "p2m-stream-serving/v"
-VERSIONS = (2, 3, 4)
+VERSIONS = (2, 3, 4, 5)
 SCHEMA = f"{SCHEMA_PREFIX}{VERSIONS[-1]}"   # current
 
 TOP_KEYS = {"schema", "deployed", "n_streams", "capacity",
@@ -55,6 +59,10 @@ REGISTRY_KEYS = {"compat", "max_entries", "entries"}
 ENTRY_KEYS = {"name", "uid", "n_admitted", "n_finished", "n_correct",
               "n_misses", "n_events", "n_readouts", "accuracy",
               "events_per_s"}
+ADAPT_KEYS = {"enabled", "rule", "lr_w", "lr_theta", "n_updates",
+              "accuracy_pre", "accuracy_post", "lanes"}
+ADAPT_LANE_KEYS = {"lane", "n_updates", "dw_norm", "dtheta"}
+ADAPT_RULES = ("surrogate", "reward")
 
 
 def schema_version(art: dict) -> int | None:
@@ -87,6 +95,8 @@ def check(art: dict, n_streams: int | None = None, paced: bool = False,
         top |= {"registry"}
         adm_keys |= {"n_rejected"}
         stream_keys |= {"entry", "entry_uid"}
+    if v >= 5:
+        top |= {"adaptation"}
     missing = top - set(art)
     if missing:
         errs.append(f"missing top-level keys: {sorted(missing)}")
@@ -154,6 +164,8 @@ def check(art: dict, n_streams: int | None = None, paced: bool = False,
         errs += _check_sharding(art, adm)
     if v >= 4:
         errs += _check_registry(art, adm, streams, ddl)
+    if v >= 5:
+        errs += _check_adaptation(art)
     if paced and not art.get("paced"):
         errs.append("--paced: artifact is not a paced run")
     if LATENCY_KEYS - set(art.get("latency_ms", {})):
@@ -262,6 +274,60 @@ def _check_registry(art: dict, adm: dict, streams: list,
     return errs
 
 
+def _check_adaptation(art: dict) -> list[str]:
+    """v5: the adaptation block must be internally consistent — a
+    disabled engine reports zero updates, an enabled one names its rule
+    and its per-lane counts sum to the fleet total."""
+    errs = []
+    ad = art.get("adaptation", {})
+    if ADAPT_KEYS - set(ad):
+        errs.append(f"adaptation missing {sorted(ADAPT_KEYS - set(ad))}")
+        return errs
+    if not isinstance(ad["enabled"], bool):
+        errs.append(f"adaptation.enabled must be a bool, got "
+                    f"{ad['enabled']!r}")
+        return errs
+    lanes = ad["lanes"]
+    if not ad["enabled"]:
+        if ad["n_updates"] != 0 or lanes:
+            errs.append(f"disabled adaptation block carries updates: "
+                        f"n_updates={ad['n_updates']}, "
+                        f"{len(lanes)} lane rows")
+        return errs
+    if ad["rule"] not in ADAPT_RULES:
+        errs.append(f"adaptation.rule must be one of {ADAPT_RULES}, got "
+                    f"{ad['rule']!r}")
+    if ad["lr_w"] < 0 or ad["lr_theta"] < 0:
+        errs.append(f"adaptation learning rates must be >= 0: "
+                    f"lr_w={ad['lr_w']}, lr_theta={ad['lr_theta']}")
+    seen = set()
+    for i, row in enumerate(lanes):
+        miss = ADAPT_LANE_KEYS - set(row)
+        if miss:
+            errs.append(f"adaptation.lanes[{i}] missing {sorted(miss)}")
+            return errs
+        if row["lane"] in seen:
+            errs.append(f"adaptation.lanes has duplicate lane "
+                        f"{row['lane']}")
+        seen.add(row["lane"])
+        if row["n_updates"] <= 0:
+            errs.append(f"adaptation.lanes[{i}] (lane {row['lane']}) has "
+                        f"n_updates {row['n_updates']} — only lanes that "
+                        f"updated belong in the block")
+        if row["dw_norm"] < 0:
+            errs.append(f"lane {row['lane']}: dw_norm must be >= 0, got "
+                        f"{row['dw_norm']}")
+    got = sum(row["n_updates"] for row in lanes)
+    if got != ad["n_updates"]:
+        errs.append(f"per-lane update counts sum to {got} != "
+                    f"adaptation.n_updates {ad['n_updates']}")
+    for key in ("accuracy_pre", "accuracy_post"):
+        acc = ad[key]
+        if acc is not None and not 0.0 <= acc <= 1.0:
+            errs.append(f"adaptation.{key} out of range: {acc}")
+    return errs
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("path")
@@ -291,12 +357,18 @@ def main() -> int:
             f", {len(art['registry']['entries'])} registry entr"
             f"{'y' if len(art['registry']['entries']) == 1 else 'ies'}"
             if v >= 4 else "")
+        adapt_note = ""
+        if v >= 5 and art["adaptation"]["enabled"]:
+            ad = art["adaptation"]
+            adapt_note = (f", adapting ({ad['rule']}): "
+                          f"{ad['n_updates']} updates on "
+                          f"{len(ad['lanes'])} lane(s)")
         print(f"check_stream_stats: OK (v{v}) — {art['n_streams']} streams "
               f"on {devices} device(s), "
               f"readout p50={lat['readout_p50']:.2f}ms "
               f"p99={lat['readout_p99']:.2f}ms, "
               f"{art['throughput']['events_per_s']:.0f} events/s"
-              f"{per_dev}{paced_note}{entries_note}")
+              f"{per_dev}{paced_note}{entries_note}{adapt_note}")
     return 1 if errs else 0
 
 
